@@ -1,0 +1,26 @@
+"""Paper Fig 1 — Kripke time per region vs processes (roofline seconds)."""
+
+from __future__ import annotations
+
+from paper_data import profiles, write
+from repro.core.thicket import Frame
+
+
+def run() -> list:
+    rows_out = []
+    lines = ["## Fig 1 analog — Kripke per-region share vs processes\n"]
+    for exp in ("kripke-weak-dane", "kripke-weak-tioga"):
+        profs = profiles(exp)
+        lines.append(f"### {exp}\n")
+        lines.append("| ranks | step_s (roofline) | sweep_comm bytes/rank "
+                     "(max) | sends/rank (max) |")
+        lines.append("|---|---|---|---|")
+        for p in profs:
+            sc = p.regions["sweep_comm"]
+            lines.append(f"| {p.n_ranks} | {p.meta['seconds']:.3e} | "
+                         f"{sc.bytes_sent[1]} | {sc.sends[1]} |")
+            rows_out.append((f"fig1/{p.name}", p.meta["seconds"] * 1e6,
+                             f"sweep_bytes_max={sc.bytes_sent[1]}"))
+        lines.append("")
+    write("fig1_kripke_scaling.md", "\n".join(lines))
+    return rows_out

@@ -1,0 +1,24 @@
+"""Paper Fig 4 — Laghos strong scaling: per-region time vs processes."""
+
+from __future__ import annotations
+
+from paper_data import profiles, write
+
+
+def run() -> list:
+    rows = []
+    profs = profiles("laghos-strong")
+    lines = ["## Fig 4 analog — Laghos strong scaling (rs-analog config)\n",
+             "| ranks | step_s (roofline) | halo bytes/rank (max) | "
+             "timestep collectives | timestep coll bytes (max) |",
+             "|---|---|---|---|---|"]
+    for p in profs:
+        he = p.regions["halo_exchange"]
+        ts = p.regions["timestep"]
+        lines.append(f"| {p.n_ranks} | {p.meta['seconds']:.3e} | "
+                     f"{he.bytes_sent[1]} | {ts.coll} | "
+                     f"{ts.coll_bytes[1]} |")
+        rows.append((f"fig4/{p.name}", p.meta["seconds"] * 1e6,
+                     f"halo_bytes_max={he.bytes_sent[1]}"))
+    write("fig4_laghos_strong.md", "\n".join(lines))
+    return rows

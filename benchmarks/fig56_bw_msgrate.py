@@ -1,0 +1,25 @@
+"""Paper Figs 5/6 — per-process bandwidth and message rate, all three apps."""
+
+from __future__ import annotations
+
+from paper_data import profiles, write
+from repro.core.reports import bandwidth_msgrate_report
+
+
+def run() -> list:
+    profs = []
+    for exp in ("amg-weak-dane", "kripke-weak-dane", "laghos-strong",
+                "amg-weak-tioga", "kripke-weak-tioga"):
+        profs.extend(profiles(exp))
+    md = "## Fig 5/6 analog — bandwidth & message rate (roofline-time " \
+         "denominator)\n\n" + bandwidth_msgrate_report(profs)
+    write("fig56_bw_msgrate.md", md)
+    rows = []
+    for p in profs:
+        tb = sum(s.total_bytes_sent for s in p.regions.values())
+        ts = sum(s.total_sends for s in p.regions.values())
+        sec = p.meta["seconds"]
+        rows.append((f"fig56/{p.name}", sec * 1e6,
+                     f"bw={tb / max(1, p.n_ranks) / sec:.3e}B/s;"
+                     f"rate={ts / max(1, p.n_ranks) / sec:.3e}/s"))
+    return rows

@@ -1,0 +1,105 @@
+"""Deep-dive one dry-run cell: top HBM-byte and collective contributors.
+
+The §Perf hillclimb's profiling tool (no TPU: reads the compiled HLO).
+
+    PYTHONPATH=src python benchmarks/inspect_cell.py --arch xlstm-1.3b \
+        --shape train_4k [--override seq=None ...]
+"""
+
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse   # noqa: E402
+import re         # noqa: E402
+import sys        # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def top_bytes(hlo_text: str, k: int = 25) -> list:
+    from repro.core.hlo import (_INSTR_RE, _OPERANDS_RE, _shape_bytes,
+                                computation_factors, split_computations)
+    from repro.core.hlo_cost import _MEM_OPS
+    comps, entry = split_computations(hlo_text)
+    factors = computation_factors(hlo_text)
+    result_types = {}
+    rows_by_comp = {}
+    for cname, lines in comps.items():
+        rows = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                name, ts, op, rest = m.groups()
+                result_types[name] = ts
+                rows.append((name, ts, op, rest))
+        rows_by_comp[cname] = rows
+    inlined = set()
+    for rows in rows_by_comp.values():
+        for name, ts, op, rest in rows:
+            if op == "fusion":
+                for m in re.finditer(r"calls=%?([\w.\-$]+)", rest):
+                    inlined.add(m.group(1))
+            for m in re.finditer(r"to_apply=%?([\w.\-$]+)", rest):
+                inlined.add(m.group(1))
+    items = []
+    for cname, rows in rows_by_comp.items():
+        f = factors.get(cname, 1)
+        if f == 0 or cname in inlined:
+            continue
+        for name, ts, op, rest in rows:
+            base = op[:-6] if op.endswith("-start") else op
+            if base.endswith("-done") or base not in _MEM_OPS:
+                continue
+            b = _shape_bytes(ts)
+            for o in _OPERANDS_RE.findall(rest.split("),", 1)[0]):
+                if o in result_types:
+                    b += _shape_bytes(result_types[o])
+            mm = re.search(r'op_name="([^"]*)"', rest)
+            items.append((f * b, f, op, name, ts[:48],
+                          (mm.group(1) if mm else "")[-80:]))
+    items.sort(reverse=True)
+    return items[:k]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="logical=meshaxis (e.g. seq=None heads=model)")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=")
+        overrides[k] = (None if v in ("None", "none") else
+                        tuple(v.split("+")) if "+" in v else v)
+
+    from repro.launch.dryrun import lower_cell
+    rec, compiled = lower_cell(args.arch, args.shape,
+                               multi_pod=args.multi_pod,
+                               plan_overrides=overrides or None)
+    rf = rec["roofline"]
+    print(f"plan: {rec['plan']}")
+    print(f"terms: compute={rf['compute_s']:.3f}s memory="
+          f"{rf['memory_s']:.3f}s collective={rf['collective_s']:.3f}s  "
+          f"dominant={rf['dominant']}  frac={rf['roofline_fraction']:.4f}")
+    print(f"mem/device: {rec['memory']['total_bytes'] / 2**30:.2f} GiB")
+    print("\ncollectives by region (wire GiB):")
+    for k, (n, b) in sorted(rec["collectives"]["by_region"].items(),
+                            key=lambda kv: -kv[1][1]):
+        print(f"  {k:16s} n={n:4d} {b / 2**30:9.2f}")
+    print(f"\ntop {args.top} HBM-byte contributors "
+          f"(bytes x trip, factor, op, name, type, op_name tail):")
+    for it in top_bytes(compiled.as_text(), args.top):
+        print(f"  {it[0]:.3e} f={it[1]:<5d} {it[2]:10s} {it[3][:34]:34s} "
+              f"{it[4]:48s} {it[5]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Shared data for benchmark modules: run the paper's experiments once."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+from repro.benchpark.runner import run_experiment
+from repro.benchpark.spec import PAPER_EXPERIMENTS
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+@functools.lru_cache(maxsize=None)
+def profiles(exp_name: str) -> tuple:
+    spec = PAPER_EXPERIMENTS[exp_name]
+    out_dir = os.path.join(RESULTS, "profiles")
+    return tuple(run_experiment(spec, out_dir=out_dir, verbose=False))
+
+
+def write(name: str, text: str) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return path

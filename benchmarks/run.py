@@ -1,0 +1,43 @@
+# One function per paper table/figure + the assignment's roofline analysis.
+# Prints ``name,us_per_call,derived`` CSV rows; markdown artifacts land in
+# benchmarks/results/.
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    import fig1_kripke_scaling
+    import fig2_amg_levels
+    import fig3_amg_ranks
+    import fig4_laghos_strong
+    import fig56_bw_msgrate
+    import roofline
+    import table4_metrics
+
+    modules = [
+        ("table4", table4_metrics),
+        ("fig1", fig1_kripke_scaling),
+        ("fig2", fig2_amg_levels),
+        ("fig3", fig3_amg_ranks),
+        ("fig4", fig4_laghos_strong),
+        ("fig56", fig56_bw_msgrate),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        try:
+            rows = mod.run()
+        except Exception as e:  # a broken table should not hide the rest
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

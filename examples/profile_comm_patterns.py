@@ -1,0 +1,44 @@
+"""Reproduce the paper's scaling studies (Benchpark-style) and emit the
+figures as markdown + ASCII plots.
+
+    PYTHONPATH=src python examples/profile_comm_patterns.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.benchpark.runner import run_experiment
+from repro.benchpark.spec import PAPER_EXPERIMENTS
+from repro.core.reports import (ascii_scaling_plot, per_level_report,
+                                table4_metrics)
+
+
+def main() -> None:
+    profs = {}
+    for name in ("kripke-weak-dane", "amg-weak-dane", "laghos-strong"):
+        print(f"running {name} ...")
+        profs[name] = run_experiment(PAPER_EXPERIMENTS[name])
+
+    print("\n" + table4_metrics(
+        [p for ps in profs.values() for p in ps]))
+
+    print("\n" + per_level_report(profs["amg-weak-dane"],
+                                  metric="bytes_sent_max"))
+
+    ks = profs["kripke-weak-dane"]
+    xs = [p.n_ranks for p in ks]
+    ys = [p.regions["sweep_comm"].total_bytes_sent for p in ks]
+    print("\n" + ascii_scaling_plot(
+        xs, ys, title="Kripke total sweep bytes vs ranks (weak scaling)"))
+
+    ls = profs["laghos-strong"]
+    ys = [p.regions["halo_exchange"].bytes_sent[1] for p in ls]
+    print("\n" + ascii_scaling_plot(
+        [p.n_ranks for p in ls], ys,
+        title="Laghos halo bytes per rank vs ranks (strong scaling)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving example: batched prefill + decode with KV caches.
+
+Loads a reduced model, prefills a batch of prompts, then greedily decodes
+new tokens — the serving path the ``decode_*`` dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch minicpm3-4b
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models.model import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm3-4b",
+                    choices=list(registry.ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P = args.batch, args.prompt_len
+    s_max = P + args.new_tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = 0.01 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, 16, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, 16, cfg.d_model))
+
+    t0 = time.time()
+    logits, caches = model.prefill(params, batch, s_max=s_max)
+    print(f"prefill {B}x{P}: {time.time() - t0:.2f}s")
+
+    decode = jax.jit(model.decode)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    off = 16 if cfg.family == "vlm" else 0
+    t0 = time.time()
+    for t in range(args.new_tokens - 1):
+        logits, caches = decode(params, caches, tok,
+                                jnp.int32(off + P + t))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.new_tokens - 1} tokens/seq in {dt:.2f}s "
+          f"({B * (args.new_tokens - 1) / dt:.1f} tok/s total)")
+    print("sample:", gen[0].tolist())
+    assert bool(jnp.isfinite(logits).all())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Exercises the full production stack on CPU: sharded params (debug mesh),
+AdamW + cosine schedule, deterministic data, async checkpointing with
+resume, straggler monitoring.  Run:
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dataclasses import replace
+
+from repro.configs import registry
+from repro.launch.train import RunConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: olmo-family, 8 layers x d=768 + 50k vocab
+    base = registry.get("olmo-1b")
+    run = RunConfig(arch="olmo-1b", reduced=True, steps=args.steps,
+                    seq_len=256, global_batch=8, ckpt_every=100,
+                    ckpt_dir=args.ckpt_dir)
+    # widen the reduced config to ~100M via the registry-reduced override
+    registry.ARCHS["olmo-1b-100m"] = base.reduced(
+        name="olmo-1b-100m", n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=12, head_dim=64, d_ff=3072, vocab=50304)
+    run = replace(run, arch="olmo-1b-100m", reduced=False)
+
+    losses, mon = train(run)
+    n = max(1, len(losses) // 10)
+    first, last = sum(losses[:n]) / n, sum(losses[-n:]) / n
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(losses)} steps; "
+          f"{len(mon.flagged)} straggler events")
+    assert last < first, "loss should decrease on the synthetic stream"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""AMG2023 analog — multigrid solver with per-level communication regions.
+
+AMG2023 (paper §III-A) is an algebraic multigrid solver on top of hypre; its
+communication is a hierarchy of halo exchanges whose character changes with
+the multigrid level: fine levels move the most data between few neighbors,
+coarse levels involve many ranks with little data (paper Figs. 2-3 — over
+100 source ranks at MG level 6+ on 512 processes).
+
+We build the geometric analog: a 3-D 7-point Poisson V-cycle over the same
+block decomposition the paper uses.  Distributed levels coarsen by 2 while
+the per-rank block stays ≥ ``min_local``; below that the problem is gathered
+to every rank (``coarse_solve`` region — the all-ranks participation the
+paper observes at coarse levels) and solved redundantly.
+
+Regions:
+  mg_level_<k>   smoother/prolongation halo exchanges on level k (Figs. 2-3)
+  MatVecComm     residual matvec halo (hypre's MatVecComm analog, paper §III-B)
+  coarse_solve   gather + redundant coarse solve
+  reduce_norm    residual-norm reduction
+
+Weak scaling mirrors the paper: per-rank fine block fixed (default 32x32x16),
+global problem grows with ranks — note more ranks ⇒ a deeper gathered
+hierarchy, matching "runs on Dane had more levels".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.apps.stencil import (AXIS_NAMES, Decomp3D, halo_exchange,
+                                laplacian_7pt, pad_with_halo)
+from repro.core import collectives as coll, comm_region, profile_traced
+from repro.core.profiler import CommProfile
+
+
+@dataclass(frozen=True)
+class AMGConfig:
+    decomp: Decomp3D = field(default_factory=lambda: Decomp3D(2, 2, 2))
+    nx: int = 32          # per-rank fine-grid block (paper: 32x32x16)
+    ny: int = 32
+    nz: int = 16
+    n_pre: int = 2        # pre-smoothing sweeps
+    n_post: int = 2       # post-smoothing sweeps
+    n_coarse_iters: int = 8
+    omega: float = 0.8    # weighted-Jacobi damping
+    min_global: int = 8   # gather when a *global* dim would drop below this
+    n_cycles: int = 1
+    dtype: str = "float32"
+
+    @property
+    def local_shape(self) -> tuple:
+        return (self.nx, self.ny, self.nz)
+
+    @property
+    def global_shape(self) -> tuple:
+        return (self.nx * self.decomp.px, self.ny * self.decomp.py,
+                self.nz * self.decomp.pz)
+
+    def n_dist_levels(self) -> int:
+        """Distributed levels before the gathered coarse solve.
+
+        Level count depends on the *global* grid so the distributed solver
+        and the single-domain reference run identical hierarchies — and more
+        ranks (weak scaling) means more levels, as the paper observes."""
+        n, lvl = min(self.global_shape), 0
+        while n // 2 >= self.min_global:
+            n //= 2
+            lvl += 1
+        return lvl
+
+
+def _jacobi(u, f, cfg: AMGConfig, level: int, region: str):
+    """One weighted-Jacobi sweep: u += ω/6 (f - A u), A = -Δ (7-point)."""
+    with comm_region(region):
+        ghosts = halo_exchange(u, cfg.decomp)
+    up = pad_with_halo(u, ghosts)
+    au = -laplacian_7pt(up)           # A = -Δ, h = 1 at every level
+    return u + (cfg.omega / 6.0) * (f - au)
+
+
+def _residual(u, f, cfg: AMGConfig):
+    with comm_region("MatVecComm"):
+        ghosts = halo_exchange(u, cfg.decomp)
+    up = pad_with_halo(u, ghosts)
+    return f + laplacian_7pt(up)
+
+
+def _restrict(r):
+    """Full-weighting 2x coarsening (local: blocks stay rank-aligned)."""
+    s = r.shape
+    r = r.reshape(s[0] // 2, 2, s[1] // 2, 2, s[2] // 2, 2)
+    return r.mean(axis=(1, 3, 5))
+
+
+def _prolong(e):
+    """Piecewise-constant 2x refinement (local)."""
+    return jnp.repeat(jnp.repeat(jnp.repeat(e, 2, 0), 2, 1), 2, 2)
+
+
+def _gather_global(x, cfg: AMGConfig):
+    """all_gather a per-rank block into the replicated global array."""
+    dc = cfg.decomp
+    g = coll.all_gather(x, AXIS_NAMES, axis=0)     # (n_ranks, lx, ly, lz)
+    lx, ly, lz = x.shape
+    g = g.reshape(dc.px, dc.py, dc.pz, lx, ly, lz)
+    g = g.transpose(0, 3, 1, 4, 2, 5)
+    return g.reshape(dc.px * lx, dc.py * ly, dc.pz * lz)
+
+
+def _my_block(g, cfg: AMGConfig, local_shape):
+    ix = lax.axis_index("x")
+    iy = lax.axis_index("y")
+    iz = lax.axis_index("z")
+    lx, ly, lz = local_shape
+    return lax.dynamic_slice(g, (ix * lx, iy * ly, iz * lz), (lx, ly, lz))
+
+
+def _coarse_solve(f, cfg: AMGConfig):
+    """Gather the coarse problem to every rank; solve redundantly.
+
+    This is the all-ranks-involved pattern the paper measures at coarse MG
+    levels (src ranks ≈ everyone, little data).
+    """
+    with comm_region("coarse_solve"):
+        fg = _gather_global(f, cfg)
+    u = jnp.zeros_like(fg)
+    for _ in range(cfg.n_coarse_iters):
+        up = jnp.pad(u, 1)
+        au = -laplacian_7pt(up)
+        u = u + (cfg.omega / 6.0) * (fg - au)
+    return _my_block(u, cfg, f.shape)
+
+
+def v_cycle(u, f, cfg: AMGConfig, level: int = 0):
+    region = f"mg_level_{level}"
+    global_min = min(s * p for s, p in zip(u.shape, cfg.decomp.shape))
+    if global_min // 2 < cfg.min_global:
+        return _coarse_level(u, f, cfg)
+    for _ in range(cfg.n_pre):
+        u = _jacobi(u, f, cfg, level, region)
+    r = _residual(u, f, cfg)
+    f_c = _restrict(r)
+    e_c = v_cycle(jnp.zeros_like(f_c), f_c, cfg, level + 1)
+    u = u + _prolong(e_c)
+    for _ in range(cfg.n_post):
+        u = _jacobi(u, f, cfg, level, region)
+    return u
+
+
+def _coarse_level(u, f, cfg: AMGConfig):
+    r = _residual(u, f, cfg)
+    return u + _coarse_solve(r, cfg)
+
+
+def solve(cfg: AMGConfig, mesh):
+    """jit-able: run n_cycles V-cycles + residual norm.  Global arrays."""
+    spec = P(*AXIS_NAMES)
+
+    def run(f):
+        def inner(f):
+            with comm_region("main"):
+                u = jnp.zeros_like(f)
+                for _ in range(cfg.n_cycles):
+                    u = v_cycle(u, f, cfg, 0)
+                r = _residual(u, f, cfg)
+                with comm_region("reduce_norm"):
+                    rn = jnp.sqrt(coll.psum((r * r).sum(), AXIS_NAMES))
+                return u, rn
+        return jax.shard_map(inner, mesh=mesh, in_specs=spec,
+                             out_specs=(spec, P()))(f)
+    return run
+
+
+def reference_solve(cfg: AMGConfig):
+    """Single-domain oracle (identical arithmetic on the global grid)."""
+    single = replace(cfg, decomp=Decomp3D(1, 1, 1),
+                     nx=cfg.nx * cfg.decomp.px,
+                     ny=cfg.ny * cfg.decomp.py,
+                     nz=cfg.nz * cfg.decomp.pz)
+    mesh = single.decomp.make_mesh()
+    return solve(single, mesh), single
+
+
+def make_rhs(cfg: AMGConfig):
+    """Deterministic smooth RHS on the global grid."""
+    nx = cfg.nx * cfg.decomp.px
+    ny = cfg.ny * cfg.decomp.py
+    nz = cfg.nz * cfg.decomp.pz
+    x, y, z = jnp.meshgrid(jnp.arange(nx), jnp.arange(ny), jnp.arange(nz),
+                           indexing="ij")
+    f = (jnp.sin(2 * jnp.pi * x / nx) * jnp.sin(2 * jnp.pi * y / ny)
+         * jnp.sin(2 * jnp.pi * z / nz))
+    return f.astype(cfg.dtype)
+
+
+def profile(cfg: AMGConfig, *, name: str = "amg",
+            meta: dict | None = None) -> CommProfile:
+    mesh = cfg.decomp.make_mesh(abstract=True)
+    f = jax.ShapeDtypeStruct(
+        (cfg.nx * cfg.decomp.px, cfg.ny * cfg.decomp.py,
+         cfg.nz * cfg.decomp.pz), cfg.dtype)
+    with cfg.decomp.topology():
+        return profile_traced(solve(cfg, mesh), f, name=name,
+                              meta=dict(meta or {}, app="amg",
+                                        decomp=cfg.decomp.shape))

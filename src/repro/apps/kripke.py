@@ -1,0 +1,285 @@
+"""Kripke analog — deterministic Sn transport sweep (KBA wavefront).
+
+Kripke (paper §III-A) decomposes a 3-D spatial grid over ranks; the *sweep*
+region propagates angular flux in dependency order across subdomains: each
+wavefront stage, ranks on the active diagonal receive upwind faces, solve
+their local block, and send downwind faces.  Its communication is highly
+localized (3 partners for corner ranks, 6 in the interior — paper §IV-A) and
+each communication phase carries one message per (direction-set × group-set)
+pair (the paper observes 36).
+
+TPU adaptation (DESIGN.md §2): MPI Kripke posts one Isend per (dirset,
+groupset) face; on TPU the native choice is to *fuse* them into a single
+ppermute per axis.  ``fuse_messages`` selects between the paper-faithful
+message granularity (False — reproduces the 36-messages finding and lets the
+profiler quantify aggregation) and the TPU-native fused default (True).
+
+The local solve is the diamond-difference recurrence
+``psi_i = (q_i + w * psi_{i-1}) / (sigma_t + w)`` applied along x, then y,
+then z (operator-split).  It is a *linear* recurrence, so blocks chain
+exactly across ranks through the exchanged faces — the distributed sweep is
+bit-comparable to the single-domain reference.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.apps.stencil import AXIS_NAMES, Decomp3D, bwd_perm, fwd_perm
+
+# Sweep order interleaves opposing corners so that even a 2-octant run
+# exercises both directions of an axis (paper §IV-A: interior ranks have 6
+# communication partners, corner ranks 3).
+OCTANT_ORDER = (7, 0, 6, 1, 5, 2, 4, 3)
+from repro.core import collectives as coll, comm_region, profile_traced
+from repro.core.profiler import CommProfile
+
+
+@dataclass(frozen=True)
+class KripkeConfig:
+    """Weak-scaling config: zones are per-rank (paper smallest 16x32x32)."""
+
+    decomp: Decomp3D = field(default_factory=lambda: Decomp3D(2, 2, 2))
+    nx: int = 16          # per-rank zones
+    ny: int = 32
+    nz: int = 32
+    n_dirsets: int = 6
+    n_groupsets: int = 6   # 6 x 6 = 36 messages per phase (paper §IV-A)
+    dirs_per_set: int = 4
+    groups_per_set: int = 4
+    sigma_t: float = 1.0
+    w: tuple = (0.4, 0.35, 0.25)   # directional weights (wx, wy, wz)
+    n_octants: int = 1             # sweep corners to run (1..8)
+    fuse_messages: bool = True     # TPU-native message aggregation
+    dtype: str = "float32"
+
+    @property
+    def zones(self) -> tuple:
+        return (self.nx, self.ny, self.nz)
+
+    @property
+    def angular(self) -> tuple:
+        return (self.n_dirsets, self.n_groupsets,
+                self.dirs_per_set, self.groups_per_set)
+
+
+def _octant_signs(octant: int) -> tuple:
+    return (1 if octant & 1 else -1,
+            1 if octant & 2 else -1,
+            1 if octant & 4 else -1)
+
+
+def _axis_recurrence(src, inflow, axis: int, w: float, sig: float,
+                     sign: int):
+    """psi_i = a * psi_{i-1} + b_i with a = w/(sig+w), b = src/(sig+w);
+    descending directions sweep the axis in reverse.  ``inflow`` enters at
+    the upwind end."""
+    a = w / (sig + w)
+    b = src / (sig + w)
+    A = jnp.full_like(src, a)
+
+    def combine(c1, c2):
+        A1, B1 = c1
+        A2, B2 = c2
+        return A1 * A2, A2 * B1 + B2
+
+    Acum, Bcum = lax.associative_scan(combine, (A, b), axis=axis,
+                                      reverse=(sign < 0))
+    return Acum * inflow + Bcum
+
+
+def _local_sweep(q, in_x, in_y, in_z, cfg: KripkeConfig, signs=(1, 1, 1)):
+    """Operator-split diamond-difference solve of one local block.
+
+    q, psi: (nds, ngs, nx, ny, nz, d, g).  in_*: upwind ghost faces with the
+    swept dim of size 1.  Returns (psi, out_x, out_y, out_z); out faces are
+    the downwind faces for the given sweep direction signs.
+    """
+    sig = cfg.sigma_t
+    sx, sy, sz = signs
+    psi = _axis_recurrence(q, in_x, 2, cfg.w[0], sig, sx)
+    psi = _axis_recurrence(psi, in_y, 3, cfg.w[1], sig, sy)
+    psi = _axis_recurrence(psi, in_z, 4, cfg.w[2], sig, sz)
+
+    def out_face(p, axis, sign):
+        idx = [slice(None)] * p.ndim
+        idx[axis] = slice(-1, None) if sign > 0 else slice(0, 1)
+        return p[tuple(idx)]
+
+    return (psi, out_face(psi, 2, sx), out_face(psi, 3, sy),
+            out_face(psi, 4, sz))
+
+
+def _active_pairs(dc: Decomp3D, stage: int, axis: int, signs) -> list:
+    """Global-rank (src, dst) pairs logically active at one pass stage.
+
+    MPI Kripke only posts sends from ranks on the active plane of the
+    current axis pass; the profiler records these while the TPU executes
+    the full (dense) permute.
+    """
+    pairs = []
+    sizes = dc.shape
+    for i in range(sizes[0]):
+        for j in range(sizes[1]):
+            for k in range(sizes[2]):
+                c = (i, j, k)
+                t = (sizes[axis] - 1 - c[axis]) if signs[axis] < 0 \
+                    else c[axis]
+                if t != stage:
+                    continue
+                nc = list(c)
+                nc[axis] += 1 if signs[axis] > 0 else -1
+                if not (0 <= nc[axis] < sizes[axis]):
+                    continue
+                rank = (c[0] * sizes[1] + c[1]) * sizes[2] + c[2]
+                nrank = (nc[0] * sizes[1] + nc[1]) * sizes[2] + nc[2]
+                pairs.append((rank, nrank))
+    return pairs
+
+
+def _send_downwind(face, axis: int, cfg: KripkeConfig, stage: int, signs):
+    """One communication phase along the sweep direction of one axis:
+    fused (TPU-native) or per-(ds,gs) messages (paper-faithful 36/phase)."""
+    dc = cfg.decomp
+    n = dc.shape[axis]
+    axis_name = AXIS_NAMES[axis]
+    perm = fwd_perm(n) if signs[axis] > 0 else bwd_perm(n)
+    rec = _active_pairs(dc, stage, axis, signs)
+    if cfg.fuse_messages:
+        return coll.ppermute(face, axis_name, perm, record_pairs=rec)
+    nds, ngs = cfg.n_dirsets, cfg.n_groupsets
+    cols = []
+    for ds in range(nds):
+        rows = []
+        for gs in range(ngs):
+            msg = coll.ppermute(face[ds:ds + 1, gs:gs + 1], axis_name,
+                                perm, record_pairs=rec)
+            rows.append(msg)
+        cols.append(jnp.concatenate(rows, axis=1))
+    return jnp.concatenate(cols, axis=0)
+
+
+def sweep_octant(q, cfg: KripkeConfig, octant: int = 7):
+    """One sweep of the given octant.  Runs inside shard_map.
+
+    Octant bits select the sweep direction per axis (bit set = ascending);
+    octant 7 is the (+,+,+) corner sweep.  The operator-split recurrence is
+    swept as three sequential axis passes; within each pass, ranks along the
+    axis form a pipeline chained by downwind face exchanges — the per-axis
+    wavefront of the KBA schedule (exactly matching the single-domain
+    reference, block boundaries included).
+    """
+    dc = cfg.decomp
+    signs = _octant_signs(octant)
+    coords = {0: lax.axis_index("x"), 1: lax.axis_index("y"),
+              2: lax.axis_index("z")}
+
+    psi = q
+    for axis in (0, 1, 2):
+        n = dc.shape[axis]
+        t = coords[axis] if signs[axis] > 0 \
+            else n - 1 - coords[axis]
+        fshape = list(psi.shape)
+        fshape[2 + axis] = 1
+        in_face = jnp.zeros(tuple(fshape), psi.dtype)
+        new_psi = psi
+        for stage in range(n):
+            active = (t == stage)
+            with comm_region("solve"):
+                cand, out_face = _axis_solve(psi, in_face, axis, cfg, signs)
+            new_psi = jnp.where(active, cand, new_psi)
+            out_face = jnp.where(active, out_face,
+                                 jnp.zeros_like(out_face))
+            if stage == n - 1:
+                break
+            with comm_region("sweep_comm"):
+                g = _send_downwind(out_face, axis, cfg, stage, signs)
+            # a valid face arrives exactly once (senders are masked to zero
+            # at all other stages), so accumulation preserves it
+            in_face = in_face + g
+        psi = new_psi
+    return psi
+
+
+def _axis_solve(src, inflow, axis: int, cfg: KripkeConfig, signs):
+    """One axis of the operator-split recurrence + its downwind face."""
+    sign = signs[axis]
+    psi = _axis_recurrence(src, inflow, 2 + axis, cfg.w[axis],
+                           cfg.sigma_t, sign)
+    idx = [slice(None)] * psi.ndim
+    idx[2 + axis] = slice(-1, None) if sign > 0 else slice(0, 1)
+    return psi, psi[tuple(idx)]
+
+
+def make_source(cfg: KripkeConfig, *, global_shape: bool = False):
+    """Deterministic smooth source term (per-rank local shape by default)."""
+    nds, ngs, d, g = cfg.angular
+    if global_shape:
+        nx = cfg.nx * cfg.decomp.px
+        ny = cfg.ny * cfg.decomp.py
+        nz = cfg.nz * cfg.decomp.pz
+    else:
+        nx, ny, nz = cfg.zones
+    shape = (nds, ngs, nx, ny, nz, d, g)
+    idx = [jnp.arange(s, dtype=cfg.dtype) for s in shape]
+    grids = jnp.meshgrid(*idx, indexing="ij")
+    q = 1.0
+    for i, gr in enumerate(grids):
+        q = q + jnp.sin(0.1 * (i + 1) * gr)
+    return q.astype(cfg.dtype)
+
+
+def distributed_sweep(cfg: KripkeConfig, mesh):
+    """jit-able global-array sweep over the given mesh."""
+    spec = P(None, None, *AXIS_NAMES, None, None)
+
+    def run(q):
+        def inner(q):
+            with comm_region("main"):
+                out = jnp.zeros_like(q)
+                for o in range(cfg.n_octants):
+                    out = out + sweep_octant(q, cfg, OCTANT_ORDER[o])
+                return out
+        return jax.shard_map(inner, mesh=mesh, in_specs=spec,
+                             out_specs=spec)(q)
+    return run
+
+
+def reference_sweep(cfg: KripkeConfig):
+    """Single-domain oracle: same recurrence on the undecomposed grid."""
+    single = replace(cfg, decomp=Decomp3D(1, 1, 1))
+
+    def run(q):
+        shape = q.shape
+        in_x = jnp.zeros((shape[0], shape[1], 1) + shape[3:], q.dtype)
+        in_y = jnp.zeros(shape[:3] + (1,) + shape[4:], q.dtype)
+        in_z = jnp.zeros(shape[:4] + (1,) + shape[5:], q.dtype)
+        out = jnp.zeros_like(q)
+        for o in range(cfg.n_octants):
+            psi, *_ = _local_sweep(q, in_x, in_y, in_z, single,
+                                   _octant_signs(OCTANT_ORDER[o]))
+            out = out + psi
+        return out
+    return run
+
+
+def profile(cfg: KripkeConfig, *, name: str = "kripke",
+            meta: dict | None = None) -> CommProfile:
+    """Communication profile of one sweep at cfg's scale (trace-only)."""
+    mesh = cfg.decomp.make_mesh(abstract=True)
+    q = jax.ShapeDtypeStruct(
+        (cfg.n_dirsets, cfg.n_groupsets,
+         cfg.nx * cfg.decomp.px, cfg.ny * cfg.decomp.py,
+         cfg.nz * cfg.decomp.pz,
+         cfg.dirs_per_set, cfg.groups_per_set), cfg.dtype)
+    with cfg.decomp.topology():
+        return profile_traced(distributed_sweep(cfg, mesh), q,
+                              name=name,
+                              meta=dict(meta or {}, app="kripke",
+                                        decomp=cfg.decomp.shape))

@@ -1,0 +1,71 @@
+"""Scaling-study runner: materialize an ExperimentSpec into CommProfiles.
+
+Profiles are trace-only (AbstractMesh), so paper-scale rank counts (64..512)
+run on this single-CPU container.  Each profile gets a roofline step-seconds
+estimate from the app's arithmetic (compute+memory+wire over the system
+model) so the §V bandwidth / message-rate analysis has a time denominator.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+from repro.benchpark.spec import ExperimentSpec
+from repro.core.profiler import CommProfile
+
+# same system model the dry-run uses (TPU v5e)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _flops_estimate(app: str, cfg) -> float:
+    """Per-rank per-step useful FLOPs (napkin model; see benchmarks/)."""
+    if app == "kripke":
+        zones = cfg.nx * cfg.ny * cfg.nz
+        ang = (cfg.n_dirsets * cfg.n_groupsets * cfg.dirs_per_set
+               * cfg.groups_per_set)
+        return 12.0 * zones * ang * cfg.n_octants
+    if app == "amg":
+        fine = cfg.nx * cfg.ny * cfg.nz
+        sweeps = cfg.n_pre + cfg.n_post + 2
+        return 8.0 * fine * sweeps * 1.15 * cfg.n_cycles   # + coarser levels
+    if app == "laghos":
+        lx, ly = cfg.local_shape
+        return 40.0 * lx * ly * cfg.n_steps
+    raise ValueError(app)
+
+
+def _roofline_seconds(app: str, cfg, profile: CommProfile) -> float:
+    flops = _flops_estimate(app, cfg)
+    mem = flops * 2.0    # ~2 bytes/flop for stencil codes (bandwidth-bound)
+    wire = max((st.bytes_sent[1] + st.coll_bytes[1])
+               for st in profile.regions.values()) if profile.regions else 0
+    return max(flops / PEAK_FLOPS, mem / HBM_BW, wire / LINK_BW)
+
+
+def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
+                   verbose: bool = True) -> list:
+    from repro.apps import amg, kripke, laghos
+    profile_fns = {"kripke": kripke.profile, "amg": amg.profile,
+                   "laghos": laghos.profile}
+    profiles = []
+    for pt, cfg in spec.configs():
+        prof = profile_fns[spec.app](
+            cfg, name=f"{spec.name}-{pt.n_ranks}",
+            meta={"app": spec.app, "scaling": spec.scaling,
+                  "experiment": spec.name, "decomp": list(pt.decomp),
+                  "system": spec.system})
+        prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
+        profiles.append(prof)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            prof.save(os.path.join(out_dir,
+                                   f"{spec.name}-{pt.n_ranks:05d}.json"))
+        if verbose:
+            tot = sum(s.total_bytes_sent for s in prof.regions.values())
+            print(f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
+                  f"{len(prof.regions)} regions, {tot:.3e} bytes sent")
+    return profiles

@@ -1,0 +1,101 @@
+"""Benchpark analog — reproducible experiment specifications.
+
+Benchpark (paper §II) encodes benchmark × system × scaling configurations so
+experiments are reproducible across machines.  Here an ExperimentSpec is a
+declarative description of a scaling study over one of the three apps; the
+runner materializes each point as a config, profiles it (trace-only — no
+devices needed thanks to AbstractMesh), and stores CommProfile JSONs.
+
+The paper's own experiments (Table III) ship as ``PAPER_EXPERIMENTS``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.apps.stencil import Decomp3D
+
+
+@dataclass(frozen=True)
+class ScalePoint:
+    decomp: tuple                  # (px, py, pz)
+    label: str = ""
+
+    @property
+    def n_ranks(self) -> int:
+        px, py, pz = self.decomp
+        return px * py * pz
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    name: str
+    app: str                       # kripke | amg | laghos
+    scaling: str                   # weak | strong
+    points: tuple                  # ScalePoints
+    app_params: dict = field(default_factory=dict)
+    system: str = "tpu-v5e-pod"
+    # roofline seconds per step are attached by the runner so bandwidth /
+    # message-rate metrics (paper §V) can be derived
+
+    def configs(self):
+        from repro.apps.amg import AMGConfig
+        from repro.apps.kripke import KripkeConfig
+        from repro.apps.laghos import LaghosConfig
+        out = []
+        for pt in self.points:
+            dc = Decomp3D(*pt.decomp)
+            if self.app == "kripke":
+                cfg = KripkeConfig(decomp=dc, **self.app_params)
+            elif self.app == "amg":
+                cfg = AMGConfig(decomp=dc, **self.app_params)
+            elif self.app == "laghos":
+                params = dict(self.app_params)
+                if self.scaling == "strong":
+                    pass   # global size fixed in app_params
+                cfg = LaghosConfig(decomp=dc, **params)
+            else:
+                raise ValueError(self.app)
+            out.append((pt, cfg))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The paper's experiments (Table III), adapted: same process counts and
+# decompositions as the Dane rows; per-rank problem sizes as published
+# (Kripke 16x32x32, AMG 32x32x16).
+# ---------------------------------------------------------------------------
+
+_DANE_POINTS = (
+    ScalePoint((4, 4, 4)), ScalePoint((8, 4, 4)),
+    ScalePoint((8, 8, 4)), ScalePoint((8, 8, 8)),
+)
+_TIOGA_POINTS = (
+    ScalePoint((2, 2, 2)), ScalePoint((4, 2, 2)),
+    ScalePoint((4, 4, 2)), ScalePoint((4, 4, 4)),
+)
+
+PAPER_EXPERIMENTS = {
+    "kripke-weak-dane": ExperimentSpec(
+        name="kripke-weak-dane", app="kripke", scaling="weak",
+        points=_DANE_POINTS,
+        app_params=dict(nx=16, ny=32, nz=32, n_octants=2,
+                        fuse_messages=False)),
+    "kripke-weak-tioga": ExperimentSpec(
+        name="kripke-weak-tioga", app="kripke", scaling="weak",
+        points=_TIOGA_POINTS,
+        app_params=dict(nx=16, ny=32, nz=32, n_octants=2,
+                        fuse_messages=False)),
+    "amg-weak-dane": ExperimentSpec(
+        name="amg-weak-dane", app="amg", scaling="weak",
+        points=_DANE_POINTS, app_params=dict(nx=32, ny=32, nz=16)),
+    "amg-weak-tioga": ExperimentSpec(
+        name="amg-weak-tioga", app="amg", scaling="weak",
+        points=_TIOGA_POINTS, app_params=dict(nx=32, ny=32, nz=16)),
+    "laghos-strong": ExperimentSpec(
+        name="laghos-strong", app="laghos", scaling="strong",
+        points=(ScalePoint((4, 4, 1)), ScalePoint((8, 4, 1)),
+                ScalePoint((8, 8, 1)), ScalePoint((16, 8, 1))),
+        app_params=dict(nx=512, ny=512, n_steps=2)),
+}

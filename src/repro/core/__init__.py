@@ -1,0 +1,24 @@
+"""Core: communication-region profiling (the paper's contribution, in JAX).
+
+Public API:
+  comm_region(name)          — mark a communication region (Caliper analog)
+  recording()                — install a profiling recorder for a trace
+  profile_traced(fn, *args)  — abstract-trace fn and return its CommProfile
+  collectives                — instrumented shard_map collectives
+  parse_hlo_collectives*     — compiled-HLO communication extraction
+  Frame / reports            — Thicket-style analysis & paper-table emitters
+"""
+
+from repro.core.regions import (  # noqa: F401
+    comm_region, recording, current_region, COMM_REGION_SCOPE_PREFIX,
+)
+from repro.core.profiler import (  # noqa: F401
+    CommPatternProfiler, CommProfile, RegionStats, profile_traced,
+)
+from repro.core.hlo import (  # noqa: F401
+    CollectiveOp, CollectiveSummary, parse_hlo_collectives,
+    parse_hlo_collectives_with_loops, summarize_collectives,
+)
+from repro.core import collectives  # noqa: F401
+from repro.core.thicket import Frame, add_rate_metrics  # noqa: F401
+from repro.core import reports  # noqa: F401

@@ -1,0 +1,228 @@
+"""Instrumented collectives — the PMPI/GOTCHA interception analog for JAX.
+
+The paper intercepts MPI calls (via PMPI or GOTCHA) and inspects their
+parameters to record per-region statistics.  In SPMD JAX the analogous calls
+are the ``jax.lax`` collectives used inside ``shard_map``.  This module wraps
+them: each wrapper forwards to the real primitive unchanged, and — if a
+profiling recorder is active (``repro.core.regions.recording``) — reports the
+*static* communication structure of the call to the innermost region.
+
+Because JAX communication is fully determined at trace time (shapes, dtypes,
+permutations, axis sizes are all static), the recorded statistics are exact.
+``min``/``max`` over ranks in the profiler therefore reproduce exactly what
+Caliper aggregates empirically at runtime.
+
+Byte-accounting conventions (documented, used consistently by the profiler
+and the HLO analyzer):
+
+  ppermute        point-to-point: each (src, dst) pair moves ``nbytes``.
+  all_gather      each rank sends its shard to the group: ``(n-1) * nbytes``
+                  sent and received per rank (ring-equivalent total traffic).
+  psum            ring all-reduce: ``2 * (n-1)/n * nbytes`` per rank.
+  reduce_scatter  ``(n-1)/n * nbytes`` per rank.
+  all_to_all      ``(n-1)/n * nbytes`` per rank.
+
+Following Caliper's schema (paper Table I), point-to-point-like patterns
+(ppermute) populate Sends/Recvs/Dest-ranks/Src-ranks/Bytes; true collectives
+increment the region's collective-call count ("Coll") and a collective-bytes
+extension field.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import regions as _regions
+from repro.core.topology import active_topology
+
+
+def _nbytes(x) -> int:
+    shape = jnp.shape(x)
+    dtype = jnp.result_type(x)
+    return math.prod(shape) * dtype.itemsize
+
+
+def _axis_size(axis_name) -> int:
+    topo = active_topology()
+    if topo is not None:
+        try:
+            return topo.axis_size(axis_name)
+        except ValueError:
+            pass
+    if isinstance(axis_name, (tuple, list)):
+        return math.prod(lax.axis_size(a) for a in axis_name)
+    return lax.axis_size(axis_name)
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def _record(kind: str, *, axis_name, sends, recvs, dests, srcs,
+            bsent, brecv, is_collective: int) -> None:
+    if _regions.active_recorder() is None:
+        return
+    name = _regions.current_region() or "<unannotated>"
+    _regions.record_event(_regions.RegionEvent(
+        region=name,
+        region_path=_regions.current_region_path(),
+        kind=kind,
+        sends_per_rank=sends,
+        recvs_per_rank=recvs,
+        dest_ranks=dests,
+        src_ranks=srcs,
+        bytes_sent=bsent,
+        bytes_recv=brecv,
+        is_collective=is_collective,
+        axis_name=str(axis_name),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Point-to-point-like pattern: ppermute (TPU-native halo exchange primitive)
+# ---------------------------------------------------------------------------
+
+def ppermute(x, axis_name, perm: Sequence[tuple],
+             record_pairs: Sequence[tuple] | None = None):
+    """Instrumented ``lax.ppermute``.
+
+    ``perm`` is a sequence of ``(src, dst)`` index pairs along ``axis_name``.
+    Each pair is one point-to-point message of ``nbytes(x)`` — this is the
+    halo-exchange building block, the pattern the paper's communication
+    regions were designed to capture.
+
+    ``record_pairs``: optional *global-rank* (src, dst) pairs to record
+    instead of the executed permutation.  SPMD collectives run on every rank
+    every step; when the logical pattern is data-dependent-sparse (e.g. only
+    the active wavefront diagonal of a KBA sweep carries real data), the
+    caller can pass the logically-active pairs so statistics match what an
+    MPI implementation would send (see DESIGN.md §2).
+    """
+    if _regions.active_recorder() is not None:
+        topo = active_topology()
+        total = sum(_nbytes(leaf) for leaf in _flatten(x))
+        if record_pairs is not None:
+            pairs = list(record_pairs)
+            n = topo.n_ranks if topo is not None else _axis_size(axis_name)
+        elif topo is not None and isinstance(axis_name, str) \
+                and axis_name in topo.names:
+            pairs = topo.expand_pairs(axis_name, perm)
+            n = topo.n_ranks
+        else:
+            pairs = list(perm)
+            n = _axis_size(axis_name)
+        sends = {r: 0 for r in range(n)}
+        recvs = {r: 0 for r in range(n)}
+        dests = {r: set() for r in range(n)}
+        srcs = {r: set() for r in range(n)}
+        bsent = {r: 0 for r in range(n)}
+        brecv = {r: 0 for r in range(n)}
+        for (src, dst) in pairs:
+            sends[src] += 1
+            recvs[dst] += 1
+            dests[src].add(dst)
+            srcs[dst].add(src)
+            bsent[src] += total
+            brecv[dst] += total
+        _record("ppermute", axis_name=axis_name, sends=sends, recvs=recvs,
+                dests=dests, srcs=srcs, bsent=bsent, brecv=brecv,
+                is_collective=0)
+    return jax.tree.map(
+        lambda leaf: lax.ppermute(leaf, axis_name, perm=list(perm)), x)
+
+
+# ---------------------------------------------------------------------------
+# Collectives
+# ---------------------------------------------------------------------------
+
+def _record_collective(kind, x, axis_name, bytes_factor) -> None:
+    if _regions.active_recorder() is None:
+        return
+    topo = active_topology()
+    total = sum(_nbytes(leaf) for leaf in _flatten(x))
+    names_ok = topo is not None and all(
+        n in topo.names for n in ([axis_name] if isinstance(axis_name, str)
+                                  else list(axis_name)))
+    if names_ok:
+        groups = topo.groups(axis_name)
+        n_total = topo.n_ranks
+        gsize = len(groups[0]) if groups else 1
+        per_rank = int(total * bytes_factor(max(1, gsize)))
+        peers = {}
+        for g in groups:
+            gs = set(g)
+            for r in g:
+                peers[r] = gs - {r}
+        ranks = range(n_total)
+    else:
+        n = _axis_size(axis_name)
+        per_rank = int(total * bytes_factor(max(1, n)))
+        peers = {r: set(p for p in range(n) if p != r) for r in range(n)}
+        ranks = range(n)
+    _record(kind, axis_name=axis_name,
+            sends={r: 0 for r in ranks},
+            recvs={r: 0 for r in ranks},
+            dests=peers, srcs=peers,
+            bsent={r: per_rank for r in ranks},
+            brecv={r: per_rank for r in ranks},
+            is_collective=1)
+
+
+def psum(x, axis_name):
+    _record_collective("psum", x, axis_name, lambda n: 2 * (n - 1) / n)
+    return lax.psum(x, axis_name)
+
+
+def pmean(x, axis_name):
+    _record_collective("pmean", x, axis_name, lambda n: 2 * (n - 1) / n)
+    return lax.pmean(x, axis_name)
+
+
+def pmax(x, axis_name):
+    _record_collective("pmax", x, axis_name, lambda n: 2 * (n - 1) / n)
+    return lax.pmax(x, axis_name)
+
+
+def pmin(x, axis_name):
+    _record_collective("pmin", x, axis_name, lambda n: 2 * (n - 1) / n)
+    return lax.pmin(x, axis_name)
+
+
+def all_gather(x, axis_name, *, axis: int = 0, tiled: bool = False):
+    _record_collective("all_gather", x, axis_name, lambda n: (n - 1))
+    return lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+def psum_scatter(x, axis_name, *, scatter_dimension: int = 0,
+                 tiled: bool = False):
+    _record_collective("reduce_scatter", x, axis_name,
+                       lambda n: (n - 1) / n)
+    return lax.psum_scatter(x, axis_name,
+                            scatter_dimension=scatter_dimension, tiled=tiled)
+
+
+def all_to_all(x, axis_name, split_axis: int, concat_axis: int, *,
+               tiled: bool = False):
+    _record_collective("all_to_all", x, axis_name, lambda n: (n - 1) / n)
+    return lax.all_to_all(x, axis_name, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=tiled)
+
+
+def pbroadcast(x, axis_name, root: int = 0):
+    """Broadcast from ``root`` along ``axis_name``.
+
+    TPU-native realization: mask + psum (XLA lowers this to an efficient
+    broadcast).  Counted as one collective; ``(n-1)/n`` bytes per rank.
+    """
+    _record_collective("broadcast", x, axis_name, lambda n: (n - 1) / n)
+    idx = lax.axis_index(axis_name)
+    mask = (idx == root).astype(jnp.result_type(x) if jnp.issubdtype(
+        jnp.result_type(x), jnp.floating) else jnp.float32)
+    return jax.tree.map(
+        lambda leaf: lax.psum(leaf * mask.astype(leaf.dtype), axis_name), x)

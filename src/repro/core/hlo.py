@@ -1,0 +1,348 @@
+"""Compiled-HLO communication analysis — the paper's profiler applied to XLA.
+
+Under ``jit``, most communication in a sharded JAX program is *inserted by the
+GSPMD partitioner* — the user never writes it.  Caliper's PMPI interception
+has no analog for compiler-generated traffic, so this module extends the
+paper's idea to the compiled artifact: parse ``compiled.as_text()`` (post-SPMD
+HLO), find every collective op, compute its byte cost from the shapes in the
+IR, and attribute it to the innermost communication region via the
+``commr::<name>`` named-scope component in op metadata.
+
+This is also the source of the *collective roofline term*:
+
+  collective_term_seconds = wire_bytes_per_device / link_bandwidth
+
+Byte model per collective kind (ring-equivalent wire traffic per
+participating device, group size n):
+
+  all-reduce          2 * (n-1)/n * operand_bytes
+  all-gather          (n-1)/n * result_bytes      (= (n-1) * shard)
+  reduce-scatter      (n-1)/n * operand_bytes
+  all-to-all          (n-1)/n * operand_bytes
+  collective-permute  result_bytes (per source appearance)
+  collective-broadcast (n-1)/n * operand_bytes
+
+``operand_bytes`` / ``result_bytes`` are per-device shard sizes as written in
+the post-partitioning HLO (shapes in compiled HLO are already per-device).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Shape / dtype parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string, incl. tuple types."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        if dims:
+            n = math.prod(int(d) for d in dims.split(",") if d)
+        else:
+            n = 1
+        total += n * _DTYPE_BYTES[dtype]
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# HLO instruction parsing
+# ---------------------------------------------------------------------------
+
+# %name = <type> opkind(...), attrs..., metadata={...}
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+
+_COLLECTIVE_KINDS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+_REPLICA_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_REPLICA_EXPL_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _base_kind(opkind: str) -> Optional[str]:
+    if opkind.endswith("-start"):
+        opkind = opkind[:-len("-start")]
+    if opkind.endswith("-done"):
+        return None  # counted at -start
+    return opkind if opkind in _COLLECTIVE_KINDS else None
+
+
+@dataclass
+class CollectiveOp:
+    """One collective instruction in post-SPMD HLO."""
+
+    name: str
+    kind: str                      # base kind (all-reduce, ...)
+    result_bytes: int              # per-device result shard bytes
+    operand_bytes: int             # per-device operand shard bytes
+    group_size: int                # participants per replica group
+    n_groups: int
+    wire_bytes: int                # ring-model bytes over a device's link
+    region: str                    # attributed comm region ("<unattributed>")
+    op_name: str                   # full metadata op_name path
+    channel_id: int = -1
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def _parse_groups(rest: str, total_devices: Optional[int]) -> tuple:
+    m = _REPLICA_IOTA_RE.search(rest)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        return group_size, n_groups
+    m = _REPLICA_EXPL_RE.search(rest)
+    if m:
+        groups = re.findall(r"\{([\d,]+)\}", m.group(0))
+        sizes = [len(g.split(",")) for g in groups]
+        if sizes:
+            return max(sizes), len(sizes)
+    # flat single group over all devices
+    if total_devices:
+        return total_devices, 1
+    return 1, 1
+
+
+def _region_from_op_name(op_name: str) -> str:
+    """Innermost commr:: scope component, else <unattributed>."""
+    hits = re.findall(r"commr::([\w\-.]+)", op_name)
+    return hits[-1] if hits else "<unattributed>"
+
+
+def _wire_bytes(kind: str, result_b: int, operand_b: int, n: int,
+                n_pairs_per_src: float = 1.0) -> int:
+    if n <= 1 and kind != "collective-permute":
+        return 0
+    if kind == "all-reduce":
+        return int(2 * (n - 1) / n * operand_b)
+    if kind == "all-gather":
+        return int((n - 1) / n * result_b)
+    if kind == "reduce-scatter":
+        return int((n - 1) / n * operand_b)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return int((n - 1) / n * operand_b)
+    if kind == "collective-broadcast":
+        return int((n - 1) / n * operand_b)
+    if kind == "collective-permute":
+        return int(result_b * n_pairs_per_src)
+    return operand_b
+
+
+def parse_hlo_collectives(hlo_text: str,
+                          total_devices: Optional[int] = None
+                          ) -> list:
+    """Extract every collective op from compiled HLO text.
+
+    Returns a list of :class:`CollectiveOp` (per-device byte accounting).
+    """
+    # First pass: result type of every instruction, for operand lookup.
+    result_types: dict[str, str] = {}
+    instrs = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opkind, rest = m.groups()
+        result_types[name] = type_str
+        instrs.append((name, type_str, opkind, rest))
+
+    ops: list[CollectiveOp] = []
+    for name, type_str, opkind, rest in instrs:
+        kind = _base_kind(opkind)
+        if kind is None:
+            continue
+        result_b = _shape_bytes(type_str)
+        # Operand bytes: sum of referenced operand result types (first
+        # paren-group only — cut at first "),").
+        arg_str = rest.split("),", 1)[0]
+        operand_b = 0
+        for op in _OPERANDS_RE.findall(arg_str):
+            if op in result_types:
+                operand_b += _shape_bytes(result_types[op])
+        if operand_b == 0:
+            operand_b = result_b
+
+        pairs_m = _PAIRS_RE.search(rest)
+        n_pairs_per_src = 1.0
+        if kind == "collective-permute" and pairs_m:
+            pairs = re.findall(r"\{(\d+),(\d+)\}", pairs_m.group(0))
+            srcs = [int(a) for a, _ in pairs]
+            if srcs:
+                from collections import Counter
+                n_pairs_per_src = max(Counter(srcs).values())
+            group_size, n_groups = (total_devices or len(set(srcs)) or 1), 1
+        else:
+            group_size, n_groups = _parse_groups(rest, total_devices)
+
+        opname_m = _OPNAME_RE.search(rest)
+        op_name = opname_m.group(1) if opname_m else ""
+        ch_m = re.search(r"channel_id=(\d+)", rest)
+
+        ops.append(CollectiveOp(
+            name=name, kind=kind,
+            result_bytes=result_b, operand_bytes=operand_b,
+            group_size=group_size, n_groups=n_groups,
+            wire_bytes=_wire_bytes(kind, result_b, operand_b, group_size,
+                                   n_pairs_per_src),
+            region=_region_from_op_name(op_name),
+            op_name=op_name,
+            channel_id=int(ch_m.group(1)) if ch_m else -1,
+        ))
+    return ops
+
+
+@dataclass
+class CollectiveSummary:
+    """Aggregate of all collectives in one compiled program (per device)."""
+
+    total_wire_bytes: int = 0          # ring-model bytes over a device link
+    total_operand_bytes: int = 0       # raw operand-size sum (assignment metric)
+    n_ops: int = 0
+    by_kind: dict = field(default_factory=dict)     # kind -> (count, wire_bytes)
+    by_region: dict = field(default_factory=dict)   # region -> (count, wire_bytes)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def summarize_collectives(ops: list) -> CollectiveSummary:
+    s = CollectiveSummary()
+    for op in ops:
+        s.n_ops += 1
+        s.total_wire_bytes += op.wire_bytes
+        s.total_operand_bytes += op.operand_bytes
+        c, b = s.by_kind.get(op.kind, (0, 0))
+        s.by_kind[op.kind] = (c + 1, b + op.wire_bytes)
+        c, b = s.by_region.get(op.region, (0, 0))
+        s.by_region[op.region] = (c + 1, b + op.wire_bytes)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# While-loop trip-count scaling
+# ---------------------------------------------------------------------------
+# Scanned layer stacks put per-layer collectives inside a while loop; the HLO
+# body appears once but executes trip-count times.  cost_analysis() already
+# multiplies by trip count; for wire bytes we do the same by walking the HLO
+# call graph: factor(body) = factor(parent) * known_trip_count, summed over
+# call sites.  XLA records ``backend_config={"known_trip_count":{"n":"62"}}``
+# on while ops lowered from jax.lax.scan.
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-$]+)\s*\(.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-$]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w.\-$]+)")
+
+
+def split_computations(hlo_text: str) -> tuple:
+    """Split HLO text into (name -> lines); returns (comps, entry_name)."""
+    comps: dict[str, list] = {}
+    entry = None
+    name = "<preamble>"
+    comps[name] = []
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            name = m.group(2)
+            comps[name] = []
+            if m.group(1):
+                entry = name
+        comps[name].append(line)
+    return comps, entry
+
+
+def computation_factors(hlo_text: str) -> dict:
+    """Execution count of each computation, propagated from the entry.
+
+    While bodies multiply by known trip count; calls/fusions/conditions
+    propagate the parent factor.  Multiple call sites accumulate.
+    """
+    comps, entry = split_computations(hlo_text)
+    # edges: parent -> list of (child, multiplier)
+    edges: dict[str, list] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines[1:] if lines else []:
+            if " while(" in line or line.strip().startswith("%while") \
+                    or re.search(r"=\s*\([^=]*\)\s*while\(", line):
+                body_m = _WHILE_BODY_RE.search(line)
+                trip_m = _TRIP_RE.search(line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                for ref_m in _CALLS_RE.finditer(line):
+                    child = ref_m.group(1)
+                    mult = trip if (body_m and child == body_m.group(1)) else 1
+                    if child in comps:
+                        edges[cname].append((child, mult))
+            else:
+                for ref_m in _CALLS_RE.finditer(line):
+                    child = ref_m.group(1)
+                    if child in comps:
+                        edges[cname].append((child, 1))
+
+    factors: dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None:
+        # No ENTRY marker: treat every computation as executed once.
+        return {c: 1 for c in comps}
+    factors[entry] = 1.0
+    # Propagate in topological-ish order via repeated relaxation (call
+    # graphs are small DAGs; bound the iteration count defensively).
+    for _ in range(len(comps) + 2):
+        changed = False
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for parent, out in edges.items():
+            for child, mult in out:
+                new[child] += factors[parent] * mult
+        for c in comps:
+            if abs(new[c] - factors[c]) > 1e-9:
+                changed = True
+        factors = new
+        if not changed:
+            break
+    return {c: max(1, int(round(f))) if f > 0 else 0
+            for c, f in factors.items()}
+
+
+def parse_hlo_collectives_with_loops(hlo_text: str,
+                                     total_devices: Optional[int] = None
+                                     ) -> list:
+    """Like parse_hlo_collectives, but scales ops inside while bodies by the
+    loop trip count (call-graph walk; unscaled if no trip count recorded)."""
+    comps, entry = split_computations(hlo_text)
+    if entry is None:
+        return parse_hlo_collectives(hlo_text, total_devices)
+    factors = computation_factors(hlo_text)
+    ops: list[CollectiveOp] = []
+    for cname, lines in comps.items():
+        factor = factors.get(cname, 1)
+        if factor == 0:
+            continue
+        for op in parse_hlo_collectives("\n".join(lines), total_devices):
+            op.wire_bytes *= factor
+            op.operand_bytes *= factor
+            ops.append(op)
+    return ops

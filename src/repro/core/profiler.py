@@ -1,0 +1,214 @@
+"""Communication-pattern profiler (paper §III, Table I).
+
+The paper's profiler is invoked at the end of each marked communication
+region and computes message / rank / data-volume statistics for the MPI
+operations that occurred within the region boundaries.  This module is the
+JAX analog: it aggregates the :class:`RegionEvent` stream produced by the
+instrumented collectives into per-region :class:`RegionStats`.
+
+Table I schema (all reproduced here):
+
+  Sends        Min/Max number of messages sent
+  Recvs        Min/Max number of messages received
+  Dest ranks   Min/Max number of distinct destination ranks
+  Src ranks    Min/Max number of distinct source ranks
+  Bytes sent   Min/Max bytes sent by a process in the region
+  Bytes recv   Min/Max bytes received by a process in the region
+  Coll         Max collective calls in the region
+
+Extensions over the paper (TPU-native):
+  coll_bytes   total collective bytes moved per rank (min/max) — on TPU most
+               traffic is collectives, so pattern analysis needs it;
+  totals      totals across ranks (paper Table IV columns).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.regions import RegionEvent, RegionRecorder, recording
+
+
+@dataclass
+class RegionStats:
+    """Per-region communication statistics (Table I + extensions)."""
+
+    region: str
+    instances: int = 0
+    # Table I attributes: (min, max) across ranks.
+    sends: tuple = (0, 0)
+    recvs: tuple = (0, 0)
+    dest_ranks: tuple = (0, 0)
+    src_ranks: tuple = (0, 0)
+    bytes_sent: tuple = (0, 0)
+    bytes_recv: tuple = (0, 0)
+    coll: int = 0                       # max collective calls in the region
+    # Extensions.
+    coll_bytes: tuple = (0, 0)          # (min, max) collective bytes per rank
+    total_bytes_sent: int = 0           # across all ranks (Table IV col 1)
+    total_sends: int = 0                # across all ranks (Table IV col 2)
+    largest_send: int = 0               # largest single message (Table IV col 3)
+    n_ranks: int = 0
+    kinds: dict = field(default_factory=dict)   # kind -> call count
+
+    @property
+    def avg_send_size(self) -> float:
+        """Average send size in bytes (Table IV col 4)."""
+        return self.total_bytes_sent / self.total_sends if self.total_sends else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["avg_send_size"] = self.avg_send_size
+        return d
+
+
+@dataclass
+class CommProfile:
+    """A full profile: one program/step, many regions (a .cali-file analog)."""
+
+    name: str
+    n_ranks: int
+    regions: dict = field(default_factory=dict)   # region -> RegionStats
+    meta: dict = field(default_factory=dict)      # free-form (config, mesh, ...)
+
+    def region(self, name: str) -> RegionStats:
+        return self.regions[name]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "name": self.name,
+            "n_ranks": self.n_ranks,
+            "meta": self.meta,
+            "regions": {k: v.to_dict() for k, v in self.regions.items()},
+        }, indent=2, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "CommProfile":
+        raw = json.loads(text)
+        prof = CommProfile(name=raw["name"], n_ranks=raw["n_ranks"],
+                           meta=raw.get("meta", {}))
+        for rname, rd in raw["regions"].items():
+            rd = dict(rd)
+            rd.pop("avg_send_size", None)
+            for k in ("sends", "recvs", "dest_ranks", "src_ranks",
+                      "bytes_sent", "bytes_recv", "coll_bytes"):
+                rd[k] = tuple(rd[k])
+            prof.regions[rname] = RegionStats(**rd)
+        return prof
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path) -> "CommProfile":
+        with open(path) as f:
+            return CommProfile.from_json(f.read())
+
+
+class CommPatternProfiler:
+    """Aggregates a RegionRecorder's event stream into RegionStats."""
+
+    @staticmethod
+    def from_recorder(rec: RegionRecorder, *, name: str = "profile",
+                      replication: int = 1, meta: Optional[dict] = None
+                      ) -> CommProfile:
+        """Build a CommProfile.
+
+        ``replication``: number of identical communicator groups the axis
+        pattern repeats over (e.g. a ppermute over a 16-wide axis of a
+        16x16 mesh repeats over 16 groups).  Totals scale by it; min/max
+        per-rank stats do not.
+        """
+        per_region: dict[str, dict] = {}
+
+        def acc(region: str) -> dict:
+            if region not in per_region:
+                per_region[region] = dict(
+                    sends={}, recvs={}, dests={}, srcs={},
+                    bsent={}, brecv={}, cbytes={}, coll=0,
+                    largest=0, kinds={})
+            return per_region[region]
+
+        for ev in rec.events:
+            a = acc(ev.region)
+            a["kinds"][ev.kind] = a["kinds"].get(ev.kind, 0) + 1
+            if ev.is_collective:
+                a["coll"] += 1
+                for r, b in ev.bytes_sent.items():
+                    a["cbytes"][r] = a["cbytes"].get(r, 0) + b
+                continue
+            ranks = set(ev.sends_per_rank) | set(ev.recvs_per_rank)
+            for r in ranks:
+                a["sends"][r] = a["sends"].get(r, 0) + ev.sends_per_rank.get(r, 0)
+                a["recvs"][r] = a["recvs"].get(r, 0) + ev.recvs_per_rank.get(r, 0)
+                a["dests"].setdefault(r, set()).update(ev.dest_ranks.get(r, ()))
+                a["srcs"].setdefault(r, set()).update(ev.src_ranks.get(r, ()))
+                a["bsent"][r] = a["bsent"].get(r, 0) + ev.bytes_sent.get(r, 0)
+                a["brecv"][r] = a["brecv"].get(r, 0) + ev.bytes_recv.get(r, 0)
+            if ev.sends_per_rank:
+                n_msgs = max(1, max(ev.sends_per_rank.values()))
+                # largest single message in this event:
+                per_msg = max(ev.bytes_sent.values()) // n_msgs \
+                    if ev.bytes_sent else 0
+                a["largest"] = max(a["largest"], per_msg)
+
+        # Regions entered but containing no communication (pure-compute
+        # phases like Kripke's "solve") still get a row — the paper's Fig. 1
+        # compares compute vs communication regions.
+        for rname in rec.instances:
+            acc(rname)
+
+        n_ranks = 0
+        for a in per_region.values():
+            for key in ("sends", "recvs", "bsent", "brecv", "cbytes"):
+                if a[key]:
+                    n_ranks = max(n_ranks, max(a[key]) + 1)
+
+        prof = CommProfile(name=name, n_ranks=n_ranks * replication,
+                           meta=meta or {})
+        for region, a in per_region.items():
+            def mm(d, default=0):
+                if not d:
+                    return (default, default)
+                return (min(d.values()), max(d.values()))
+
+            stats = RegionStats(
+                region=region,
+                instances=rec.instances.get(region, 1),
+                sends=mm(a["sends"]),
+                recvs=mm(a["recvs"]),
+                dest_ranks=mm({r: len(s) for r, s in a["dests"].items()}),
+                src_ranks=mm({r: len(s) for r, s in a["srcs"].items()}),
+                bytes_sent=mm(a["bsent"]),
+                bytes_recv=mm(a["brecv"]),
+                coll=a["coll"],
+                coll_bytes=mm(a["cbytes"]),
+                total_bytes_sent=sum(a["bsent"].values()) * replication,
+                total_sends=sum(a["sends"].values()) * replication,
+                largest_send=a["largest"],
+                n_ranks=n_ranks * replication,
+                kinds=dict(a["kinds"]),
+            )
+            prof.regions[region] = stats
+        return prof
+
+
+def profile_traced(fn: Callable, *args, name: str = "profile",
+                   replication: int = 1, meta: Optional[dict] = None,
+                   **kwargs) -> CommProfile:
+    """Trace ``fn`` abstractly and return its communication profile.
+
+    Uses ``jax.eval_shape`` so no device computation or allocation happens —
+    the communication structure of an SPMD JAX program is fully visible at
+    trace time.  ``fn`` must use the instrumented collectives from
+    ``repro.core.collectives`` inside its shard_map regions.
+    """
+    with recording() as rec:
+        jax.eval_shape(fn, *args, **kwargs)
+    return CommPatternProfiler.from_recorder(
+        rec, name=name, replication=replication, meta=meta)

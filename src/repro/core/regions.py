@@ -1,0 +1,156 @@
+"""Communication regions — the paper's core contribution, adapted to JAX.
+
+The paper adds two markers to Caliper, ``CALI_MARK_COMM_REGION_BEGIN`` /
+``CALI_MARK_COMM_REGION_END``, which bracket a group of MPI calls forming one
+logical communication pattern instance (a halo exchange, a sweep, hypre's
+MatVecComm).  Here the same concept is a context manager, ``comm_region``:
+
+    with comm_region("sweep_comm"):
+        field = coll.ppermute(field, axis_name="x", perm=right_perm)
+
+Two things happen inside a region:
+
+1. Every instrumented collective issued within the region (see
+   ``repro.core.collectives``) reports itself to the active
+   :class:`RegionRecorder`, which forwards the *static* communication
+   structure (bytes, per-rank source/destination sets, collective kind) to the
+   profiler.  This is the PMPI-interception analog — except that SPMD JAX
+   communication is statically known at trace time, so the recorded statistics
+   are exact rather than sampled.
+
+2. A ``jax.named_scope`` with a reserved prefix (``commr::<name>``) is
+   entered, so the region name survives into HLO op metadata.  The HLO-level
+   analyzer (``repro.core.hlo``) uses this to attribute *compiler-inserted*
+   GSPMD collectives — communication the user never wrote — back to the
+   region, which has no Caliper/MPI equivalent and is the TPU-native extension
+   of the paper's idea.
+
+Regions nest; statistics are attributed to the innermost region, matching
+Caliper's stack semantics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import jax
+
+#: Prefix used inside jax.named_scope so HLO metadata can be recognized as a
+#: communication region (rather than an ordinary profiling scope).
+COMM_REGION_SCOPE_PREFIX = "commr::"
+
+
+@dataclass
+class RegionEvent:
+    """One instrumented collective call observed inside a region.
+
+    All fields describe the *static* structure of the collective, per
+    participating rank (paper Table I is derived from these).
+    """
+
+    region: str                 # innermost region name ("sweep_comm")
+    region_path: tuple          # full nesting path ("main", "sweep_comm")
+    kind: str                   # ppermute | psum | all_gather | all_to_all | ...
+    # Mapping rank -> number of messages that rank sends in this call.
+    sends_per_rank: dict
+    # Mapping rank -> number of messages that rank receives in this call.
+    recvs_per_rank: dict
+    # Mapping rank -> set of destination ranks.
+    dest_ranks: dict
+    # Mapping rank -> set of source ranks.
+    src_ranks: dict
+    # Mapping rank -> bytes sent by that rank in this call.
+    bytes_sent: dict
+    # Mapping rank -> bytes received by that rank.
+    bytes_recv: dict
+    # 1 if this call is a collective (all-reduce/all-gather/...), 0 for
+    # point-to-point-like patterns (ppermute).
+    is_collective: int = 0
+    axis_name: str = ""
+
+
+class RegionRecorder:
+    """Collects RegionEvents for one profiling session (thread-local stack)."""
+
+    def __init__(self) -> None:
+        self.events: list[RegionEvent] = []
+        # Number of times each region was entered (instance count — the paper
+        # distinguishes pattern *instances* across iterations).
+        self.instances: dict[str, int] = {}
+
+    def record(self, event: RegionEvent) -> None:
+        self.events.append(event)
+
+    def enter(self, name: str) -> None:
+        self.instances[name] = self.instances.get(name, 0) + 1
+
+
+class _State(threading.local):
+    def __init__(self) -> None:
+        self.stack: list[str] = []
+        self.recorder: Optional[RegionRecorder] = None
+
+
+_STATE = _State()
+
+
+def current_region() -> Optional[str]:
+    """Innermost active region name, or None outside any region."""
+    return _STATE.stack[-1] if _STATE.stack else None
+
+
+def current_region_path() -> tuple:
+    return tuple(_STATE.stack)
+
+
+def active_recorder() -> Optional[RegionRecorder]:
+    return _STATE.recorder
+
+
+@contextlib.contextmanager
+def comm_region(name: str) -> Iterator[None]:
+    """Mark a communication region (CALI_MARK_COMM_REGION_BEGIN/END analog).
+
+    Enters a jax.named_scope so the name is visible in HLO metadata, and
+    pushes onto the region stack consulted by instrumented collectives.
+    """
+    if not name or "/" in name:
+        raise ValueError(f"invalid comm region name: {name!r}")
+    _STATE.stack.append(name)
+    if _STATE.recorder is not None:
+        _STATE.recorder.enter(name)
+    try:
+        with jax.named_scope(COMM_REGION_SCOPE_PREFIX + name):
+            yield
+    finally:
+        popped = _STATE.stack.pop()
+        assert popped == name, "comm_region stack corrupted"
+
+
+@contextlib.contextmanager
+def recording() -> Iterator[RegionRecorder]:
+    """Install a fresh RegionRecorder for the duration of a trace.
+
+    Typical use::
+
+        with recording() as rec:
+            jax.eval_shape(step, ...)   # or jit(...).lower(...)
+        profile = CommPatternProfiler.from_recorder(rec, n_ranks)
+    """
+    prev = _STATE.recorder
+    rec = RegionRecorder()
+    _STATE.recorder = rec
+    try:
+        yield rec
+    finally:
+        _STATE.recorder = prev
+
+
+def record_event(event: RegionEvent) -> None:
+    """Called by instrumented collectives."""
+    rec = _STATE.recorder
+    if rec is not None:
+        rec.record(event)

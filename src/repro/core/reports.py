@@ -1,0 +1,144 @@
+"""Report emitters reproducing the paper's tables/figures as markdown/CSV.
+
+Each function maps one paper artifact onto the profiling data collected by
+this framework (since the container is CPU-only, "time" columns use roofline
+seconds derived from the dry-run cost model — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+from repro.core.profiler import CommProfile
+from repro.core.thicket import Frame, add_rate_metrics
+
+
+def table1_schema() -> str:
+    """Paper Table I — the attribute schema the profiler collects."""
+    rows = [
+        ("Sends", "Min/Max number of messages sent"),
+        ("Recvs", "Min/Max number of messages received"),
+        ("Dest ranks", "Min/Max number of distinct destination ranks"),
+        ("Src ranks", "Min/Max number of distinct source ranks"),
+        ("Bytes sent", "Min/Max message size sent by a process in a region"),
+        ("Bytes recv", "Min/Max message size received by a process in a region"),
+        ("Coll", "Max collective calls in a region"),
+        ("Coll bytes*", "Min/Max collective bytes per rank (TPU extension)"),
+    ]
+    out = ["| Attribute | Description |", "|---|---|"]
+    out += [f"| {a} | {d} |" for a, d in rows]
+    return "\n".join(out)
+
+
+def table4_metrics(profiles: Iterable[CommProfile],
+                   region: Optional[str] = None) -> str:
+    """Paper Table IV — total bytes sent / sends / largest / average send.
+
+    One row per (application, n_ranks); aggregates over all regions unless
+    ``region`` is given.
+    """
+    out = ["| Application - Processes | Total Bytes Sent | Total Sends | "
+           "Largest Send (bytes) | Average Send Size (bytes) |",
+           "|---|---|---|---|---|"]
+    for p in profiles:
+        regions = ([p.regions[region]] if region and region in p.regions
+                   else list(p.regions.values()))
+        tb = sum(r.total_bytes_sent for r in regions)
+        ts = sum(r.total_sends for r in regions)
+        lg = max((r.largest_send for r in regions), default=0)
+        avg = tb / ts if ts else 0.0
+        out.append(f"| {p.name} - {p.n_ranks} | {tb:.3e} | {ts:.3e} | "
+                   f"{lg} | {avg:.3e} |")
+    return "\n".join(out)
+
+
+def region_stats_table(profile: CommProfile) -> str:
+    """Full Table-I-schema dump for every region in one profile."""
+    out = ["| Region | Inst | Sends (mn/mx) | Recvs (mn/mx) | "
+           "Dst ranks | Src ranks | Bytes sent (mn/mx) | "
+           "Bytes recv (mn/mx) | Coll | Coll bytes (mx) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for name in sorted(profile.regions):
+        s = profile.regions[name]
+        out.append(
+            f"| {name} | {s.instances} | {s.sends[0]}/{s.sends[1]} | "
+            f"{s.recvs[0]}/{s.recvs[1]} | "
+            f"{s.dest_ranks[0]}/{s.dest_ranks[1]} | "
+            f"{s.src_ranks[0]}/{s.src_ranks[1]} | "
+            f"{s.bytes_sent[0]}/{s.bytes_sent[1]} | "
+            f"{s.bytes_recv[0]}/{s.bytes_recv[1]} | "
+            f"{s.coll} | {s.coll_bytes[1]} |")
+    return "\n".join(out)
+
+
+def scaling_report(profiles: Iterable[CommProfile], region: str,
+                   metric: str = "total_bytes_sent",
+                   title: str = "") -> str:
+    """Fig 1/4-style per-region scaling table (metric vs process count)."""
+    frame = Frame.from_profiles(profiles).where(region=region) \
+        .select("n_ranks", metric).sort("n_ranks")
+    hdr = f"### {title or region}: {metric} vs processes\n"
+    return hdr + frame.to_markdown()
+
+
+def per_level_report(profiles: Iterable[CommProfile],
+                     level_prefix: str = "mg_level_",
+                     metric: str = "bytes_sent_max") -> str:
+    """Fig 2/3-style AMG per-multigrid-level breakdown.
+
+    Regions named ``<prefix><k>`` become columns; rows are process counts.
+    """
+    frame = Frame.from_profiles(profiles)
+    frame = frame.filter(lambda r: str(r["region"]).startswith(level_prefix))
+    frame = frame.with_column(
+        "level", lambda r: int(str(r["region"])[len(level_prefix):]))
+    piv = frame.pivot("n_ranks", "level", metric)
+    return (f"### {metric} per multigrid level (rows = processes)\n"
+            + piv.to_markdown())
+
+
+def bandwidth_msgrate_report(profiles: Iterable[CommProfile]) -> str:
+    """Fig 5/6-style bandwidth + message-rate comparison.
+
+    Each profile must carry ``meta['seconds']`` (roofline step seconds).
+    """
+    frame = Frame.from_profiles(profiles)
+    frame = frame.agg(("profile", "n_ranks", "meta_app", "meta_seconds"), {
+        "total_bytes_sent": ("total_bytes_sent", sum),
+        "total_sends": ("total_sends", sum),
+    })
+    frame = add_rate_metrics(frame)
+    frame = frame.sort("meta_app", "n_ranks")
+    return ("### Per-process bandwidth (B/s) and message rate (msg/s)\n"
+            + frame.to_markdown(cols=["meta_app", "n_ranks",
+                                      "bandwidth_Bps", "msg_rate_per_s"]))
+
+
+def ascii_scaling_plot(xs: list, ys: list, width: int = 60, height: int = 12,
+                       title: str = "") -> str:
+    """Terminal-friendly scaling plot (the paper's figures, ASCII edition)."""
+    if not xs or not ys or max(ys) <= 0:
+        return f"{title}: (no data)"
+    lo, hi = min(ys), max(ys)
+    span = (hi - lo) or 1.0
+    rows = []
+    for level in range(height, -1, -1):
+        thresh = lo + span * level / height
+        line = "".join(
+            "*" if y >= thresh and (level == 0 or y < lo + span * (level + 1)
+                                    / height) else " "
+            for y in _resample(xs, ys, width))
+        rows.append(f"{thresh:10.3e} |{line}")
+    axis = " " * 11 + "+" + "-" * width
+    xlab = (" " * 12 + f"{xs[0]:<10}" + " " * max(0, width - 20)
+            + f"{xs[-1]:>10}")
+    return "\n".join([f"## {title}"] + rows + [axis, xlab])
+
+
+def _resample(xs: list, ys: list, width: int) -> list:
+    out = []
+    for i in range(width):
+        # piecewise-constant resample by x order
+        j = min(len(ys) - 1, i * len(ys) // width)
+        out.append(ys[j])
+    return out

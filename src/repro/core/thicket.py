@@ -1,0 +1,198 @@
+"""Thicket analog — exploratory analysis over many communication profiles.
+
+The paper pairs Caliper with Thicket (a pandas-based toolkit) to aggregate
+profiles from scaling studies into tables/plots (Figs. 1-6, Table IV).  This
+module is a dependency-free tabular equivalent: a :class:`Frame` of rows
+(dicts) with group-by / pivot / derived-metric helpers, plus loaders that
+ingest :class:`repro.core.profiler.CommProfile` JSON files and the dry-run
+roofline records.
+
+Derived metrics mirror the paper's §V analysis:
+  bandwidth   bytes sent per second per process (Fig. 5/6 left axes)
+  msg_rate    messages sent per second per process (Fig. 5/6 right axes)
+where "seconds" on real MPI systems is wall time; here it is the roofline
+time of the step (sum of the dominant terms), since the container has no TPU.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Callable, Iterable, Optional
+
+from repro.core.profiler import CommProfile
+
+
+class Frame:
+    """A minimal dataframe: list of dict rows + column utilities."""
+
+    def __init__(self, rows: Optional[Iterable[dict]] = None):
+        self.rows: list[dict] = [dict(r) for r in (rows or [])]
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def from_profiles(profiles: Iterable[CommProfile]) -> "Frame":
+        """One row per (profile, region)."""
+        rows = []
+        for p in profiles:
+            for rname, st in p.regions.items():
+                row = {
+                    "profile": p.name,
+                    "n_ranks": p.n_ranks,
+                    "region": rname,
+                    "instances": st.instances,
+                    "sends_min": st.sends[0], "sends_max": st.sends[1],
+                    "recvs_min": st.recvs[0], "recvs_max": st.recvs[1],
+                    "dest_ranks_min": st.dest_ranks[0],
+                    "dest_ranks_max": st.dest_ranks[1],
+                    "src_ranks_min": st.src_ranks[0],
+                    "src_ranks_max": st.src_ranks[1],
+                    "bytes_sent_min": st.bytes_sent[0],
+                    "bytes_sent_max": st.bytes_sent[1],
+                    "bytes_recv_min": st.bytes_recv[0],
+                    "bytes_recv_max": st.bytes_recv[1],
+                    "coll": st.coll,
+                    "coll_bytes_max": st.coll_bytes[1],
+                    "total_bytes_sent": st.total_bytes_sent,
+                    "total_sends": st.total_sends,
+                    "largest_send": st.largest_send,
+                    "avg_send_size": st.avg_send_size,
+                }
+                row.update({f"meta_{k}": v for k, v in p.meta.items()})
+                rows.append(row)
+        return Frame(rows)
+
+    @staticmethod
+    def from_profile_dir(path: str, pattern: str = "*.json") -> "Frame":
+        profs = [CommProfile.load(p)
+                 for p in sorted(glob.glob(os.path.join(path, pattern)))]
+        return Frame.from_profiles(profs)
+
+    @staticmethod
+    def from_records(path: str) -> "Frame":
+        """Load a JSON list-of-dicts file (e.g. dry-run roofline records)."""
+        with open(path) as f:
+            return Frame(json.load(f))
+
+    # -- relational ops ---------------------------------------------------
+    def filter(self, pred: Callable[[dict], bool]) -> "Frame":
+        return Frame(r for r in self.rows if pred(r))
+
+    def where(self, **eq) -> "Frame":
+        return self.filter(lambda r: all(r.get(k) == v for k, v in eq.items()))
+
+    def with_column(self, name: str, fn: Callable[[dict], object]) -> "Frame":
+        out = []
+        for r in self.rows:
+            r = dict(r)
+            r[name] = fn(r)
+            out.append(r)
+        return Frame(out)
+
+    def select(self, *cols: str) -> "Frame":
+        return Frame({c: r.get(c) for c in cols} for r in self.rows)
+
+    def sort(self, *cols: str, reverse: bool = False) -> "Frame":
+        return Frame(sorted(self.rows,
+                            key=lambda r: tuple(r.get(c) for c in cols),
+                            reverse=reverse))
+
+    def group_by(self, *keys: str):
+        groups: dict[tuple, list] = {}
+        for r in self.rows:
+            groups.setdefault(tuple(r.get(k) for k in keys), []).append(r)
+        return groups
+
+    def agg(self, keys: tuple, aggs: dict) -> "Frame":
+        """aggs: out_col -> (in_col, fn) where fn maps list->scalar."""
+        out = []
+        for kv, rows in self.group_by(*keys).items():
+            row = dict(zip(keys, kv))
+            for out_col, (in_col, fn) in aggs.items():
+                row[out_col] = fn([r.get(in_col) for r in rows])
+            out.append(row)
+        return Frame(out)
+
+    def pivot(self, index: str, column: str, value: str) -> "Frame":
+        """Rows keyed by `index`, one output column per distinct `column`."""
+        idx: dict[object, dict] = {}
+        for r in self.rows:
+            row = idx.setdefault(r.get(index), {index: r.get(index)})
+            row[str(r.get(column))] = r.get(value)
+        return Frame(idx[k] for k in sorted(idx, key=lambda x: (str(type(x)), x)))
+
+    # -- access -----------------------------------------------------------
+    def column(self, name: str) -> list:
+        return [r.get(name) for r in self.rows]
+
+    def columns(self) -> list:
+        cols: list[str] = []
+        for r in self.rows:
+            for c in r:
+                if c not in cols:
+                    cols.append(c)
+        return cols
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    # -- output -----------------------------------------------------------
+    def to_markdown(self, cols: Optional[list] = None,
+                    floatfmt: str = "{:.4g}") -> str:
+        cols = cols or self.columns()
+
+        def fmt(v):
+            if isinstance(v, float):
+                return floatfmt.format(v)
+            return str(v)
+
+        lines = ["| " + " | ".join(cols) + " |",
+                 "|" + "|".join("---" for _ in cols) + "|"]
+        for r in self.rows:
+            lines.append("| " + " | ".join(fmt(r.get(c, "")) for c in cols)
+                         + " |")
+        return "\n".join(lines)
+
+    def to_csv(self, cols: Optional[list] = None) -> str:
+        cols = cols or self.columns()
+        lines = [",".join(cols)]
+        for r in self.rows:
+            lines.append(",".join(str(r.get(c, "")) for c in cols))
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps(self.rows, indent=2, default=str)
+
+
+# ---------------------------------------------------------------------------
+# Paper-style derived metrics (§V bandwidth / message-rate analysis)
+# ---------------------------------------------------------------------------
+
+def add_rate_metrics(frame: Frame, seconds_col: str = "meta_seconds") -> Frame:
+    """Add per-process bandwidth (B/s) and message rate (msgs/s).
+
+    ``seconds_col`` must hold the per-step time estimate (roofline seconds
+    from the dry-run, or measured seconds where available).
+    """
+    def bw(r):
+        s, n = r.get(seconds_col) or 0.0, max(1, r.get("n_ranks", 1))
+        return (r.get("total_bytes_sent", 0) / n / s) if s else 0.0
+
+    def rate(r):
+        s, n = r.get(seconds_col) or 0.0, max(1, r.get("n_ranks", 1))
+        return (r.get("total_sends", 0) / n / s) if s else 0.0
+
+    return frame.with_column("bandwidth_Bps", bw) \
+                .with_column("msg_rate_per_s", rate)
+
+
+def scaling_table(frame: Frame, region: str,
+                  value: str = "total_bytes_sent") -> Frame:
+    """Paper Fig-style table: value vs n_ranks for one region."""
+    return frame.where(region=region) \
+                .select("n_ranks", value) \
+                .sort("n_ranks")

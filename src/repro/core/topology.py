@@ -1,0 +1,107 @@
+"""Process-topology context for global-rank attribution.
+
+The paper's statistics are per MPI *rank*.  A ppermute along one mesh axis of
+a multi-axis decomposition only names axis-local indices; to reproduce
+rank-level findings (e.g. Kripke's corner ranks having 3 communication
+partners vs 6 in the interior — paper §IV-A) the profiler must expand
+axis-local permutations into global rank pairs.
+
+Apps declare their decomposition once::
+
+    with topology(("x", px), ("y", py), ("z", pz)):
+        ...   # instrumented collectives inside shard_map
+
+Global rank = mixed-radix index over the declared axes, in declared order
+(matching ``jax.make_mesh`` device ordering).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import itertools
+import math
+import threading
+from typing import Iterator, Optional, Sequence
+
+
+class Topology:
+    def __init__(self, axes: Sequence[tuple]):
+        self.names = [a for a, _ in axes]
+        self.sizes = [int(s) for _, s in axes]
+        self.n_ranks = math.prod(self.sizes)
+        # strides for mixed-radix (row-major, first axis slowest)
+        self.strides = []
+        acc = 1
+        for s in reversed(self.sizes):
+            self.strides.append(acc)
+            acc *= s
+        self.strides.reverse()
+
+    def rank(self, coords: Sequence[int]) -> int:
+        return sum(c * s for c, s in zip(coords, self.strides))
+
+    def axis_pos(self, name: str) -> int:
+        return self.names.index(name)
+
+    def axis_size(self, name) -> int:
+        if isinstance(name, (tuple, list)):
+            return math.prod(self.axis_size(n) for n in name)
+        return self.sizes[self.axis_pos(name)]
+
+    def expand_pairs(self, axis_name: str, perm: Sequence[tuple]) -> list:
+        """Axis-local (src, dst) pairs -> global-rank pairs, for every
+        combination of the other axes' indices."""
+        pos = self.axis_pos(axis_name)
+        others = [range(s) for i, s in enumerate(self.sizes) if i != pos]
+        out = []
+        for combo in itertools.product(*others):
+            for (src, dst) in perm:
+                cs = list(combo[:pos]) + [src] + list(combo[pos:])
+                cd = list(combo[:pos]) + [dst] + list(combo[pos:])
+                out.append((self.rank(cs), self.rank(cd)))
+        return out
+
+    def groups(self, axis_name) -> list:
+        """Communicator groups for a collective over axis_name (possibly a
+        tuple of axes): list of lists of global ranks."""
+        names = ([axis_name] if isinstance(axis_name, str)
+                 else list(axis_name))
+        pos = [self.axis_pos(n) for n in names]
+        others = [i for i in range(len(self.sizes)) if i not in pos]
+        out = []
+        for combo in itertools.product(*[range(self.sizes[i])
+                                         for i in others]):
+            group = []
+            for inner in itertools.product(*[range(self.sizes[i])
+                                             for i in pos]):
+                coords = [0] * len(self.sizes)
+                for i, c in zip(others, combo):
+                    coords[i] = c
+                for i, c in zip(pos, inner):
+                    coords[i] = c
+                group.append(self.rank(coords))
+            out.append(group)
+        return out
+
+
+class _TopoState(threading.local):
+    def __init__(self) -> None:
+        self.topo: Optional[Topology] = None
+
+
+_STATE = _TopoState()
+
+
+def active_topology() -> Optional[Topology]:
+    return _STATE.topo
+
+
+@contextlib.contextmanager
+def topology(*axes: tuple) -> Iterator[Topology]:
+    """Declare the process decomposition for global-rank profiling."""
+    prev = _STATE.topo
+    _STATE.topo = Topology(axes)
+    try:
+        yield _STATE.topo
+    finally:
+        _STATE.topo = prev

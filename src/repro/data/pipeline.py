@@ -1,0 +1,67 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Production posture (DESIGN.md §5): batches are a pure function of
+``(seed, step)`` — restart/elastic-rescale resumes mid-run with no state
+beyond the step counter (checkpoint stores it).  Per-host sharding: each
+process materializes only its addressable slice of the global batch
+(single-process here, but the slicing logic is exercised by tests).
+
+The token stream is Zipf-flavored with a Markov drift so the LM loss has
+learnable structure (examples train a ~100M model on it).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+class SyntheticLM:
+    """Batch factory: batch(step) -> {tokens, labels}, pure in (seed, step)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # Zipf-ish unigram distribution (stable across runs).
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        probs = ranks ** (-cfg.zipf_a)
+        self.probs = jnp.asarray(probs / probs.sum(), jnp.float32)
+
+    def batch(self, step: int, *, process_index: int = 0,
+              process_count: int = 1) -> dict:
+        cfg = self.cfg
+        assert cfg.global_batch % process_count == 0
+        local_b = cfg.global_batch // process_count
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step),
+            process_index)
+        k1, k2 = jax.random.split(key)
+        base = jax.random.categorical(
+            k1, jnp.log(self.probs)[None, None, :],
+            shape=(local_b, cfg.seq_len))
+        # Markov drift: even positions copy a shifted neighbor, giving
+        # next-token structure the model can learn.
+        shift = jnp.roll(base, 1, axis=1)
+        mix = jax.random.bernoulli(k2, 0.5, base.shape)
+        tokens = jnp.where(mix, (shift + 1) % cfg.vocab, base)
+        tokens = tokens.astype(jnp.int32)
+        return {"tokens": tokens, "labels": tokens}
+
+    def global_batch_on(self, step: int, mesh, plan) -> dict:
+        """Materialize a globally-sharded batch via per-shard callbacks."""
+        from jax.sharding import NamedSharding
+        b = self.batch(step)
+        sh = plan.sharding(mesh, "batch", "seq")
+        return {k: jax.device_put(v, sh) for k, v in b.items()}

@@ -1,0 +1,113 @@
+"""Flash-decoding attention — Pallas TPU kernel for the decode shapes.
+
+One new token attends over a long preallocated KV cache (assigned
+``decode_32k`` / ``long_500k`` cells).  Grid ``(batch*q_heads, kv_blocks)``
+with online-softmax running stats in VMEM scratch, as in flash_attention,
+plus the flash-decoding specialization: the *filled length* ``kv_len`` is a
+scalar-prefetch argument, and blocks entirely beyond it are skipped with
+``@pl.when`` — no wasted MXU work on the unfilled cache tail (the analog of
+FlashDecoding's split-K early exit, arXiv:2311.01282).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    kv_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (1, D) padded to (8, D)
+        k = k_ref[0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q (B,Hq,1,D); k/v (B,Hkv,S,D); kv_len scalar (attend to [0,kv_len)).
+
+    Returns (B,Hq,1,D).
+    """
+    B, Hq, one, D = q.shape
+    assert one == 1
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, S)
+    pad_k = (-S) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sp = S + pad_k
+
+    # q row dim padded to the 8-row sublane minimum
+    qs = jnp.pad(q.reshape(B * Hq, 1, D), ((0, 0), (0, 7), (0, 0)))
+    ks = k.reshape(B * Hkv, Sp, D)
+    vs = v.reshape(B * Hkv, Sp, D)
+    lens = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hq, Sp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 8, D), lambda h, ki, lens: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, ki, lens, group=group: (h // group, ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, ki, lens, group=group: (h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 8, D), lambda h, ki, lens: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8,), jnp.float32),
+            pltpu.VMEM((8,), jnp.float32),
+            pltpu.VMEM((8, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 8, D), q.dtype),
+        interpret=interpret,
+    )(lens, qs, ks, vs)
+    return out[:, :1].reshape(B, Hq, 1, D)

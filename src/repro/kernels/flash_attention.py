@@ -1,0 +1,138 @@
+"""Flash attention for TPU — Pallas kernel with explicit VMEM BlockSpecs.
+
+Online-softmax blocked attention (FlashAttention, arXiv:2205.14135) rethought
+for the TPU memory hierarchy (DESIGN.md §6): instead of a CUDA thread-block
+with shared-memory tiles and warp shuffles, the kernel runs on a 3-D Pallas
+grid ``(batch*q_heads, q_blocks, kv_blocks)`` with the kv axis innermost.
+Running statistics (row max ``m``, row sum ``l``, f32 accumulator) live in
+VMEM scratch that persists across the kv-block grid steps — the Mosaic
+equivalent of the warp-register accumulators; matmul tiles are MXU-aligned
+(block sizes multiples of 128 where the head dim allows).
+
+GQA is handled in the K/V index maps (``kv_head = q_head // group``) so no
+repeated K/V is ever materialized in HBM.  Causality is enforced with an
+in-block iota mask; fully-masked kv blocks are skipped via ``@pl.when``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_k: int, kv_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + kv_offset      # absolute q position offset
+    k_start = ki * block_k
+
+    # causal block skip: block is live iff some q >= some k
+    live = (q_start + block_q - 1 >= k_start) if causal else True
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0].astype(jnp.float32)          # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos < seq_k, s, NEG_INF)   # mask padded keys
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q (B,Hq,Sq,D); k/v (B,Hkv,Sk,D) -> (B,Hq,Sq,D).
+
+    Sq/Sk padded internally to block multiples; GQA via index maps.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys are masked inside the kernel via kpos < seq_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    # decode-style offset: queries sit at the END of the kv sequence
+    kv_offset = Sk - Sq if causal else 0
+
+    grid = (B * Hq, Sq_p // block_q, Sk_p // block_k)
+
+    qs = q.reshape(B * Hq, Sq_p, D)
+    ks = k.reshape(B * Hkv, Sk_p, D)
+    vs = v.reshape(B * Hkv, Sk_p, D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, seq_k=Sk, kv_offset=kv_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, qi, ki, group=group: (h // group, ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, qi, ki, group=group: (h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running row max
+            pltpu.VMEM((block_q,), jnp.float32),      # running row sum
+            pltpu.VMEM((block_q, D), jnp.float32),    # f32 accumulator
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+
+    out = out.reshape(B, Hq, Sq_p, D)
+    return out[:, :, :Sq]

@@ -1,0 +1,125 @@
+"""xLSTM mLSTM chunkwise scan — Pallas TPU kernel.
+
+Same TPU-native structure as ssd_scan: grid ``(batch*heads, chunks)``, the
+(C~, n~, m) stabilized matrix-memory state carried across chunk steps in
+VMEM scratch.  Intra-chunk math matches ``repro.models.xlstm._chunked_mlstm``
+exactly (decay matrix ``D[q,j] = exp(u_j - g_q)``, all exponents <= 0), so
+the kernel is a drop-in for the XLA path and is validated against the
+sequential oracle ``ref.mlstm_chunk_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, lf_ref, li_ref, h_ref,
+                  C_ref, n_ref, m_ref, *, block_q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)          # (Q, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lf = lf_ref[0].astype(jnp.float32)        # (Q,)
+    li = li_ref[0].astype(jnp.float32)
+    mp = m_ref[0]                             # scalar carry
+
+    cumF = jnp.cumsum(lf)
+    u = li - cumF
+    g = jnp.maximum(mp, jax.lax.cummax(u, axis=0))       # (Q,)
+
+    diff = u[None, :] - g[:, None]                       # (q, j)
+    qi = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0)
+    ji = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+    Dm = jnp.where(qi >= ji, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    W = scores * Dm
+    num = jax.lax.dot_general(W, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    carry_coef = jnp.exp(mp - g)                         # (Q,)
+    qC = jax.lax.dot_general(q, C_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    num = num + carry_coef[:, None] * qC
+    qn = jax.lax.dot_general(q, n_ref[...][:, None],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)[:, 0]
+    # |q·n~| of the combined (intra + carry) normalizer sum
+    den = jnp.abs(W.sum(axis=1) + carry_coef * qn)
+
+    m_abs = cumF + g
+    h = num / jnp.maximum(den, jnp.exp(-m_abs))[:, None]
+    h_ref[0] = h.astype(h_ref.dtype)
+
+    gQ = g[block_q - 1]
+    wgt = jnp.exp(u - gQ)                                # (Q,)
+    C_new = jax.lax.dot_general(k * wgt[:, None], v,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    C_ref[...] = jnp.exp(mp - gQ) * C_ref[...] + C_new
+    n_ref[...] = jnp.exp(mp - gQ) * n_ref[...] \
+        + (k * wgt[:, None]).sum(axis=0)
+    m_ref[0] = cumF[block_q - 1] + gQ
+
+
+def mlstm_scan(q, k, v, lf, li, *, block_q: int = 128,
+               interpret: bool = False):
+    """q/k/v (B,S,H,D) (k pre-scaled); lf/li (B,S,H) -> h (B,S,H,D) f32.
+
+    Sequence padded to a chunk multiple with identity gates (f=1, i=0).
+    """
+    B, S, H, D = q.shape
+    Q = min(block_q, S)
+    pad = (-S) % Q
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=NEG_INF)
+    Sp = S + pad
+    nc = Sp // Q
+
+    def lay(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, Sp, -1)
+
+    lf_l = lf.transpose(0, 2, 1).reshape(B * H, Sp)
+    li_l = li.transpose(0, 2, 1).reshape(B * H, Sp)
+
+    kernel = functools.partial(_mlstm_kernel, block_q=Q)
+    h = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q), lambda b, c: (b, c)),
+            pl.BlockSpec((1, Q), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, D), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),   # C~
+            pltpu.VMEM((D,), jnp.float32),     # n~
+            pltpu.VMEM((1,), jnp.float32),     # m
+        ],
+        interpret=interpret,
+    )(lay(q), lay(k), lay(v), lf_l, li_l)
+    return h.reshape(B, H, Sp, D).transpose(0, 2, 1, 3)[:, :S]

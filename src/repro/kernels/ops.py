@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) so tests exercise the
+kernel bodies; on a real TPU backend pass ``interpret=False`` (or rely on
+the default, which sniffs the backend).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mlstm_scan import mlstm_scan as _mlstm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, kv_len, *, block_k: int = 512,
+                     interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _decode(q, k, v, kv_len, block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_q", "interpret"))
+def ssd_scan(xh, la, Bm, Cm, *, block_q: int = 128,
+             interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd(xh, la, Bm, Cm, block_q=block_q, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_q", "interpret"))
+def mlstm_scan(q, k, v, lf, li, *, block_q: int = 128,
+               interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mlstm(q, k, v, lf, li, block_q=block_q, interpret=interpret)

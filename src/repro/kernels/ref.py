@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the direct mathematical definition with no blocking,
+run in f32 — tests sweep shapes/dtypes and assert kernels match these.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q (B,Hq,Sq,D); k/v (B,Hkv,Sk,D); GQA by head repetition."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.arange(Sq)[:, None] + (Sk - Sq) >= jnp.arange(Sk)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Single-token decode: q (B,H,1,D); k/v (B,Hkv,S,D); attend to
+    positions [0..pos] (inclusive)."""
+    B, Hq, _, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    S = k.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    mask = (jnp.arange(S) <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(xh, la, Bm, Cm, h0=None):
+    """Sequential Mamba-2 SSD oracle.
+
+    xh (B,S,H,P) dt-scaled inputs; la (B,S,H) log decays (<= 0);
+    Bm/Cm (B,S,N).  Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        a = jnp.exp(la[:, t].astype(jnp.float32))          # (B,H)
+        contrib = jnp.einsum("bhp,bn->bhpn", xh[:, t].astype(jnp.float32),
+                             Bm[:, t].astype(jnp.float32))
+        h = h * a[..., None, None] + contrib
+        ys.append(jnp.einsum("bhpn,bn->bhp", h,
+                             Cm[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(xh.dtype), h
+
+
+def mlstm_chunk_ref(q, k, v, lf, li):
+    """Sequential stabilized mLSTM oracle.
+
+    q/k/v (B,S,H,D) (k pre-scaled by 1/sqrt(D)); lf/li (B,S,H) log gates.
+    Returns h (B,S,H,D) f32.
+    """
+    B, S, H, D = q.shape
+    C = jnp.zeros((B, H, D, D), jnp.float32)
+    n = jnp.zeros((B, H, D), jnp.float32)
+    m = jnp.full((B, H), -1e30, jnp.float32)
+    out = []
+    for t in range(S):
+        lft = lf[:, t].astype(jnp.float32)
+        lit = li[:, t].astype(jnp.float32)
+        mn = jnp.maximum(lft + m, lit)
+        a = jnp.exp(lft + m - mn)
+        b = jnp.exp(lit - mn)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        qt = q[:, t].astype(jnp.float32)
+        C = a[..., None, None] * C + b[..., None, None] \
+            * jnp.einsum("bhd,bhe->bhde", kt, vt)
+        n = a[..., None] * n + b[..., None] * kt
+        m = mn
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m))
+        out.append(num / den[..., None])
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD scan — Pallas TPU kernel.
+
+TPU adaptation of the SSD chunked algorithm (arXiv:2405.21060): the Pallas
+grid is ``(batch*heads, chunks)`` with the chunk axis innermost; because TPU
+grid steps execute sequentially on a core, the inter-chunk recurrent state
+``h (N, P)`` lives in VMEM scratch and is carried across chunk steps — no
+HBM round-trip for the recurrence (the CUDA version needs a separate kernel
+launch or grid-sync for this).  Intra-chunk work is two MXU matmuls
+(``C Bᵀ ⊙ L`` and the state/output products) on (Q, N)/(Q, P) VMEM tiles.
+
+Outputs: per-position y and (at the last chunk) the final state — the same
+contract as the pure-jnp oracle ``ref.ssd_chunk_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xh_ref, la_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                block_q: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xh = xh_ref[0].astype(jnp.float32)        # (Q, P)
+    la = la_ref[0].astype(jnp.float32)        # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+
+    cum = jnp.cumsum(la)                      # (Q,)
+    # intra-chunk decay L[q, j] = exp(cum_q - cum_j), q >= j
+    diff = cum[:, None] - cum[None, :]
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+    L = jnp.where(q_idx >= j_idx, jnp.exp(diff), 0.0)
+
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    W = CB * L
+    y_intra = jax.lax.dot_general(W, xh, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    h = h_ref[...]                            # (N, P)
+    y_off = jax.lax.dot_general(Cm, h, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.exp(cum)[:, None]
+    y_ref[0] = (y_intra + y_off).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_end) h + sum_j exp(cum_end - cum_j) B_j xh_j
+    decay_to_end = jnp.exp(cum[-1] - cum)     # (Q,)
+    contrib = jax.lax.dot_general(
+        Bm * decay_to_end[:, None], xh, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (N, P)
+    h_ref[...] = h * jnp.exp(cum[-1]) + contrib
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan(xh, la, Bm, Cm, *, block_q: int = 128,
+             interpret: bool = False):
+    """xh (B,S,H,P); la (B,S,H); Bm/Cm (B,S,N) -> (y (B,S,H,P),
+    h_final (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(block_q, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    # layout: (B*H, S, *) with B,C broadcast over heads
+    xh_l = xh.transpose(0, 2, 1, 3).reshape(B * H, Sp, P)
+    la_l = la.transpose(0, 2, 1).reshape(B * H, Sp)
+    Bm_l = jnp.broadcast_to(Bm[:, None], (B, H, Sp, N)).reshape(B * H, Sp, N)
+    Cm_l = jnp.broadcast_to(Cm[:, None], (B, H, Sp, N)).reshape(B * H, Sp, N)
+
+    kernel = functools.partial(_ssd_kernel, block_q=Q)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, Q), lambda h, c: (h, c)),
+            pl.BlockSpec((1, Q, N), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, N, P), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, P), xh.dtype),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xh_l, la_l, Bm_l, Cm_l)
+
+    y = y.reshape(B, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+    h_final = hout.reshape(B, H, N, P).transpose(0, 1, 3, 2)  # (B,H,P,N)
+    return y, h_final

@@ -1,0 +1,146 @@
+"""Production training launcher.
+
+Fault-tolerance posture (exercised end-to-end by ``examples/train_lm.py``):
+  * async checkpointing every ``ckpt_every`` steps (atomic + checksummed);
+  * automatic resume from the latest checkpoint (elastic: the restore path
+    re-shards onto whatever mesh this incarnation has);
+  * deterministic data: batch = f(seed, step), so resume is exact;
+  * straggler/heartbeat monitor: per-step wall times feed an EWMA; steps
+    slower than ``straggler_factor`` x the EWMA are logged (on a real
+    cluster this signal feeds the reschedule/despecle policy);
+  * preemption hook: SIGTERM requests a final blocking checkpoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_debug_mesh, mesh_shape_dict
+from repro.models.params import param_shardings
+from repro.optim import adamw
+from repro.parallel.context import parallel_context
+from repro.parallel.sharding import default_plan
+from repro.train import steps as S
+
+
+@dataclass
+class RunConfig:
+    arch: str = "olmo-1b"
+    reduced: bool = True            # CPU-sized model for this container
+    steps: int = 50
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    straggler_factor: float = 3.0
+    data_mesh: tuple = (1, 1)
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float):
+        self.factor = factor
+        self.ewma = None
+        self.flagged: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        self.ewma = dt if self.ewma is None else 0.9 * self.ewma + 0.1 * dt
+        if slow:
+            self.flagged.append((step, dt))
+        return slow
+
+
+def train(run: RunConfig, *, verbose: bool = True):
+    cfg = registry.get(run.arch)
+    if run.reduced:
+        cfg = cfg.reduced()
+    mesh = make_debug_mesh(*run.data_mesh)
+    plan = default_plan(cfg, mesh_shape_dict(mesh)).override(
+        seq=None, heads=None, kv_heads=None,
+        mlp="model" if run.data_mesh[1] > 1 else None,
+        vocab="model" if run.data_mesh[1] > 1 else None)
+    opt_cfg = adamw.OptConfig(lr=3e-4, warmup_steps=10,
+                              total_steps=run.steps)
+    step_fn, model = S.make_train_step(cfg, opt_cfg)
+    ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=run.seq_len,
+                                global_batch=run.global_batch))
+    mgr = CheckpointManager(run.ckpt_dir, retain=2)
+    mon = StragglerMonitor(run.straggler_factor)
+
+    stop = {"now": False}
+
+    def _sigterm(signum, frame):
+        stop["now"] = True
+
+    try:
+        signal.signal(signal.SIGTERM, _sigterm)
+    except ValueError:
+        pass  # not on the main thread (tests)
+
+    with parallel_context(mesh, plan):
+        params = model.init(jax.random.PRNGKey(0))
+        shards = param_shardings(model.defs, mesh, plan)
+        params = jax.tree.map(jax.device_put, params, shards)
+        opt = adamw.init_state(params)
+        start = 0
+        if mgr.latest_step() is not None:
+            (params, opt), start = mgr.restore((params, opt))
+            if verbose:
+                print(f"resumed from step {start}")
+        jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+        losses = []
+        for step in range(start, run.steps):
+            t0 = time.time()
+            batch = ds.batch(step)
+            params, opt, metrics = jstep(params, opt, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            if mon.observe(step, dt) and verbose:
+                print(f"[straggler] step {step} took {dt:.2f}s "
+                      f"(ewma {mon.ewma:.2f}s)")
+            if verbose and (step % 10 == 0 or step == run.steps - 1):
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} ({dt:.2f}s)")
+            if (step + 1) % run.ckpt_every == 0 or stop["now"]:
+                mgr.save(step + 1, (params, opt), blocking=stop["now"])
+                if stop["now"]:
+                    if verbose:
+                        print(f"preempted at {step}; checkpoint saved")
+                    break
+        mgr.wait()
+    return losses, mon
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    choices=list(registry.ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the published config (needs a real pod)")
+    args = ap.parse_args()
+    run = RunConfig(arch=args.arch, reduced=not args.full_size,
+                    steps=args.steps, seq_len=args.seq_len,
+                    global_batch=args.global_batch, ckpt_dir=args.ckpt_dir)
+    losses, mon = train(run)
+    print(f"final loss {losses[-1]:.4f} (started {losses[0]:.4f}); "
+          f"{len(mon.flagged)} straggler events")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,435 @@
+"""Transformer building blocks: norms, rotary embeddings, attention (MHA /
+GQA / MQA / MLA), gated FFNs, embeddings.
+
+Conventions:
+  * activations are ``cfg.dtype`` (bf16); softmax/norm statistics in f32.
+  * params are plain nested dicts built from ``repro.models.params`` defs.
+  * shapes: x (B, S, D); attention internals (B, H, S, hd).
+  * every block is annotated with a communication region so the profiler
+    attributes GSPMD collectives to it (the paper's technique as a
+    first-class training-framework feature).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.parallel.context import shard_act
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def nonparam_layernorm(x, eps: float = 1e-6):
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(cfg, p, x):
+    if cfg.norm == "nonparam_ln":
+        return nonparam_layernorm(x)
+    return rmsnorm(x, p)
+
+
+def norm_def(cfg) -> Optional[ParamDef]:
+    if cfg.norm == "nonparam_ln":
+        return None
+    return ParamDef((cfg.d_model,), ("embed",), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) int32 -> cos/sin (..., S, head_dim//2)."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions3, head_dim: int, theta: float, sections):
+    """M-RoPE (Qwen2-VL): positions3 (3, B, S) for (t, h, w); the rotary
+    half-dims are split into `sections` (sum == head_dim//2), each section
+    rotating with its own positional stream."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)             # (half,)
+    ang = positions3[..., None].astype(jnp.float32) * freqs  # (3,B,S,half)
+    parts_c, parts_s = [], []
+    start = 0
+    for i, sec in enumerate(sections):
+        sl = slice(start, start + sec)
+        parts_c.append(jnp.cos(ang[i, ..., sl]))
+        parts_s.append(jnp.sin(ang[i, ..., sl]))
+        start += sec
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, H, S, hd); cos/sin (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        c = cos[None, None, :, :]
+        s = sin[None, None, :, :]
+    else:
+        c = cos[:, None, :, :]
+        s = sin[:, None, :, :]
+    c, s = c.astype(x.dtype), s.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+def repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)) \
+              .reshape(b, h * n_rep, s, d)
+
+
+def sdpa(q, k, v, mask=None, scale: Optional[float] = None):
+    """Scaled dot-product attention, f32 softmax.
+
+    q (B,Hq,Sq,hd), k/v (B,Hkv,Sk,hd); Hq % Hkv == 0.
+    mask broadcastable to (B,1,Sq,Sk); True = attend.
+    """
+    n_rep = q.shape[1] // k.shape[1]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def chunked_sdpa(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                 scale: Optional[float] = None):
+    """Flash-style attention on the XLA path: lax.scan over KV blocks with
+    online-softmax running stats — never materializes the (Sq, Sk) score
+    matrix in HBM (the f32 score chains dominate the memory roofline term of
+    every 32k prefill cell; see EXPERIMENTS.md §Perf).  Same contract as
+    ``sdpa`` with a causal flag (queries aligned to the end of the keys).
+    """
+    n_rep = q.shape[1] // k.shape[1]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    C = min(chunk, Sk)
+    pad = (-Sk) % C
+    if pad:
+        kp = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        k = jnp.pad(k, kp)
+        v = jnp.pad(v, kp)
+    nc = (Sk + pad) // C
+    kc = k.reshape(B, H, nc, C, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, C, D).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + (Sk - Sq)          # decode-style offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) \
+            * scale
+        k_pos = ci * C + jnp.arange(C)
+        valid = (k_pos < Sk)[None, None, None, :]
+        if causal:
+            valid = valid & (q_pos[None, None, :, None]
+                             >= k_pos[None, None, None, :])
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, H, Sq), -1e30, jnp.float32),
+            jnp.zeros((B, H, Sq), jnp.float32),
+            jnp.zeros((B, H, Sq, D), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.arange(nc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attend(cfg, q, k, v, *, causal: bool = True, mask=None):
+    """Dispatch between naive sdpa and chunked flash-style attention."""
+    if getattr(cfg, "attn_impl", "naive") == "chunked" and mask is None:
+        return chunked_sdpa(q, k, v, causal=causal,
+                            chunk=getattr(cfg, "attn_chunk", 1024))
+    if mask is None and causal:
+        mask = causal_mask(q.shape[2], k.shape[2],
+                           offset=k.shape[2] - q.shape[2])
+    return sdpa(q, k, v, mask=mask)
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0):
+    """True where query position (offset+i) >= key position j."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    return (qi >= kj)[None, None]
+
+
+def decode_mask(sk_max: int, pos):
+    """(1,1,1,Sk) mask: attend to keys [0 .. pos] of a preallocated cache."""
+    kj = jnp.arange(sk_max)[None, None, None, :]
+    return kj <= pos
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (covers MHA / GQA / MQA)
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg) -> dict:
+    hd = cfg.head_dim
+    d = cfg.d_model
+    defs = {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="zeros")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="zeros")
+    return defs
+
+
+def attn_cache_shape(cfg, batch: int, s_max: int) -> dict:
+    hd = cfg.head_dim
+    return {
+        "k": ((batch, cfg.n_kv_heads, s_max, hd),
+              ("batch", "kv_heads", "kv_seq", None)),
+        "v": ((batch, cfg.n_kv_heads, s_max, hd),
+              ("batch", "kv_heads", "kv_seq", None)),
+    }
+
+
+def _qkv(cfg, p, x, cos, sin):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard_act(q, ("batch", "heads", "seq", None))
+    return q, k, v
+
+
+def attn_train(cfg, p, x, cos, sin):
+    """Bidirectionality is decided by the mask; causal for LM training."""
+    q, k, v = _qkv(cfg, p, x, cos, sin)
+    out = attend(cfg, q, k, v, causal=True)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+
+
+def attn_prefill(cfg, p, x, cos, sin, s_max: int):
+    sq = x.shape[1]
+    q, k, v = _qkv(cfg, p, x, cos, sin)
+    out = attend(cfg, q, k, v, causal=True)
+    pad = [(0, 0), (0, 0), (0, s_max - sq), (0, 0)]
+    cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"]), cache
+
+
+def attn_decode(cfg, p, x, cos, sin, cache: dict, pos):
+    """x (B,1,D); cache k/v (B,Hkv,S_max,hd); pos scalar int32."""
+    q, k_new, v_new = _qkv(cfg, p, x, cos, sin)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=2)
+    out = sdpa(q, k, v, mask=decode_mask(k.shape[2], pos))
+    return (jnp.einsum("bhsk,hkd->bsd", out, p["wo"]),
+            {"k": k, "v": v})
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-V2 style latent KV)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "wdq": ParamDef((d, m.q_lora), ("embed", None)),
+        "q_norm": ParamDef((m.q_lora,), (None,), init="zeros"),
+        "wuq": ParamDef((m.q_lora, h, m.nope_dim + m.rope_dim),
+                        (None, "heads", None)),
+        "wdkv": ParamDef((d, m.kv_lora), ("embed", None)),
+        "kv_norm": ParamDef((m.kv_lora,), (None,), init="zeros"),
+        "wuk": ParamDef((m.kv_lora, h, m.nope_dim), (None, "heads", None)),
+        "wuv": ParamDef((m.kv_lora, h, m.v_dim), (None, "heads", None)),
+        "wkr": ParamDef((d, m.rope_dim), ("embed", None)),
+        "wo": ParamDef((h, m.v_dim, d), ("heads", None, "embed")),
+    }
+
+
+def mla_cache_shape(cfg, batch: int, s_max: int) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": ((batch, s_max, m.kv_lora), ("batch", "kv_seq", None)),
+        "k_rope": ((batch, s_max, m.rope_dim), ("batch", "kv_seq", None)),
+    }
+
+
+def _mla_q(cfg, p, x, cos, sin):
+    m = cfg.mla
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bhsk", cq, p["wuq"])
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latents(cfg, p, x, cos, sin):
+    c_kv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wdkv"]), p["kv_norm"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wkr"])
+    k_rope = apply_rope(k_rope[:, None], cos, sin)[:, 0]   # (B,S,rope)
+    return c_kv, k_rope
+
+
+def mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope, mask):
+    """Absorbed-matrix MLA attention over latent cache.
+
+    q_nope (B,H,Sq,nope), q_rope (B,H,Sq,rope);
+    c_kv (B,Sk,kv_lora), k_rope (B,Sk,rope).
+    """
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    # Absorb W_uk into q: (B,H,Sq,kv_lora)
+    q_eff = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["wuk"])
+    scores = (jnp.einsum("bhsr,btr->bhst", q_eff, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhsk,btk->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhst,btr->bhsr", probs, c_kv)
+    out = jnp.einsum("bhsr,rhv->bhsv", ctx, p["wuv"])
+    return jnp.einsum("bhsv,hvd->bsd", out, p["wo"])
+
+
+def mla_train(cfg, p, x, cos, sin):
+    sq = x.shape[1]
+    q_nope, q_rope = _mla_q(cfg, p, x, cos, sin)
+    c_kv, k_rope = _mla_latents(cfg, p, x, cos, sin)
+    return mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope,
+                      causal_mask(sq, sq))
+
+
+def mla_prefill(cfg, p, x, cos, sin, s_max: int):
+    sq = x.shape[1]
+    q_nope, q_rope = _mla_q(cfg, p, x, cos, sin)
+    c_kv, k_rope = _mla_latents(cfg, p, x, cos, sin)
+    out = mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope,
+                     causal_mask(sq, sq))
+    pad = [(0, 0), (0, s_max - sq), (0, 0)]
+    cache = {"c_kv": jnp.pad(c_kv, pad), "k_rope": jnp.pad(k_rope, pad)}
+    return out, cache
+
+
+def mla_decode(cfg, p, x, cos, sin, cache: dict, pos):
+    q_nope, q_rope = _mla_q(cfg, p, x, cos, sin)
+    c_new, kr_new = _mla_latents(cfg, p, x, cos, sin)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    out = mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope,
+                     decode_mask(c_kv.shape[1], pos))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_defs(cfg, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    return {
+        "w_gate": ParamDef((d, d_ff), ("embed", "mlp")),
+        "w_up": ParamDef((d, d_ff), ("embed", "mlp")),
+        "w_down": ParamDef((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def ffn(cfg, p, x):
+    act = jax.nn.gelu if cfg.act == "geglu" else jax.nn.silu
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = act(g) * u
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg) -> dict:
+    defs = {
+        # stddev 1/sqrt(d): keeps tied-LM-head logits O(1) at init
+        "tok": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                        scale=cfg.d_model ** -0.5),
+        "out_norm": norm_def(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_padded),
+                                   ("embed", "vocab"))
+    return {k: v for k, v in defs.items() if v is not None}
+
+
+def embed_tokens(cfg, p, tokens):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard_act(x, ("batch", "seq", "act_embed"))
+
+
+def lm_logits(cfg, p, x):
+    """Final norm + LM head; logits in f32, vocab padded (masked in loss)."""
+    x = norm(cfg, p.get("out_norm"), x)
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    # vocab-parallel logits (Megatron-style loss); seq replicated here even
+    # under sequence parallelism — the loss reduces it immediately.
+    return shard_act(logits, ("batch", None, "vocab"))

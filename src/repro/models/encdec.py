@@ -1,0 +1,190 @@
+"""Encoder-decoder model (SeamlessM4T-medium backbone).
+
+The audio/text frontends are STUBS per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, S_src, d) for the encoder; the
+decoder is a standard causal transformer with cross-attention over the
+encoder output.  Comm regions: ``encoder``, ``self_attn``, ``cross_attn``,
+``mlp``, ``lm_head``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regions import comm_region
+from repro.models import blocks as B
+from repro.models.params import (ParamDef, abstract_params, axes_tree,
+                                 init_params, stack_defs)
+from repro.parallel.context import shard_act
+
+
+def cross_attn_defs(cfg) -> dict:
+    hd = cfg.head_dim
+    d = cfg.d_model
+    return {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", None)),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", None, "embed")),
+    }
+
+
+def cross_attend(cfg, p, x, enc_kv: dict, enc_mask=None):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    out = B.sdpa(q, enc_kv["k"], enc_kv["v"], mask=enc_mask)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+
+
+def cross_kv(cfg, p, enc_out):
+    return {"k": jnp.einsum("bsd,dhk->bhsk", enc_out, p["wk"]),
+            "v": jnp.einsum("bsd,dhk->bhsk", enc_out, p["wv"])}
+
+
+def enc_layer_defs(cfg) -> dict:
+    return {"norm1": B.norm_def(cfg), "attn": B.attn_defs(cfg),
+            "norm2": B.norm_def(cfg), "ffn": B.ffn_defs(cfg)}
+
+
+def dec_layer_defs(cfg) -> dict:
+    return {"norm1": B.norm_def(cfg), "self_attn": B.attn_defs(cfg),
+            "norm_c": B.norm_def(cfg), "cross": cross_attn_defs(cfg),
+            "norm2": B.norm_def(cfg), "ffn": B.ffn_defs(cfg)}
+
+
+class EncDec:
+    def __init__(self, cfg):
+        assert cfg.n_enc_layers > 0
+        self.cfg = cfg
+        self.defs = {
+            "embed": B.embed_defs(cfg),
+            "enc": stack_defs(enc_layer_defs(cfg), cfg.n_enc_layers),
+            "enc_norm": B.norm_def(cfg),
+            "dec": stack_defs(dec_layer_defs(cfg), cfg.n_layers),
+        }
+        self.defs = {k: v for k, v in self.defs.items() if v is not None}
+
+    def init(self, key):
+        return init_params(self.defs, key)
+
+    def abstract(self, mesh, plan):
+        return abstract_params(self.defs, mesh, plan)
+
+    def axes(self):
+        return axes_tree(self.defs)
+
+    # -- encoder ----------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = shard_act(x, ("batch", "seq", "act_embed"))
+        cos, sin = B.rope_angles(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 cfg.head_dim, cfg.rope_theta)
+
+        def body(h, lp):
+            with comm_region("encoder"):
+                a = B.norm(cfg, lp.get("norm1"), h)
+                q = jnp.einsum("bsd,dhk->bhsk", a, lp["attn"]["wq"])
+                k = jnp.einsum("bsd,dhk->bhsk", a, lp["attn"]["wk"])
+                v = jnp.einsum("bsd,dhk->bhsk", a, lp["attn"]["wv"])
+                q = B.apply_rope(q, cos, sin)
+                k = B.apply_rope(k, cos, sin)
+                o = B.sdpa(q, k, v)            # bidirectional
+                h = h + jnp.einsum("bhsk,hkd->bsd", o, lp["attn"]["wo"])
+                h = h + B.ffn(cfg, lp["ffn"], B.norm(cfg, lp.get("norm2"), h))
+                h = shard_act(h, ("batch", "seq", "act_embed"))
+            return h, None
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return B.norm(cfg, params.get("enc_norm"), x)
+
+    # -- decoder ----------------------------------------------------------
+    def _dec_layer(self, lp, x, ctx_cos, ctx_sin, enc_kv, mode: str,
+                   cache=None, pos=None, s_max: int = 0):
+        cfg = self.cfg
+        new_cache = None
+        with comm_region("self_attn"):
+            h = B.norm(cfg, lp.get("norm1"), x)
+            if mode == "train":
+                x = x + B.attn_train(cfg, lp["self_attn"], h,
+                                     ctx_cos, ctx_sin)
+            elif mode == "prefill":
+                o, new_cache = B.attn_prefill(cfg, lp["self_attn"], h,
+                                              ctx_cos, ctx_sin, s_max)
+                x = x + o
+            else:
+                o, new_cache = B.attn_decode(cfg, lp["self_attn"], h,
+                                             ctx_cos, ctx_sin, cache, pos)
+                x = x + o
+        with comm_region("cross_attn"):
+            h = B.norm(cfg, lp.get("norm_c"), x)
+            x = x + cross_attend(cfg, lp["cross"], h, enc_kv)
+        with comm_region("mlp"):
+            x = x + B.ffn(cfg, lp["ffn"], B.norm(cfg, lp.get("norm2"), x))
+        return shard_act(x, ("batch", "seq", "act_embed")), new_cache
+
+    def train_logits(self, params, batch: dict):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        with comm_region("embed"):
+            x = B.embed_tokens(cfg, params["embed"], batch["tokens"])
+        cos, sin = B.rope_angles(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 cfg.head_dim, cfg.rope_theta)
+
+        def body(h, lp):
+            enc_kv = cross_kv(cfg, lp["cross"], enc_out)
+            h, _ = self._dec_layer(lp, h, cos, sin, enc_kv, "train")
+            return h, None
+        body = jax.checkpoint(body) if cfg.remat == "full" else body
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        with comm_region("lm_head"):
+            logits = B.lm_logits(cfg, params["embed"], x)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def prefill(self, params, batch: dict, s_max: int):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        with comm_region("embed"):
+            x = B.embed_tokens(cfg, params["embed"], batch["tokens"])
+        cos, sin = B.rope_angles(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 cfg.head_dim, cfg.rope_theta)
+
+        def body(h, lp):
+            enc_kv = cross_kv(cfg, lp["cross"], enc_out)
+            h, cache = self._dec_layer(lp, h, cos, sin, enc_kv, "prefill",
+                                       s_max=s_max)
+            return h, (cache, enc_kv)
+        x, (self_caches, enc_kvs) = jax.lax.scan(body, x, params["dec"])
+        with comm_region("lm_head"):
+            logits = B.lm_logits(cfg, params["embed"], x[:, -1:])
+        return logits, (self_caches, enc_kvs)
+
+    def decode(self, params, caches, token, pos):
+        cfg = self.cfg
+        self_caches, enc_kvs = caches
+        with comm_region("embed"):
+            x = B.embed_tokens(cfg, params["embed"], token)
+        cos, sin = B.rope_angles(jnp.asarray(pos, jnp.int32)[None],
+                                 cfg.head_dim, cfg.rope_theta)
+
+        def body(h, inp):
+            lp, cache, enc_kv = inp
+            h, cache = self._dec_layer(lp, h, cos, sin, enc_kv, "decode",
+                                       cache=cache, pos=pos)
+            return h, cache
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["dec"], self_caches, enc_kvs))
+        with comm_region("lm_head"):
+            logits = B.lm_logits(cfg, params["embed"], x)
+        return logits, (new_caches, enc_kvs)
+
+    def cache_shapes(self, batch: int, s_max: int, s_src: int) -> tuple:
+        cfg = self.cfg
+        L = cfg.n_layers
+        hd = cfg.head_dim
+        self_c = {k: ((L,) + shape, ("layers",) + axes)
+                  for k, (shape, axes)
+                  in B.attn_cache_shape(cfg, batch, s_max).items()}
+        enc_kv = {k: ((L, batch, cfg.n_kv_heads, s_src, hd),
+                      ("layers", "batch", "kv_heads", None, None))
+                  for k in ("k", "v")}
+        return (self_c, enc_kv)

@@ -1,0 +1,461 @@
+"""Decoder-only LM assembly for all assigned architecture families.
+
+A model is a stack of *layer groups*; each group is a run of identical
+layers whose parameters are stacked on a leading ``layers`` axis and driven
+by ``lax.scan`` (compact HLO for the 512-device dry-run; the comm profiler
+multiplies collectives by trip count).  Families:
+
+  dense / vlm    pre-norm attention (GQA/MQA or MLA) + gated FFN
+  moe            pre-norm attention + GShard MoE FFN
+  ssm            xLSTM mLSTM blocks (no FFN, assigned d_ff = 0)
+  hybrid         zamba2: Mamba-2 backbone + shared attention block every
+                 ``shared_attn_every`` layers (concat with the initial
+                 embedding, per-invocation down-projection)
+
+Every phase is wrapped in a communication region (the paper's technique):
+``embed``, ``attn``, ``mlp``, ``moe``, ``ssm``, ``shared_attn``, ``lm_head``
+— the HLO analyzer attributes GSPMD collectives to these.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regions import comm_region
+from repro.models import blocks as B
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+from repro.models.params import (ParamDef, abstract_params, axes_tree,
+                                 init_params, is_def, stack_defs)
+from repro.parallel.context import shard_act
+
+
+# ---------------------------------------------------------------------------
+# Layer definitions per kind
+# ---------------------------------------------------------------------------
+
+def _attn_kind(cfg) -> str:
+    return "mla" if cfg.mla is not None else "gqa"
+
+
+def layer_defs(cfg, kind: str) -> dict:
+    if kind == "attn_ffn":
+        d = {"norm1": B.norm_def(cfg),
+             "attn": (B.mla_defs(cfg) if cfg.mla is not None
+                      else B.attn_defs(cfg)),
+             "norm2": B.norm_def(cfg),
+             "ffn": B.ffn_defs(cfg)}
+    elif kind == "attn_moe":
+        d = {"norm1": B.norm_def(cfg),
+             "attn": (B.mla_defs(cfg) if cfg.mla is not None
+                      else B.attn_defs(cfg)),
+             "norm2": B.norm_def(cfg),
+             "moe": MOE.moe_defs(cfg)}
+    elif kind == "mamba":
+        d = {"norm1": B.norm_def(cfg), "ssm": M.mamba_defs(cfg)}
+    elif kind == "mlstm":
+        d = {"norm1": B.norm_def(cfg), "ssm": X.mlstm_defs(cfg)}
+    else:
+        raise ValueError(kind)
+    return {k: v for k, v in d.items() if v is not None}
+
+
+def layer_plan(cfg) -> list:
+    """[(kind, n_layers)] — hybrid handled separately."""
+    if cfg.family in ("dense", "vlm"):
+        return [("attn_ffn", cfg.n_layers)]
+    if cfg.family == "moe":
+        return [("attn_moe", cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [("mlstm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        chunks = []
+        left = cfg.n_layers
+        while left > 0:
+            c = min(k, left)
+            chunks.append(("mamba", c))
+            left -= c
+        return chunks
+    raise ValueError(cfg.family)
+
+
+def _shared_block_cfg(cfg):
+    """zamba2 shared attention block operates at width 2*d."""
+    from dataclasses import replace
+    return replace(cfg, d_model=2 * cfg.d_model,
+                   head_dim=2 * cfg.d_model // cfg.n_heads,
+                   mla=None, moe=None)
+
+
+def shared_defs(cfg) -> dict:
+    scfg = _shared_block_cfg(cfg)
+    n_inv = max(1, len(layer_plan(cfg)) - 1) if cfg.family == "hybrid" else 0
+    return {
+        "norm1": B.norm_def(scfg),
+        "attn": B.attn_defs(scfg),
+        "norm2": B.norm_def(scfg),
+        "ffn": B.ffn_defs(scfg, cfg.d_ff),
+        # per-invocation (unshared) down projections 2d -> d
+        "down": ParamDef((n_inv, 2 * cfg.d_model, cfg.d_model),
+                         ("layers", "mlp", "embed")),
+    }
+
+
+def model_defs(cfg) -> dict:
+    defs = {"embed": B.embed_defs(cfg), "groups": []}
+    for kind, n in layer_plan(cfg):
+        defs["groups"].append(stack_defs(layer_defs(cfg, kind), n))
+    defs["groups"] = tuple(defs["groups"])
+    if cfg.family == "hybrid":
+        defs["shared"] = shared_defs(cfg)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Rotary context
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Ctx:
+    cos: Optional[jnp.ndarray] = None
+    sin: Optional[jnp.ndarray] = None
+    pos: Optional[jnp.ndarray] = None      # decode: scalar position
+    s_max: int = 0                         # cache length
+
+
+def make_rope(cfg, positions, vision_grid: Optional[tuple] = None):
+    """positions (S,) or (B,S); M-RoPE builds 3 position streams."""
+    if cfg.family == "hybrid":
+        # the only attention is the shared block at width 2*d
+        hd = 2 * cfg.d_model // cfg.n_heads
+    elif cfg.mla is not None:
+        hd = cfg.mla.rope_dim
+    else:
+        hd = cfg.head_dim
+    if cfg.mrope_sections is not None:
+        # Stub M-RoPE streams: vision prefix uses (t=0, h, w) grid
+        # coordinates; text continues with t = h = w = position.
+        if positions.ndim == 1:
+            positions = positions[None]
+        t = positions
+        h = positions
+        w = positions
+        if vision_grid is not None:
+            v, gh, gw = vision_grid
+            hh = jnp.arange(v) // gw
+            ww = jnp.arange(v) % gw
+            t = t.at[:, :v].set(0) if hasattr(t, "at") else t
+            h = h.at[:, :v].set(hh[None]) if hasattr(h, "at") else h
+            w = w.at[:, :v].set(ww[None]) if hasattr(w, "at") else w
+        p3 = jnp.stack([t, h, w])          # (3,B,S)
+        return B.mrope_angles(p3, hd, cfg.rope_theta, cfg.mrope_sections)
+    return B.rope_angles(positions, hd, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def layer_train(cfg, kind: str, p, x, ctx: Ctx):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_ffn", "attn_moe"):
+        with comm_region("attn"):
+            h = B.norm(cfg, p.get("norm1"), x)
+            if cfg.mla is not None:
+                h = B.mla_train(cfg, p["attn"], h, ctx.cos, ctx.sin)
+            else:
+                h = B.attn_train(cfg, p["attn"], h, ctx.cos, ctx.sin)
+            x = x + h
+        if kind == "attn_ffn":
+            with comm_region("mlp"):
+                x = x + B.ffn(cfg, p["ffn"],
+                              B.norm(cfg, p.get("norm2"), x))
+        else:
+            with comm_region("moe"):
+                y, aux = MOE.moe_ffn(cfg, p["moe"],
+                                     B.norm(cfg, p.get("norm2"), x))
+                x = x + y
+    elif kind == "mamba":
+        with comm_region("ssm"):
+            x = x + M.mamba_train(cfg, p["ssm"],
+                                  B.norm(cfg, p.get("norm1"), x))
+    elif kind == "mlstm":
+        with comm_region("ssm"):
+            x = x + X.mlstm_train(cfg, p["ssm"],
+                                  B.norm(cfg, p.get("norm1"), x))
+    else:
+        raise ValueError(kind)
+    return shard_act(x, ("batch", "seq", "act_embed")), aux
+
+
+def layer_prefill(cfg, kind: str, p, x, ctx: Ctx):
+    """Returns (x, cache) for one layer."""
+    if kind in ("attn_ffn", "attn_moe"):
+        with comm_region("attn"):
+            h = B.norm(cfg, p.get("norm1"), x)
+            if cfg.mla is not None:
+                h, cache = B.mla_prefill(cfg, p["attn"], h, ctx.cos,
+                                         ctx.sin, ctx.s_max)
+            else:
+                h, cache = B.attn_prefill(cfg, p["attn"], h, ctx.cos,
+                                          ctx.sin, ctx.s_max)
+            x = x + h
+        if kind == "attn_ffn":
+            with comm_region("mlp"):
+                x = x + B.ffn(cfg, p["ffn"],
+                              B.norm(cfg, p.get("norm2"), x))
+        else:
+            with comm_region("moe"):
+                y, _ = MOE.moe_ffn(cfg, p["moe"],
+                                   B.norm(cfg, p.get("norm2"), x))
+                x = x + y
+    elif kind == "mamba":
+        with comm_region("ssm"):
+            h, cache = M.mamba_train(cfg, p["ssm"],
+                                     B.norm(cfg, p.get("norm1"), x),
+                                     return_state=True)
+            x = x + h
+    elif kind == "mlstm":
+        with comm_region("ssm"):
+            h, cache = X.mlstm_train(cfg, p["ssm"],
+                                     B.norm(cfg, p.get("norm1"), x),
+                                     return_state=True)
+            x = x + h
+    else:
+        raise ValueError(kind)
+    return shard_act(x, ("batch", "seq", "act_embed")), cache
+
+
+def layer_decode(cfg, kind: str, p, x, ctx: Ctx, cache):
+    if kind in ("attn_ffn", "attn_moe"):
+        with comm_region("attn"):
+            h = B.norm(cfg, p.get("norm1"), x)
+            if cfg.mla is not None:
+                h, cache = B.mla_decode(cfg, p["attn"], h, ctx.cos,
+                                        ctx.sin, cache, ctx.pos)
+            else:
+                h, cache = B.attn_decode(cfg, p["attn"], h, ctx.cos,
+                                         ctx.sin, cache, ctx.pos)
+            x = x + h
+        if kind == "attn_ffn":
+            with comm_region("mlp"):
+                x = x + B.ffn(cfg, p["ffn"],
+                              B.norm(cfg, p.get("norm2"), x))
+        else:
+            with comm_region("moe"):
+                y, _ = MOE.moe_ffn(cfg, p["moe"],
+                                   B.norm(cfg, p.get("norm2"), x))
+                x = x + y
+    elif kind == "mamba":
+        with comm_region("ssm"):
+            h, cache = M.mamba_decode(cfg, p["ssm"],
+                                      B.norm(cfg, p.get("norm1"), x), cache)
+            x = x + h
+    elif kind == "mlstm":
+        with comm_region("ssm"):
+            h, cache = X.mlstm_decode(cfg, p["ssm"],
+                                      B.norm(cfg, p.get("norm1"), x), cache)
+            x = x + h
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def layer_cache_shape(cfg, kind: str, batch: int, s_max: int) -> dict:
+    if kind in ("attn_ffn", "attn_moe"):
+        if cfg.mla is not None:
+            return B.mla_cache_shape(cfg, batch, s_max)
+        return B.attn_cache_shape(cfg, batch, s_max)
+    if kind == "mamba":
+        return M.mamba_state_shape(cfg, batch)
+    if kind == "mlstm":
+        return X.mlstm_state_shape(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block (zamba2)
+# ---------------------------------------------------------------------------
+
+def shared_train(cfg, sp, x, x0, inv: int, ctx: Ctx):
+    scfg = _shared_block_cfg(cfg)
+    with comm_region("shared_attn"):
+        u = jnp.concatenate([x, x0], axis=-1)
+        h = B.norm(scfg, sp.get("norm1"), u)
+        u = u + B.attn_train(scfg, sp["attn"], h, ctx.cos, ctx.sin)
+        u = u + B.ffn(scfg, sp["ffn"], B.norm(scfg, sp.get("norm2"), u))
+        return x + jnp.einsum("bsk,kd->bsd", u, sp["down"][inv])
+
+
+def shared_prefill(cfg, sp, x, x0, inv: int, ctx: Ctx):
+    scfg = _shared_block_cfg(cfg)
+    with comm_region("shared_attn"):
+        u = jnp.concatenate([x, x0], axis=-1)
+        h = B.norm(scfg, sp.get("norm1"), u)
+        h, cache = B.attn_prefill(scfg, sp["attn"], h, ctx.cos, ctx.sin,
+                                  ctx.s_max)
+        u = u + h
+        u = u + B.ffn(scfg, sp["ffn"], B.norm(scfg, sp.get("norm2"), u))
+        return x + jnp.einsum("bsk,kd->bsd", u, sp["down"][inv]), cache
+
+
+def shared_decode(cfg, sp, x, x0, inv: int, ctx: Ctx, cache):
+    scfg = _shared_block_cfg(cfg)
+    with comm_region("shared_attn"):
+        u = jnp.concatenate([x, x0], axis=-1)
+        h = B.norm(scfg, sp.get("norm1"), u)
+        h, cache = B.attn_decode(scfg, sp["attn"], h, ctx.cos, ctx.sin,
+                                 cache, ctx.pos)
+        u = u + h
+        u = u + B.ffn(scfg, sp["ffn"], B.norm(scfg, sp.get("norm2"), u))
+        return x + jnp.einsum("bsk,kd->bsd", u, sp["down"][inv]), cache
+
+
+def shared_cache_shape(cfg, batch: int, s_max: int) -> dict:
+    scfg = _shared_block_cfg(cfg)
+    return B.attn_cache_shape(scfg, batch, s_max)
+
+
+# ---------------------------------------------------------------------------
+# Model driver
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Decoder-only model over a ModelConfig."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.plan = layer_plan(cfg)
+        self.defs = model_defs(cfg)
+
+    # -- params ----------------------------------------------------------
+    def init(self, key):
+        return init_params(self.defs, key)
+
+    def abstract(self, mesh, plan):
+        return abstract_params(self.defs, mesh, plan)
+
+    def axes(self):
+        return axes_tree(self.defs)
+
+    # -- embedding (incl. vlm vision prefix) ------------------------------
+    def _embed(self, params, batch: dict):
+        cfg = self.cfg
+        with comm_region("embed"):
+            x = B.embed_tokens(cfg, params["embed"], batch["tokens"])
+            if cfg.family == "vlm" and "vision_embeds" in batch:
+                v = batch["vision_embeds"].astype(x.dtype)
+                x = jnp.concatenate([v, x], axis=1)
+        return x
+
+    def _positions(self, batch: dict, seq: int):
+        return jnp.arange(seq, dtype=jnp.int32)
+
+    def _vision_grid(self, batch: dict):
+        if self.cfg.family == "vlm" and "vision_embeds" in batch:
+            v = batch["vision_embeds"].shape[1]
+            g = int(math.sqrt(v))
+            return (v, g, max(1, v // g))
+        return None
+
+    # -- train forward -----------------------------------------------------
+    def train_logits(self, params, batch: dict):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        seq = x.shape[1]
+        cos, sin = make_rope(cfg, self._positions(batch, seq),
+                             self._vision_grid(batch))
+        ctx = Ctx(cos=cos, sin=sin)
+        aux_total = jnp.zeros((), jnp.float32)
+        x0 = x
+        for gi, ((kind, n), pstack) in enumerate(
+                zip(self.plan, params["groups"])):
+            def body(carry, lp, kind=kind):
+                h, aux = carry
+                h, a = layer_train(cfg, kind, lp, h, ctx)
+                return (h, aux + a), None
+            if cfg.remat == "full":
+                body = jax.checkpoint(body)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), pstack)
+            if cfg.family == "hybrid" and gi < len(self.plan) - 1:
+                def shared(sp, h, h0, gi=gi):
+                    return shared_train(cfg, sp, h, h0, gi, ctx)
+                if cfg.remat == "full":
+                    shared = jax.checkpoint(shared)
+                x = shared(params["shared"], x, x0)
+        logits = self._head(params, x)
+        return logits, aux_total
+
+    def _head(self, params, x):
+        with comm_region("lm_head"):
+            return B.lm_logits(self.cfg, params["embed"], x)
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, batch: dict, s_max: int):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        seq = x.shape[1]
+        cos, sin = make_rope(cfg, self._positions(batch, seq),
+                             self._vision_grid(batch))
+        ctx = Ctx(cos=cos, sin=sin, s_max=s_max)
+        caches = []
+        x0 = x
+        for gi, ((kind, n), pstack) in enumerate(
+                zip(self.plan, params["groups"])):
+            def body(h, lp, kind=kind):
+                h, cache = layer_prefill(cfg, kind, lp, h, ctx)
+                return h, cache
+            x, cache = jax.lax.scan(body, x, pstack)
+            caches.append(cache)
+            if cfg.family == "hybrid" and gi < len(self.plan) - 1:
+                x, sc = shared_prefill(cfg, params["shared"], x, x0, gi, ctx)
+                caches.append(sc)
+        logits = self._head(params, x[:, -1:])
+        return logits, tuple(caches)
+
+    def decode(self, params, caches: tuple, token, pos):
+        """token (B,1) int32; pos scalar int32 — next position to write."""
+        cfg = self.cfg
+        x = self._embed(params, {"tokens": token})
+        poss = jnp.asarray(pos, jnp.int32)[None]
+        cos, sin = make_rope(cfg, poss)
+        ctx = Ctx(cos=cos, sin=sin, pos=pos)
+        new_caches = []
+        ci = 0
+        x0 = x
+        for gi, ((kind, n), pstack) in enumerate(
+                zip(self.plan, params["groups"])):
+            def body(h, inp, kind=kind):
+                lp, cache = inp
+                h, cache = layer_decode(cfg, kind, lp, h, ctx, cache)
+                return h, cache
+            x, cache = jax.lax.scan(body, x, (pstack, caches[ci]))
+            new_caches.append(cache)
+            ci += 1
+            if cfg.family == "hybrid" and gi < len(self.plan) - 1:
+                x, sc = shared_decode(cfg, params["shared"], x, x0, gi,
+                                      ctx, caches[ci])
+                new_caches.append(sc)
+                ci += 1
+        logits = self._head(params, x)
+        return logits, tuple(new_caches)
+
+    # -- cache templates ----------------------------------------------------
+    def cache_shapes(self, batch: int, s_max: int) -> tuple:
+        cfg = self.cfg
+        out = []
+        for gi, (kind, n) in enumerate(self.plan):
+            per = layer_cache_shape(cfg, kind, batch, s_max)
+            out.append({k: ((n,) + shape, ("layers",) + axes)
+                        for k, (shape, axes) in per.items()})
+            if cfg.family == "hybrid" and gi < len(self.plan) - 1:
+                out.append(shared_cache_shape(cfg, batch, s_max))
+        return tuple(out)

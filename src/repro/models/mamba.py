@@ -1,0 +1,210 @@
+"""Mamba-2 block (SSD — state-space duality chunked algorithm).
+
+Follows the minimal SSD formulation (Dao & Gu, arXiv:2405.21060): the
+selective state space ``h_t = a_t h_{t-1} + dt_t B_t x_t``,
+``y_t = C_t h_t + D x_t`` computed chunk-parallel: quadratic attention-like
+intra-chunk term + an inter-chunk recurrence on (H, N, P) states carried by
+``lax.scan`` (associative in the decay — the chunk count is small, so a
+sequential scan keeps HLO compact for the 512-device dry-run).
+
+Decode keeps (conv_state, ssm_state) and is O(1) per token — this is why
+zamba2/xlstm are the two archs that run the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import rmsnorm
+from repro.models.params import ParamDef
+from repro.parallel.context import shard_act
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nheads = di // s.headdim
+    conv_dim = di + 2 * s.state
+    return s, di, nheads, conv_dim
+
+
+def mamba_defs(cfg) -> dict:
+    s, di, nheads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": ParamDef((d, 2 * di + 2 * s.state + nheads),
+                            ("embed", "mlp")),
+        "conv_w": ParamDef((s.conv_width, conv_dim), ("conv", "mlp")),
+        "conv_b": ParamDef((conv_dim,), ("mlp",), init="zeros"),
+        "a_log": ParamDef((nheads,), (None,), init="zeros",
+                          dtype="float32"),
+        "d_skip": ParamDef((nheads,), (None,), init="ones",
+                           dtype="float32"),
+        "dt_bias": ParamDef((nheads,), (None,), init="zeros",
+                            dtype="float32"),
+        "gate_norm": ParamDef((di,), ("mlp",), init="zeros"),
+        "out_proj": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def mamba_state_shape(cfg, batch: int) -> dict:
+    s, di, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": ((batch, s.conv_width - 1, conv_dim),
+                 ("batch", None, "mlp")),
+        "ssm": ((batch, nheads, s.headdim, s.state),
+                ("batch", None, None, "state")),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, di, nheads, _ = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * s.state]
+    dt_raw = proj[..., di + di + 2 * s.state:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b, init_state=None):
+    """Depthwise causal conv along seq.  xbc (B,S,K); w (W,K)."""
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = init_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None]
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad[:, :0]
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def _ssd_chunked(xh, a_log_dt, Bmat, Cmat, cfg, h0=None):
+    """Chunked SSD.
+
+    xh (B,S,H,P) — dt-scaled inputs; a_log_dt (B,S,H) — per-step log decay
+    (negative); Bmat/Cmat (B,S,N).  Returns (y (B,S,H,P), h_final
+    (B,H,P,N)).
+    """
+    s = cfg.ssm
+    Bsz, S, H, P = xh.shape
+    N = s.state
+    Q = min(s.chunk, S)
+    S_real = S
+    pad = (-S) % Q
+    if pad:
+        # zero input + zero log-decay (decay 1) ⇒ padding steps pass the
+        # state through untouched; padded outputs are sliced off.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log_dt = jnp.pad(a_log_dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xh = xh.reshape(Bsz, nc, Q, H, P)
+    la = a_log_dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bm = Bmat.reshape(Bsz, nc, Q, N)
+    Cm = Cmat.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(la, axis=2)                       # (B,c,Q,H)
+    # intra-chunk decay matrix L[q, j] = exp(cum_q - cum_j), q >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,c,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    # Y_intra[q] = sum_j (C_q . B_j) L[q,j] xh_j
+    scores = jnp.einsum("bcqn,bcjn->bcqj", Cm, Bm,
+                        preferred_element_type=jnp.float32)
+    W = scores[..., None] * L.transpose(0, 1, 2, 3, 4)   # (B,c,Q,Q,H)
+    y_intra = jnp.einsum("bcqjh,bcjhp->bcqhp", W.astype(xh.dtype), xh)
+
+    # chunk summary state: S_c = sum_j exp(cum_end - cum_j) B_j ⊗ xh_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,c,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bm.astype(jnp.float32), decay_to_end,
+                        xh.astype(jnp.float32))          # (B,c,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,c,H)
+
+    # inter-chunk recurrence (sequential scan over chunks)
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    h_last, h_prev = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (B,c,H,P,N)
+
+    # inter-chunk output: y_off[q] = exp(cum_q) C_q . h_prev
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cm.astype(jnp.float32), h_prev, jnp.exp(cum))
+    y = (y_intra + y_off.astype(xh.dtype)).reshape(Bsz, S, H, P)
+    return y[:, :S_real], h_last
+
+
+def mamba_train(cfg, p, x, return_state: bool = False, state=None):
+    """x (B,S,D) -> y (B,S,D) (+ final (conv, ssm) state if requested)."""
+    s, di, nheads, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_init = None if state is None else state["conv"]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_init)
+
+    xin = xbc[..., :di]
+    Bmat = xbc[..., di:di + s.state]
+    Cmat = xbc[..., di + s.state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])      # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))          # (H,)
+    la = dt * A[None, None]                               # log decay
+    xh = xin.reshape(*xin.shape[:2], nheads, s.headdim)
+    xh_dt = xh * dt[..., None].astype(xh.dtype)
+
+    h0 = None if state is None else state["ssm"]
+    y, h_last = _ssd_chunked(xh_dt, la, Bmat, Cmat, cfg, h0)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    if return_state:
+        return out, {"conv": conv_state, "ssm": h_last.astype(jnp.float32)}
+    return out
+
+
+def mamba_decode(cfg, p, x, state):
+    """Single-token step.  x (B,1,D); state {conv, ssm}."""
+    s, di, nheads, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    # conv state update (shift register)
+    xp = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+    w = p["conv_w"]
+    out = sum(xp[:, i:i + 1] * w[i][None, None] for i in range(w.shape[0]))
+    xbc = jax.nn.silu(out + p["conv_b"][None, None])
+    new_conv = xp[:, 1:]
+
+    xin = xbc[..., :di]
+    Bmat = xbc[..., di:di + s.state]                      # (B,1,N)
+    Cmat = xbc[..., di + s.state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])      # (B,1,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, None])[:, 0]             # (B,H)
+
+    xh = xin.reshape(xin.shape[0], nheads, s.headdim)     # (B,H,P)
+    dtx = xh.astype(jnp.float32) * dt[:, 0, :, None]
+    h = state["ssm"] * decay[..., None, None] \
+        + jnp.einsum("bhp,bn->bhpn", dtx, Bmat[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cmat[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xh * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(x.shape[0], 1, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,12 @@
+"""Model facade: build the right model class for a config."""
+
+from __future__ import annotations
+
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+
+
+def build_model(cfg):
+    if cfg.family in ("encdec", "audio"):
+        return EncDec(cfg)
+    return LM(cfg)

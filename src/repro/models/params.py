@@ -1,0 +1,94 @@
+"""Parameter definitions with logical sharding axes.
+
+Models declare parameters as :class:`ParamDef` trees (shape + logical axes +
+init); the same tree serves three purposes:
+
+  * ``init_params``      — real initialization (smoke tests, examples)
+  * ``abstract_params``  — ShapeDtypeStructs with NamedShardings attached
+                           (multi-pod dry-run: no allocation)
+  * ``param_shardings``  — shardings/specs for jit in_shardings
+
+Stacked layer groups add a leading ``layers`` axis so the forward pass can
+``lax.scan`` over homogeneous blocks (compact HLO ⇒ tractable 512-device
+compiles; the HLO analyzer multiplies collectives by trip count).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                  # logical axis names, len == len(shape)
+    init: str = "normal"         # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in)
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(defs, n: int):
+    """Add a leading `layers` axis of size n to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes,
+                           d.init, d.scale, d.dtype),
+        defs, is_leaf=is_def)
+
+
+def _init_one(d: ParamDef, key):
+    dt = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else max(1, d.shape[-1])
+    scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dt)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def abstract_params(defs, mesh, plan):
+    """ShapeDtypeStruct tree with shardings — dry-run stand-ins."""
+    def mk(d: ParamDef):
+        return jax.ShapeDtypeStruct(
+            d.shape, jnp.dtype(d.dtype),
+            sharding=plan.sharding(mesh, *d.axes))
+    return jax.tree.map(mk, defs, is_leaf=is_def)
+
+
+def param_shardings(defs, mesh, plan):
+    return jax.tree.map(lambda d: plan.sharding(mesh, *d.axes),
+                        defs, is_leaf=is_def)
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def param_bytes(defs) -> int:
+    return sum(math.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+               for d in jax.tree.leaves(defs, is_leaf=is_def))

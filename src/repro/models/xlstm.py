@@ -1,0 +1,229 @@
+"""xLSTM mLSTM block (arXiv:2405.04517) — matrix memory, exponential gating.
+
+Sequential semantics per head (key dim = value dim = Dh):
+
+    m_t = max(log f_t + m_{t-1}, log i_t)                    (stabilizer)
+    C~_t = exp(log f_t + m_{t-1} - m_t) C~_{t-1}
+           + exp(log i_t - m_t) k_t v_t^T
+    n~_t = (same recurrence on k_t)
+    h_t  = (q_t C~_t) / max(|q_t n~_t|, exp(-m_t))
+
+Training uses a chunk-parallel form: within a chunk, contributions reduce to
+an attention-like masked product with decay matrix
+``D[q, j] = exp(u_j - g_q)``, ``u_j = log i_j - cumF_j``,
+``g_q = max(m_prev, cummax(u)_q)`` (all exponents ≤ 0 — numerically safe);
+chunk boundaries carry (C~, n~, m) through a sequential ``lax.scan``.
+
+The 1.3B config uses block-diagonal per-head q/k/v (4 heads), proj factor 2,
+no separate FFN (assigned d_ff = 0).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import rmsnorm
+from repro.models.params import ParamDef
+from repro.parallel.context import shard_act
+
+NEG_INF = -1e30
+
+
+def _dims(cfg):
+    m = cfg.mlstm
+    di = m.proj_factor * cfg.d_model
+    H = cfg.n_heads
+    Dh = di // H
+    return m, di, H, Dh
+
+
+def mlstm_defs(cfg) -> dict:
+    m, di, H, Dh = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "up": ParamDef((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamDef((m.conv_width, di), ("conv", "mlp")),
+        "conv_b": ParamDef((di,), ("mlp",), init="zeros"),
+        "wq": ParamDef((H, Dh, Dh), ("heads", None, None)),
+        "wk": ParamDef((H, Dh, Dh), ("heads", None, None)),
+        "wv": ParamDef((H, Dh, Dh), ("heads", None, None)),
+        "w_gates": ParamDef((di, 2 * H), ("mlp", None), dtype="float32"),
+        "gate_bias": ParamDef((2 * H,), (None,), init="zeros",
+                              dtype="float32"),
+        "head_norm": ParamDef((di,), ("mlp",), init="zeros"),
+        "down": ParamDef((di, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_state_shape(cfg, batch: int) -> dict:
+    m, di, H, Dh = _dims(cfg)
+    return {
+        "conv": ((batch, m.conv_width - 1, di), ("batch", None, "mlp")),
+        "C": ((batch, H, Dh, Dh), ("batch", "heads", None, "state")),
+        "n": ((batch, H, Dh), ("batch", "heads", None)),
+        "m": ((batch, H), ("batch", "heads")),
+    }
+
+
+def _causal_conv(xm, w, b, init_state=None):
+    W = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xm.shape[0], W - 1, xm.shape[2]), xm.dtype)
+    else:
+        pad = init_state.astype(xm.dtype)
+    xp = jnp.concatenate([pad, xm], axis=1)
+    out = sum(xp[:, i:i + xm.shape[1]] * w[i][None, None]
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad[:, :0]
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def _qkv_gates(cfg, p, xm, conv_state=None):
+    m, di, H, Dh = _dims(cfg)
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    xch = xc.reshape(*xc.shape[:2], H, Dh)
+    xmh = xm.reshape(*xm.shape[:2], H, Dh)
+    q = jnp.einsum("bshd,hde->bshe", xch, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xch, p["wk"]) / math.sqrt(Dh)
+    v = jnp.einsum("bshd,hde->bshe", xmh, p["wv"])
+    gates = (jnp.einsum("bsk,kg->bsg", xc.astype(jnp.float32),
+                        p["w_gates"]) + p["gate_bias"][None, None])
+    lf = jax.nn.log_sigmoid(gates[..., :H])          # log forget gate
+    li = gates[..., H:]                              # log input gate (exp)
+    return q, k, v, lf, li, new_conv
+
+
+def _chunked_mlstm(q, k, v, lf, li, cfg, state=None):
+    """q,k,v (B,S,H,Dh); lf,li (B,S,H) f32.  Returns (h, final_state)."""
+    m_cfg, di, H, Dh = _dims(cfg)
+    B, S, _, _ = q.shape
+    Q = min(m_cfg.chunk, S)
+    S_real = S
+    pad = (-S) % Q
+    if pad:
+        # f = 1 (log 0) and i = 0 (log -inf) ⇒ padding steps are identity.
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=NEG_INF)
+        S = S + pad
+    nc = S // Q
+
+    qs = q.reshape(B, nc, Q, H, Dh)
+    ks = k.reshape(B, nc, Q, H, Dh)
+    vs = v.reshape(B, nc, Q, H, Dh)
+    lfs = lf.reshape(B, nc, Q, H)
+    lis = li.reshape(B, nc, Q, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = (state["C"].astype(jnp.float32),
+                      state["n"].astype(jnp.float32),
+                      state["m"].astype(jnp.float32))
+
+    def chunk_step(carry, inp):
+        Cp, np_, mp = carry                     # stabilized C~, n~, abs m
+        qc, kc, vc, lfc, lic = inp              # (B,Q,H,*) / (B,Q,H)
+        cumF = jnp.cumsum(lfc, axis=1)          # (B,Q,H)
+        u = lic - cumF
+        g = jnp.maximum(mp[:, None], jax.lax.cummax(u, axis=1))
+        # intra-chunk decay D[q, j] = exp(u_j - g_q), j <= q
+        Dm = u[:, None, :, :] - g[:, :, None, :]      # (B,q,j,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        Dm = jnp.where(tri, jnp.exp(Dm), 0.0)
+        scores = jnp.einsum("bqhd,bjhd->bqjh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32))
+        W = scores * Dm
+        num = jnp.einsum("bqjh,bjhd->bqhd", W, vc.astype(jnp.float32))
+        carry_coef = jnp.exp(mp[:, None] - g)         # (B,Q,H)
+        num = num + carry_coef[..., None] * jnp.einsum(
+            "bqhd,bhde->bqhe", qc.astype(jnp.float32), Cp)
+        # |q·n~| is the abs of the *combined* sum (intra + carry)
+        den = jnp.abs(W.sum(axis=2) + carry_coef * jnp.einsum(
+            "bqhd,bhd->bqh", qc.astype(jnp.float32), np_))
+        m_abs = cumF + g
+        h = num / jnp.maximum(den, jnp.exp(-m_abs))[..., None]
+        # chunk-end carry
+        gQ = g[:, -1]                                  # (B,H)
+        wgt = jnp.exp(u - gQ[:, None])                 # (B,Q,H)
+        Cn = jnp.einsum("bqh,bqhd,bqhe->bhde", wgt,
+                        kc.astype(jnp.float32), vc.astype(jnp.float32)) \
+            + jnp.exp(mp - gQ)[..., None, None] * Cp
+        nn = jnp.einsum("bqh,bqhd->bhd", wgt, kc.astype(jnp.float32)) \
+            + jnp.exp(mp - gQ)[..., None] * np_
+        mn = cumF[:, -1] + gQ
+        return (Cn, nn, mn), h
+
+    (Cf, nf, mf), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0),
+        (qs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+         vs.transpose(1, 0, 2, 3, 4), lfs.transpose(1, 0, 2, 3),
+         lis.transpose(1, 0, 2, 3)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+    return h[:, :S_real], {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_train(cfg, p, x, return_state: bool = False, state=None):
+    """x (B,S,D) -> y (B,S,D)."""
+    m, di, H, Dh = _dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, p["up"])
+    xm, z = up[..., :di], up[..., di:]
+    conv_init = None if state is None else state["conv"]
+    q, k, v, lf, li, new_conv = _qkv_gates(cfg, p, xm, conv_init)
+    inner = None if state is None else state
+    h, fstate = _chunked_mlstm(q, k, v, lf, li, cfg, inner)
+    h = h.astype(x.dtype).reshape(*x.shape[:2], di)
+    h = rmsnorm(h, p["head_norm"])
+    y = jnp.einsum("bsk,kd->bsd", h * jax.nn.silu(z), p["down"])
+    if return_state:
+        fstate["conv"] = new_conv
+        return y, fstate
+    return y
+
+
+def mlstm_decode(cfg, p, x, state):
+    """Single-token step.  x (B,1,D)."""
+    m, di, H, Dh = _dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, p["up"])
+    xm, z = up[..., :di], up[..., di:]
+
+    xp = jnp.concatenate([state["conv"].astype(xm.dtype), xm], axis=1)
+    w = p["conv_w"]
+    out = sum(xp[:, i:i + 1] * w[i][None, None] for i in range(w.shape[0]))
+    xc = jax.nn.silu(out + p["conv_b"][None, None])
+    new_conv = xp[:, 1:]
+
+    xch = xc.reshape(xc.shape[0], H, Dh)
+    xmh = xm.reshape(xm.shape[0], H, Dh)
+    qh = jnp.einsum("bhd,hde->bhe", xch, p["wq"]).astype(jnp.float32)
+    kh = (jnp.einsum("bhd,hde->bhe", xch, p["wk"])
+          / math.sqrt(Dh)).astype(jnp.float32)
+    vh = jnp.einsum("bhd,hde->bhe", xmh, p["wv"]).astype(jnp.float32)
+    gates = (jnp.einsum("bk,kg->bg", xc[:, 0].astype(jnp.float32),
+                        p["w_gates"]) + p["gate_bias"][None])
+    lf = jax.nn.log_sigmoid(gates[..., :H])
+    li = gates[..., H:]
+
+    mp = state["m"].astype(jnp.float32)
+    mn = jnp.maximum(lf + mp, li)
+    a = jnp.exp(lf + mp - mn)
+    b = jnp.exp(li - mn)
+    C = a[..., None, None] * state["C"].astype(jnp.float32) \
+        + b[..., None, None] * jnp.einsum("bhd,bhe->bhde", kh, vh)
+    n = a[..., None] * state["n"].astype(jnp.float32) + b[..., None] * kh
+    num = jnp.einsum("bhd,bhde->bhe", qh, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qh, n)),
+                      jnp.exp(-mn))
+    h = (num / den[..., None]).astype(x.dtype)
+    h = rmsnorm(h.reshape(x.shape[0], 1, di), p["head_norm"])
+    y = jnp.einsum("bsk,kd->bsd", h * jax.nn.silu(z), p["down"])
+    return y, {"conv": new_conv, "C": C, "n": n, "m": mn}

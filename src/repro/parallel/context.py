@@ -1,0 +1,47 @@
+"""Ambient (mesh, plan) context for activation sharding constraints.
+
+Model code calls ``shard_act(x, ("batch", "seq", "embed"))`` at layer
+boundaries; when a parallel context is installed (dry-run, launcher) this
+becomes ``with_sharding_constraint`` with the plan's PartitionSpec, otherwise
+it is a no-op (single-device smoke tests never see a mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.mesh = None
+        self.plan = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def parallel_context(mesh, plan) -> Iterator[None]:
+    prev = (_CTX.mesh, _CTX.plan)
+    _CTX.mesh, _CTX.plan = mesh, plan
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.plan = prev
+
+
+def current_plan():
+    return _CTX.plan
+
+
+def shard_act(x, logical_axes: tuple):
+    """Constrain an activation's sharding by logical axes (no-op w/o ctx)."""
+    if _CTX.mesh is None or _CTX.plan is None:
+        return x
+    sh = NamedSharding(_CTX.mesh, _CTX.plan.spec(*logical_axes))
+    return jax.lax.with_sharding_constraint(x, sh)

@@ -1,0 +1,91 @@
+"""GPipe-style pipeline parallelism over a mesh axis (the ``pod`` axis).
+
+Building block for layer-pipelined execution across pods: stage s holds the
+parameters of layer-group s; microbatches stream through stages, moving
+between neighbors with ``collective_permute`` (the instrumented ppermute, so
+the comm-region profiler sees the pipeline traffic like any other pattern).
+
+SPMD formulation (runs inside shard_map over the stage axis): at step t,
+every stage applies its layer-group to its current microbatch, then shifts
+activations one stage to the right.  With S stages and M microbatches the
+schedule takes M + S - 1 steps; bubble fraction (S-1)/(M+S-1).
+
+This is the forward/inference pipeline (serving and dry-run lowering);
+training composes it with jax.grad through the shifts.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as coll
+from repro.core.regions import comm_region
+
+
+def pipeline_forward(stage_fn, n_stages: int, axis: str = "pod"):
+    """Returns fn(stage_params, microbatches) for use inside shard_map.
+
+    stage_fn(params, x) -> x      one stage's computation
+    stage_params                  this stage's params (sharded over `axis`)
+    microbatches (M, mb, ...)     the *stage-0* input stream (other stages
+                                  ignore their copy; activations arrive via
+                                  the pipeline shifts)
+    Returns (M, mb, ...) outputs, valid on the last stage (replicated back
+    via a broadcast from the last stage).
+    """
+
+    def run(stage_params, microbatches):
+        sid = lax.axis_index(axis)
+        M = microbatches.shape[0]
+        steps = M + n_stages - 1
+        x_shape = microbatches.shape[1:]
+        cur = jnp.zeros(x_shape, microbatches.dtype)
+        outs = jnp.zeros_like(microbatches)
+        shift = [(i, i + 1) for i in range(n_stages - 1)]
+
+        for t in range(steps):
+            # stage 0 ingests microbatch t (if any remain)
+            mb_idx = min(t, M - 1)
+            injected = jnp.where(sid == 0, microbatches[mb_idx], cur)
+            active = (sid <= t) & (t - sid < M)
+            y = stage_fn(stage_params, injected)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage banks its finished microbatch (index t-S+1)
+            done_idx = t - (n_stages - 1)
+            if done_idx >= 0:
+                outs = jnp.where(
+                    (sid == n_stages - 1),
+                    outs.at[done_idx].set(y), outs)
+            with comm_region("pipeline_shift"):
+                cur = coll.ppermute(y, axis, shift)
+        # replicate the last stage's output stream to every stage
+        with comm_region("pipeline_collect"):
+            outs = coll.pbroadcast(outs, axis, root=n_stages - 1)
+        return outs
+
+    return run
+
+
+def run_pipeline(stage_fn, stage_params_stacked, microbatches, mesh,
+                 axis: str = "pod"):
+    """Drive pipeline_forward under shard_map.
+
+    stage_params_stacked: pytree with a leading stage dim (n_stages, ...).
+    microbatches (M, mb, ...), replicated.
+    """
+    n_stages = mesh.shape[axis]
+
+    def inner(params, mbs):
+        params = jax.tree.map(lambda p: p[0], params)   # this stage's slice
+        return pipeline_forward(stage_fn, n_stages, axis)(params, mbs)
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params_stacked)
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(pspec, P()), out_specs=P(),
+        check_vma=False)(stage_params_stacked, microbatches)

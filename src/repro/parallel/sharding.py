@@ -1,0 +1,168 @@
+"""Logical-axis sharding: DP / FSDP / TP / SP / EP over (pod, data, model).
+
+Every parameter and activation dimension in the model stack carries a
+*logical* axis name; a :class:`ShardingPlan` maps logical names to mesh axes.
+The plan is the single lever the §Perf hillclimb turns: changing how
+``heads`` / ``mlp`` / ``embed`` / ``experts`` map onto the mesh changes the
+GSPMD-inserted collectives, which the comm-region profiler then re-measures
+from the compiled HLO.
+
+Logical axes used by the models:
+
+  batch      global batch            -> (pod, data)   [DP]
+  seq        sequence                -> None, or model [SP when heads don't
+                                        divide the TP axis]
+  embed      d_model                 -> None, or (pod, data) [FSDP weights]
+  mlp        FFN hidden / d_ff       -> model          [TP]
+  heads      attention query heads   -> model (when divisible)
+  kv_heads   KV heads                -> model (when divisible)
+  vocab      vocabulary (padded)     -> model          [TP embedding/LM head]
+  experts    MoE expert dim          -> None (TP-MoE default) or model [EP]
+  expert_mlp per-expert hidden       -> model
+  kv_seq     KV-cache sequence       -> None, or model [decode seq-sharding]
+  state      SSM/mLSTM state dims    -> None
+  layers     stacked-layer leading   -> None (never sharded)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+LOGICAL_AXES = ("batch", "seq", "embed", "act_embed", "mlp", "heads",
+                "kv_heads", "vocab", "experts", "expert_mlp", "moe_cap",
+                "moe_groups", "kv_seq", "state", "layers", "conv",
+                "frames")
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """Mapping logical axis -> mesh axis (str), tuple of axes, or None."""
+
+    rules: dict = field(default_factory=dict)
+    mesh_axes: tuple = ("data", "model")
+
+    def get(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical not in LOGICAL_AXES:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.rules.get(logical)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a dim list; a mesh axis may appear only once
+        per spec, so later duplicates degrade to None (e.g. under sequence
+        parallelism ("batch","seq","vocab") -> (dp, model, None): the seq
+        sharding wins and the vocab dim of that activation replicates)."""
+        used: set = set()
+        out = []
+        for l in logical:
+            axes = self.get(l)
+            tup = (axes,) if isinstance(axes, str) else tuple(axes or ())
+            if any(a in used for a in tup):
+                out.append(None)
+                continue
+            used.update(tup)
+            out.append(axes)
+        return P(*out)
+
+    def sharding(self, mesh: Mesh, *logical) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(*logical))
+
+    def override(self, **rules) -> "ShardingPlan":
+        merged = dict(self.rules)
+        merged.update(rules)
+        return replace(self, rules=merged)
+
+    def describe(self) -> str:
+        return ", ".join(f"{k}->{v}" for k, v in sorted(
+            self.rules.items(), key=lambda kv: kv[0]) if v is not None)
+
+
+def _axis_size(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh_shape[axes]
+    return math.prod(mesh_shape[a] for a in axes)
+
+
+def default_plan(cfg, mesh_shape: dict) -> ShardingPlan:
+    """Construct the baseline plan for a model config on a mesh.
+
+    ``mesh_shape``: dict axis name -> size (e.g. {"data":16,"model":16} or
+    {"pod":2,"data":16,"model":16}).
+
+    Rules (rationale in DESIGN.md §5):
+      * batch over (pod, data).
+      * mlp / vocab / expert_mlp over model (all assigned d_ff and padded
+        vocab sizes divide 16).
+      * heads over model when q-head count divides the model axis; otherwise
+        attention falls back to sequence parallelism (seq -> model) and
+        heads stay unsharded.
+      * kv_heads sharded only when they divide the model axis.
+      * embed FSDP over (pod, data) for models above ~7B params.
+      * experts: TP-MoE (replicated expert dim, expert_mlp over model) —
+        avoids padding 40- or 8-expert dims onto a 16-way axis.
+    """
+    has_pod = "pod" in mesh_shape
+    dp = ("pod", "data") if has_pod else ("data",)
+    model_n = mesh_shape.get("model", 1)
+
+    heads = getattr(cfg, "n_heads", 0) or 0
+    kv_heads = getattr(cfg, "n_kv_heads", 0) or 0
+    heads_divisible = heads % model_n == 0 if heads else False
+    kv_divisible = kv_heads % model_n == 0 if kv_heads else False
+
+    rules = {
+        "batch": dp if len(dp) > 1 else dp[0],
+        # Sequence parallelism at layer boundaries (Megatron-SP): scan
+        # carries shard their seq dim over the TP axis; GSPMD inserts the
+        # all-gather/reduce-scatter transitions around attention/FFN.  For
+        # archs whose head count doesn't divide the axis this is also the
+        # attention fallback.
+        "seq": "model",
+        "embed": None,        # weight d_model dim (FSDP target)
+        "act_embed": None,    # activation hidden dim (kept unsharded)
+        "mlp": "model",
+        "vocab": "model",
+        "experts": None,
+        "expert_mlp": "model",
+        "moe_cap": None,     # alternative MoE plan: shard capacity slots
+        # dispatch groups follow the DP axes (a None constraint would mean
+        # "replicate", not "unspecified")
+        "moe_groups": dp if len(dp) > 1 else dp[0],
+        "heads": "model" if heads_divisible else None,
+        "kv_heads": "model" if kv_divisible else None,
+        # decode caches: shard the cache sequence over the TP axis when KV
+        # heads can't use it (flash-decoding-style partial attention).
+        "kv_seq": None if kv_divisible else "model",
+        "state": None,
+        "layers": None,
+        "conv": None,
+        "frames": None,
+    }
+
+    # FSDP for large models: shard the embed dim of weights over DP axes.
+    if getattr(cfg, "param_count", lambda: 0)() >= 7e9:
+        rules["embed"] = dp if len(dp) > 1 else dp[0]
+
+    return ShardingPlan(rules=rules, mesh_axes=tuple(mesh_shape))
+
+
+def tree_shardings(mesh: Mesh, axes_tree, plan: ShardingPlan):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: plan.sharding(mesh, *axes),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_specs(axes_tree, plan: ShardingPlan):
+    return jax.tree.map(
+        lambda axes: plan.spec(*axes),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,173 @@
+"""Train / serve step functions with comm-region annotations.
+
+These are the functions the multi-pod dry-run lowers: ``make_train_step``
+(forward + loss + grad + AdamW, annotated with ``fwd`` / ``grad`` /
+``optimizer`` regions) and ``make_prefill_step`` / ``make_decode_step`` for
+serving shapes.  ``input_specs`` builds the ShapeDtypeStruct stand-ins for
+every (arch × shape) cell — weak-type-correct, shardable, no allocation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.regions import comm_region
+from repro.models.model import build_model
+from repro.models.params import abstract_params
+from repro.optim import adamw
+from repro.parallel.context import shard_act
+
+# Default stub frontend sizes (assignment: modality frontends are stubs
+# supplying precomputed embeddings).
+VLM_PATCHES = 1024
+AUDIO_FRAMES = 2048
+
+
+def softmax_xent(logits, labels, vocab_real: int):
+    """Mean token cross-entropy; padded vocab ids masked out.
+
+    logits (B,S,V_pad) f32; labels (B,S) int32 (may contain -1 = ignore).
+
+    The label logit is extracted with a vocab-iota comparison (not
+    ``take_along_axis``): under GSPMD a gather over the vocab-sharded dim
+    would all-gather the logits; the masked reduction partitions cleanly
+    (Megatron-style vocab-parallel cross entropy).
+    """
+    vpad = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, vpad), 2)
+    if vpad > vocab_real:
+        logits = jnp.where(iota >= vocab_real, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    sel = (iota == jnp.maximum(labels, 0)[..., None])
+    ll = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+    valid = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        with comm_region("fwd"):
+            logits, aux = model.train_logits(params, batch)
+        shift_logits = logits[:, :-1]
+        labels = batch["labels"][:, 1:]
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            v = batch["vision_embeds"].shape[1]
+            shift_logits = shift_logits[:, v:]
+        loss = softmax_xent(shift_logits, labels, cfg.vocab)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_coef * aux
+        return loss, {"xent": loss, "aux": aux}
+    return loss_fn, model
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.OptConfig]
+                    = None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt_cfg = opt_cfg or adamw.OptConfig()
+    loss_fn, model = make_loss_fn(cfg)
+
+    def step(params, opt_state, batch):
+        with comm_region("grad"):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        with comm_region("optimizer"):
+            params, opt_state, opt_metrics = adamw.apply_updates(
+                opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return step, model
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int):
+    model = build_model(cfg)
+
+    def step(params, batch):
+        with comm_region("prefill"):
+            return model.prefill(params, batch, s_max)
+    return step, model
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def step(params, caches, token, pos):
+        with comm_region("decode"):
+            return model.decode(params, caches, token, pos)
+    return step, model
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins per (arch × shape)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None, plan=None):
+    """Train/prefill batch ShapeDtypeStructs (tokens/labels + stub
+    modalities).  With (mesh, plan) the structs carry shardings."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, axes):
+        sh = plan.sharding(mesh, *axes) if mesh is not None else None
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=sh)
+
+    s_text = S
+    batch = {}
+    if cfg.family == "vlm":
+        v = min(VLM_PATCHES, S // 2)
+        s_text = S - v
+        batch["vision_embeds"] = sds((B, v, cfg.d_model), jnp.bfloat16,
+                                     ("batch", "seq", "act_embed"))
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, AUDIO_FRAMES, cfg.d_model), jnp.bfloat16,
+                              ("batch", "frames", "act_embed"))
+    batch["tokens"] = sds((B, s_text), jnp.int32, ("batch", "seq"))
+    batch["labels"] = sds((B, s_text), jnp.int32, ("batch", "seq"))
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None, plan=None):
+    """Decode-cache ShapeDtypeStructs for one serving cell."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, axes):
+        dt = jnp.float32 if cfg.family in ("ssm", "hybrid") else jnp.bfloat16
+        sh = plan.sharding(mesh, *axes) if mesh is not None else None
+        return jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+
+    if cfg.family == "audio":
+        shapes = model.cache_shapes(B, S, AUDIO_FRAMES)
+    else:
+        shapes = model.cache_shapes(B, S)
+    return jax.tree.map(
+        lambda sa: sds(sa[0], sa[1]),
+        shapes, is_leaf=lambda x: (isinstance(x, tuple) and len(x) == 2
+                                   and isinstance(x[0], tuple)))
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                       plan=None):
+    B = shape.global_batch
+    sh = plan.sharding(mesh, "batch", "seq") if mesh is not None else None
+    return jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=sh)
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh, plan):
+    """ShapeDtypeStructs for AdamW state (m/v follow param shardings,
+    f32)."""
+    model = build_model(cfg)
+    aparams = model.abstract(mesh, plan)
+
+    def f32(sds):
+        return jax.ShapeDtypeStruct(sds.shape, jnp.float32,
+                                    sharding=sds.sharding)
+    return {"m": jax.tree.map(f32, aparams),
+            "v": jax.tree.map(f32, aparams),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

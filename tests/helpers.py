@@ -1,0 +1,27 @@
+"""Shared test utilities."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run python code in a subprocess with N forced host devices.
+
+    Smoke tests must see 1 device (no global XLA_FLAGS); multi-device
+    integration tests get their own process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,164 @@
+"""Unit + property tests for the comm-region profiler (paper Table I)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CommPatternProfiler, comm_region, profile_traced,
+                        recording)
+from repro.core import collectives as coll
+from repro.core.regions import RegionEvent, RegionRecorder
+from repro.core.topology import Topology, topology
+
+
+# ---------------------------------------------------------------------------
+# RegionStats aggregation properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def perm_events(draw):
+    n = draw(st.integers(2, 16))
+    n_pairs = draw(st.integers(0, 20))
+    pairs = [(draw(st.integers(0, n - 1)), draw(st.integers(0, n - 1)))
+             for _ in range(n_pairs)]
+    nbytes = draw(st.integers(1, 1 << 20))
+    return n, pairs, nbytes
+
+
+def event_from_pairs(region, n, pairs, nbytes):
+    sends = {r: 0 for r in range(n)}
+    recvs = {r: 0 for r in range(n)}
+    dests = {r: set() for r in range(n)}
+    srcs = {r: set() for r in range(n)}
+    bsent = {r: 0 for r in range(n)}
+    brecv = {r: 0 for r in range(n)}
+    for s, d in pairs:
+        sends[s] += 1
+        recvs[d] += 1
+        dests[s].add(d)
+        srcs[d].add(s)
+        bsent[s] += nbytes
+        brecv[d] += nbytes
+    return RegionEvent(region=region, region_path=(region,),
+                       kind="ppermute", sends_per_rank=sends,
+                       recvs_per_rank=recvs, dest_ranks=dests,
+                       src_ranks=srcs, bytes_sent=bsent, bytes_recv=brecv)
+
+
+@given(perm_events())
+@settings(max_examples=50, deadline=None)
+def test_stats_invariants(ev):
+    n, pairs, nbytes = ev
+    rec = RegionRecorder()
+    rec.enter("r")
+    rec.record(event_from_pairs("r", n, pairs, nbytes))
+    prof = CommPatternProfiler.from_recorder(rec)
+    st_ = prof.regions["r"]
+    # totals
+    assert st_.total_sends == len(pairs)
+    assert st_.total_bytes_sent == len(pairs) * nbytes
+    # min <= max for every Table I pair
+    for attr in ("sends", "recvs", "dest_ranks", "src_ranks",
+                 "bytes_sent", "bytes_recv"):
+        lo, hi = getattr(st_, attr)
+        assert lo <= hi
+    # conservation: bytes sent == bytes received overall
+    assert sum(ev_b for ev_b in
+               rec.events[0].bytes_sent.values()) == \
+        sum(ev_b for ev_b in rec.events[0].bytes_recv.values())
+    # avg send size consistent
+    if len(pairs):
+        assert st_.avg_send_size == pytest.approx(nbytes)
+
+
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6))
+@settings(max_examples=25, deadline=None)
+def test_topology_expand_counts(px, py, pz):
+    topo = Topology((("x", px), ("y", py), ("z", pz)))
+    perm = [(i, i + 1) for i in range(px - 1)]
+    pairs = topo.expand_pairs("x", perm)
+    assert len(pairs) == len(perm) * py * pz
+    # all global ranks within range and unique per (src,dst)
+    for s, d in pairs:
+        assert 0 <= s < topo.n_ranks and 0 <= d < topo.n_ranks
+    assert len(set(pairs)) == len(pairs)
+
+
+def test_topology_groups_partition():
+    topo = Topology((("x", 3), ("y", 4)))
+    groups = topo.groups("y")
+    all_ranks = sorted(r for g in groups for r in g)
+    assert all_ranks == list(range(12))
+    assert all(len(g) == 4 for g in groups)
+
+
+# ---------------------------------------------------------------------------
+# Trace-level integration (1 host device; AbstractMesh for larger counts)
+# ---------------------------------------------------------------------------
+
+def test_profile_traced_ring():
+    from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+    mesh = AbstractMesh((8,), ("x",), axis_types=(AxisType.Auto,))
+
+    def step(u):
+        def inner(u):
+            with comm_region("halo"):
+                g = coll.ppermute(u[:1], "x", [(i, i + 1) for i in range(7)])
+            with comm_region("sum"):
+                s = coll.psum(u.sum(), "x")
+            return u + g + s
+        return jax.shard_map(inner, mesh=mesh, in_specs=P("x"),
+                             out_specs=P("x"))(u)
+
+    u = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    with topology(("x", 8)):
+        prof = profile_traced(step, u, name="t")
+    halo = prof.regions["halo"]
+    assert halo.total_sends == 7
+    assert halo.sends == (0, 1)
+    assert halo.dest_ranks == (0, 1)
+    # one message = (64/8) rows x 32 cols... slice u[:1] of (8,32) = 32 f32
+    assert halo.largest_send == 1 * 32 * 4
+    s = prof.regions["sum"]
+    assert s.coll == 1
+    assert s.coll_bytes[1] == int(2 * 7 / 8 * 4)
+
+
+def test_nested_regions_innermost_attribution():
+    from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+    mesh = AbstractMesh((4,), ("x",), axis_types=(AxisType.Auto,))
+
+    def step(u):
+        def inner(u):
+            with comm_region("outer"):
+                with comm_region("inner"):
+                    g = coll.ppermute(u, "x", [(0, 1)])
+            return u + g
+        return jax.shard_map(inner, mesh=mesh, in_specs=P("x"),
+                             out_specs=P("x"))(u)
+
+    with topology(("x", 4)):
+        prof = profile_traced(step, jax.ShapeDtypeStruct((8,), jnp.float32))
+    assert prof.regions["inner"].total_sends == 1
+    assert prof.regions["outer"].total_sends == 0   # stats go innermost
+    assert "outer" in prof.regions                   # but region is present
+
+
+def test_region_name_validation():
+    with pytest.raises(ValueError):
+        with comm_region("bad/name"):
+            pass
+
+
+def test_profile_json_roundtrip(tmp_path):
+    rec = RegionRecorder()
+    rec.enter("r")
+    rec.record(event_from_pairs("r", 4, [(0, 1), (1, 2)], 128))
+    prof = CommPatternProfiler.from_recorder(rec, name="p")
+    path = tmp_path / "p.json"
+    prof.save(path)
+    from repro.core.profiler import CommProfile
+    loaded = CommProfile.load(path)
+    assert loaded.regions["r"].total_sends == 2
+    assert loaded.regions["r"].bytes_sent == prof.regions["r"].bytes_sent

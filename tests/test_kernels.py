@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 1, 96, 96, 64),      # MQA, non-multiple seq
+    (2, 4, 4, 64, 256, 128),    # decode-style Sq < Sk
+    (1, 2, 2, 33, 33, 32),      # odd sizes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, Hq, Hkv, Sq, Sk, D, dtype, causal):
+    if not causal and Sq != Sk:
+        pytest.skip("offset only defined for causal")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sk, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, D), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,pos", [
+    (2, 4, 2, 256, 64, 255),
+    (1, 8, 1, 512, 128, 100),   # partially-filled cache, MQA
+    (2, 2, 2, 96, 64, 50),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, Hq, Hkv, S, D, pos, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, 1, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32).astype(dtype)
+    out = decode_attention(q, k, v, pos + 1, block_k=64, interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [
+    (2, 32, 4, 64, 16, 8),
+    (1, 24, 2, 32, 64, 16),
+    (2, 128, 4, 64, 64, 128),
+    (1, 33, 2, 32, 16, 8),      # padded tail chunk
+])
+def test_ssd_scan(B, S, H, P, N, Q):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    la = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.3
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    y, hf = ssd_scan(xh, la, Bm, Cm, block_q=Q, interpret=True)
+    y_ref, h_ref = ref.ssd_chunk_ref(xh, la, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """The kernel and the XLA-path chunked implementation agree."""
+    from repro.configs.base import ModelConfig, SSMConfig
+    from repro.models.mamba import _ssd_chunked
+    B, S, H, P, N, Q = 2, 64, 4, 32, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    la = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.3
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    cfg = ModelConfig(d_model=H * P // 2, n_heads=H, n_kv_heads=H,
+                      ssm=SSMConfig(state=N, headdim=P, chunk=Q))
+    y_m, h_m = _ssd_chunked(xh, la, Bm, Cm, cfg)
+    y_k, h_k = ssd_scan(xh, la, Bm, Cm, block_q=Q, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,D,Q", [
+    (2, 32, 2, 32, 8),
+    (1, 24, 4, 64, 16),
+    (1, 17, 1, 32, 8),          # padded tail chunk
+])
+def test_mlstm_scan(B, S, H, D, Q):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D)) / np.sqrt(D)
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, S, H)) * 2)
+    li = jax.random.normal(ks[4], (B, S, H))
+    h = mlstm_scan(q, k, v, lf, li, block_q=Q, interpret=True)
+    h_ref = ref.mlstm_chunk_ref(q, k, v, lf, li)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)

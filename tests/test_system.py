@@ -1,0 +1,68 @@
+"""End-to-end behaviour: Thicket-analog analysis + paper report emitters."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.kripke import KripkeConfig, profile as kripke_profile
+from repro.apps.laghos import LaghosConfig, profile as laghos_profile
+from repro.apps.stencil import Decomp3D
+from repro.core.reports import (bandwidth_msgrate_report, per_level_report,
+                                region_stats_table, scaling_report,
+                                table1_schema, table4_metrics)
+from repro.core.thicket import Frame, add_rate_metrics
+
+
+def _profiles():
+    out = []
+    for shape in [(2, 2, 2), (2, 2, 4)]:
+        cfg = KripkeConfig(decomp=Decomp3D(*shape), nx=4, ny=4, nz=4)
+        p = kripke_profile(cfg, name=f"kripke-{shape}",
+                           meta={"app": "kripke", "seconds": 0.1})
+        out.append(p)
+    return out
+
+
+def test_frame_from_profiles_and_groupby():
+    frame = Frame.from_profiles(_profiles())
+    assert len(frame) > 0
+    assert {"region", "n_ranks", "total_bytes_sent"} <= set(frame.columns())
+    groups = frame.group_by("region")
+    assert ("sweep_comm",) in groups
+    agg = frame.agg(("region",), {"tb": ("total_bytes_sent", sum)})
+    assert len(agg) >= 2
+
+
+def test_rate_metrics_and_reports():
+    profs = _profiles()
+    frame = add_rate_metrics(Frame.from_profiles(profs))
+    bw = [r["bandwidth_Bps"] for r in frame.where(region="sweep_comm")]
+    assert all(b > 0 for b in bw)
+    md = table4_metrics(profs)
+    assert "Total Bytes Sent" in md and "kripke-(2, 2, 2)" in md
+    assert "| Sends |" in table1_schema()
+    rpt = scaling_report(profs, "sweep_comm")
+    assert "n_ranks" in rpt
+    stats = region_stats_table(profs[0])
+    assert "sweep_comm" in stats
+    assert "bandwidth" in bandwidth_msgrate_report(profs).lower()
+
+
+def test_per_level_report_amg():
+    from repro.apps.amg import AMGConfig, profile as amg_profile
+    profs = [amg_profile(AMGConfig(decomp=Decomp3D(*s)),
+                         name=f"amg-{s}", meta={"app": "amg"})
+             for s in [(2, 2, 2), (2, 2, 4)]]
+    rpt = per_level_report(profs, level_prefix="mg_level_",
+                           metric="bytes_sent_max")
+    assert "multigrid level" in rpt
+    assert "| 8 |" in rpt or "| 16 |" in rpt   # n_ranks rows
+
+
+def test_frame_pivot_sort_csv():
+    rows = [{"a": 1, "b": "x", "v": 10}, {"a": 2, "b": "x", "v": 20},
+            {"a": 1, "b": "y", "v": 30}]
+    f = Frame(rows)
+    piv = f.pivot("a", "b", "v")
+    assert piv.rows[0]["x"] == 10 and piv.rows[0]["y"] == 30
+    assert f.sort("v", reverse=True).rows[0]["v"] == 30
+    assert "a,b,v" in f.to_csv(cols=["a", "b", "v"])
