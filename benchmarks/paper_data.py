@@ -15,7 +15,11 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 def profiles(exp_name: str) -> tuple:
     spec = PAPER_EXPERIMENTS[exp_name]
     out_dir = os.path.join(RESULTS, "profiles")
-    return tuple(run_experiment(spec, out_dir=out_dir, verbose=False))
+    # content-addressed on-disk cache: regenerating figures re-traces
+    # nothing unless configs or profiling code changed
+    cache_dir = os.path.join(out_dir, ".cache")
+    return tuple(run_experiment(spec, out_dir=out_dir, verbose=False,
+                                cache_dir=cache_dir))
 
 
 def write(name: str, text: str) -> str:

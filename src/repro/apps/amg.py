@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.apps.stencil import (AXIS_NAMES, Decomp3D, halo_exchange,
                                 laplacian_7pt, pad_with_halo)
-from repro.core import collectives as coll, comm_region, profile_traced
+from repro.core import collectives as coll, comm_region, compat, profile_traced
 from repro.core.profiler import CommProfile
 
 
@@ -171,8 +171,8 @@ def solve(cfg: AMGConfig, mesh):
                 with comm_region("reduce_norm"):
                     rn = jnp.sqrt(coll.psum((r * r).sum(), AXIS_NAMES))
                 return u, rn
-        return jax.shard_map(inner, mesh=mesh, in_specs=spec,
-                             out_specs=(spec, P()))(f)
+        return compat.shard_map(inner, mesh=mesh, in_specs=spec,
+                                out_specs=(spec, P()))(f)
     return run
 
 

@@ -37,7 +37,7 @@ from repro.apps.stencil import AXIS_NAMES, Decomp3D, bwd_perm, fwd_perm
 # exercises both directions of an axis (paper §IV-A: interior ranks have 6
 # communication partners, corner ranks 3).
 OCTANT_ORDER = (7, 0, 6, 1, 5, 2, 4, 3)
-from repro.core import collectives as coll, comm_region, profile_traced
+from repro.core import collectives as coll, comm_region, compat, profile_traced
 from repro.core.profiler import CommProfile
 
 
@@ -246,8 +246,8 @@ def distributed_sweep(cfg: KripkeConfig, mesh):
                 for o in range(cfg.n_octants):
                     out = out + sweep_octant(q, cfg, OCTANT_ORDER[o])
                 return out
-        return jax.shard_map(inner, mesh=mesh, in_specs=spec,
-                             out_specs=spec)(q)
+        return compat.shard_map(inner, mesh=mesh, in_specs=spec,
+                                out_specs=spec)(q)
     return run
 
 

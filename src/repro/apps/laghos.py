@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.apps.stencil import Decomp3D, halo_exchange, pad_with_halo
-from repro.core import collectives as coll, comm_region, profile_traced
+from repro.core import collectives as coll, comm_region, compat, profile_traced
 from repro.core.profiler import CommProfile
 
 AXES_2D = ("x", "y")
@@ -125,8 +125,8 @@ def run_steps(cfg: LaghosConfig, mesh):
                     state, dt = hydro_step(state, cfg)
                     dts.append(dt)
                 return state, jnp.stack(dts)
-        return jax.shard_map(inner, mesh=mesh, in_specs=(specs,),
-                             out_specs=(specs, P()))(state)
+        return compat.shard_map(inner, mesh=mesh, in_specs=(specs,),
+                                out_specs=(specs, P()))(state)
     return run
 
 

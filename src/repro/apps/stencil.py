@@ -7,8 +7,12 @@ cell) exchange.  On TPU the native point-to-point primitive is
 six ppermutes (±x, ±y, ±z) — exactly the kind of logical group the paper's
 communication regions were designed to bracket.
 
-Everything here runs *inside* ``jax.shard_map`` and uses the instrumented
-collectives so profiling sees it.
+Everything here runs *inside* ``shard_map`` and uses the instrumented
+collectives so profiling sees it.  All mesh / shard_map construction is
+routed through :mod:`repro.core.compat`, the version-portability substrate
+(jax 0.4.x and >= 0.5 expose these APIs under different names and
+signatures — see compat's module docstring for the exact contract), so
+this module works unchanged on every supported JAX.
 """
 
 from __future__ import annotations
@@ -17,11 +21,11 @@ from dataclasses import dataclass
 from functools import partial
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AbstractMesh, AxisType
+from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as coll
+from repro.core import compat
 from repro.core.topology import topology
 
 
@@ -51,11 +55,10 @@ class Decomp3D:
         return topology(*self.axes())
 
     def make_mesh(self, abstract: bool = False):
-        """Real mesh (needs devices) or AbstractMesh (trace-only)."""
-        kw = dict(axis_types=(AxisType.Auto,) * 3)
+        """Real mesh (needs devices) or abstract mesh (trace-only)."""
         if abstract:
-            return AbstractMesh(self.shape, AXIS_NAMES, **kw)
-        return jax.make_mesh(self.shape, AXIS_NAMES, **kw)
+            return compat.abstract_mesh(self.shape, AXIS_NAMES)
+        return compat.make_mesh(self.shape, AXIS_NAMES)
 
     def spec(self, extra_dims: int = 0) -> P:
         return P(*AXIS_NAMES, *([None] * extra_dims))
@@ -138,6 +141,6 @@ def laplacian_7pt(u_padded: jnp.ndarray, h2: float = 1.0) -> jnp.ndarray:
 
 
 def run_sharded(fn, decomp: Decomp3D, mesh, in_specs, out_specs):
-    """shard_map wrapper (single place to hold the deprecation boundary)."""
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs)
+    """shard_map wrapper (the deprecation boundary lives in compat)."""
+    return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)

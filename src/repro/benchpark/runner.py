@@ -1,15 +1,34 @@
 """Scaling-study runner: materialize an ExperimentSpec into CommProfiles.
 
-Profiles are trace-only (AbstractMesh), so paper-scale rank counts (64..512)
-run on this single-CPU container.  Each profile gets a roofline step-seconds
-estimate from the app's arithmetic (compute+memory+wire over the system
-model) so the §V bandwidth / message-rate analysis has a time denominator.
+Profiles are trace-only (abstract mesh via ``repro.core.compat``), so
+paper-scale rank counts (64..512) run on this single-CPU container.  Each
+profile gets a roofline step-seconds estimate from the app's arithmetic
+(compute+memory+wire over the system model) so the §V bandwidth /
+message-rate analysis has a time denominator.
+
+Two sweep-scalability features on top of the plain loop:
+
+* **Content-addressed profile cache** (:class:`ProfileCache`): each scaling
+  point is keyed by sha256 over (app, full config, decomposition, and a
+  fingerprint of the profiling/app source code) and stored as CommProfile
+  JSON.  Re-running a paper-scale sweep (64..512 ranks x 3 apps) loads
+  from disk instead of re-tracing; editing any fingerprinted module
+  invalidates every key, so stale profiles can never be served.
+* **Concurrent scaling points**: independent points of a sweep trace in a
+  thread pool.  The recorder and topology contexts are thread-local (see
+  ``repro.core.regions`` / ``repro.core.topology``), so concurrent traces
+  cannot cross-attribute events.
 """
 
 from __future__ import annotations
 
-import math
+import hashlib
+import importlib
+import json
 import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import asdict, is_dataclass
 from typing import Optional
 
 from repro.benchpark.spec import ExperimentSpec
@@ -46,26 +65,154 @@ def _roofline_seconds(app: str, cfg, profile: CommProfile) -> float:
     return max(flops / PEAK_FLOPS, mem / HBM_BW, wire / LINK_BW)
 
 
+# ---------------------------------------------------------------------------
+# Content-addressed profile cache
+# ---------------------------------------------------------------------------
+
+#: Modules whose source participates in the cache key.  Any change to the
+#: trace/profiling semantics or the app kernels changes the fingerprint and
+#: therefore invalidates every cached profile.
+_FINGERPRINT_MODULES = (
+    "repro.core.collectives", "repro.core.compat", "repro.core.profiler",
+    "repro.core.regions", "repro.core.topology",
+    "repro.apps.stencil", "repro.apps.amg", "repro.apps.kripke",
+    "repro.apps.laghos",
+)
+
+_fingerprint_memo: dict = {}
+
+
+def _code_fingerprint() -> str:
+    """Joint sha256 of the profiling/app module sources (memoized)."""
+    memo = _fingerprint_memo.get("fp")
+    if memo is not None:
+        return memo
+    h = hashlib.sha256()
+    for mod_name in _FINGERPRINT_MODULES:
+        mod = importlib.import_module(mod_name)
+        with open(mod.__file__, "rb") as f:
+            h.update(f.read())
+    _fingerprint_memo["fp"] = h.hexdigest()
+    return _fingerprint_memo["fp"]
+
+
+def _config_payload(cfg) -> dict:
+    if is_dataclass(cfg):
+        return asdict(cfg)
+    return dict(vars(cfg))
+
+
+class ProfileCache:
+    """Content-addressed CommProfile store (one JSON file per key).
+
+    The key covers app + full config + decomposition + code fingerprint;
+    experiment *labels* (spec name, scaling kind, free-form meta) are
+    deliberately excluded so identical physics shared between experiments
+    (e.g. the (4,4,4) point of the dane and tioga kripke sweeps) hits the
+    same entry — the runner re-stamps name/meta on every hit.
+    """
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+
+    def key(self, app: str, cfg, decomp) -> str:
+        payload = {"app": app, "config": _config_payload(cfg),
+                   "decomp": list(decomp), "code": _code_fingerprint()}
+        blob = json.dumps(payload, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key + ".json")
+
+    def get(self, key: str) -> Optional[CommProfile]:
+        try:
+            with open(self._path(key)) as f:
+                prof = CommProfile.from_json(f.read())
+        except (OSError, ValueError, KeyError, TypeError):
+            with self._lock:
+                self.misses += 1
+            return None
+        with self._lock:
+            self.hits += 1
+        return prof
+
+    def put(self, key: str, profile: CommProfile) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        path = self._path(key)
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        with open(tmp, "w") as f:
+            f.write(profile.to_json())
+        os.replace(tmp, path)          # atomic publish
+
+
+# ---------------------------------------------------------------------------
+# Sweep execution
+# ---------------------------------------------------------------------------
+
 def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
-                   verbose: bool = True) -> list:
+                   verbose: bool = True, *,
+                   cache: Optional[ProfileCache] = None,
+                   cache_dir: Optional[str] = None,
+                   max_workers: Optional[int] = None) -> list:
+    """Profile every scaling point of ``spec`` (cached + concurrent).
+
+    ``cache`` / ``cache_dir``: enable the content-addressed profile cache
+    (``cache`` wins if both are given).  ``max_workers``: thread-pool width
+    for independent points; defaults to min(4, n_points).  Results keep the
+    spec's point order regardless of completion order.
+    """
     from repro.apps import amg, kripke, laghos
     profile_fns = {"kripke": kripke.profile, "amg": amg.profile,
                    "laghos": laghos.profile}
-    profiles = []
-    for pt, cfg in spec.configs():
-        prof = profile_fns[spec.app](
-            cfg, name=f"{spec.name}-{pt.n_ranks}",
-            meta={"app": spec.app, "scaling": spec.scaling,
-                  "experiment": spec.name, "decomp": list(pt.decomp),
-                  "system": spec.system})
+    if cache is None and cache_dir is not None:
+        cache = ProfileCache(cache_dir)
+
+    points = spec.configs()
+    print_lock = threading.Lock()
+
+    def one_point(pt_cfg):
+        pt, cfg = pt_cfg
+        meta = {"app": spec.app, "scaling": spec.scaling,
+                "experiment": spec.name, "decomp": list(pt.decomp),
+                "system": spec.system}
+        key = cache.key(spec.app, cfg, pt.decomp) if cache else None
+        prof = cache.get(key) if cache else None
+        cached = prof is not None
+        if cached:
+            # identical physics, this experiment's labels
+            prof.name = f"{spec.name}-{pt.n_ranks}"
+            prof.meta = meta
+        else:
+            prof = profile_fns[spec.app](
+                cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta)
         prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
+        if cache and not cached:
+            cache.put(key, prof)
+        if verbose:                        # stream progress as points finish
+            tot = sum(s.total_bytes_sent for s in prof.regions.values())
+            tag = " [cached]" if cached else ""
+            with print_lock:
+                print(f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
+                      f"{len(prof.regions)} regions, "
+                      f"{tot:.3e} bytes sent{tag}", flush=True)
+        return pt, prof
+
+    if max_workers is None:
+        max_workers = min(4, len(points)) or 1
+    if max_workers > 1 and len(points) > 1:
+        with ThreadPoolExecutor(max_workers=max_workers) as ex:
+            results = list(ex.map(one_point, points))   # keeps point order
+    else:
+        results = [one_point(p) for p in points]
+
+    profiles = []
+    for pt, prof in results:
         profiles.append(prof)
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)
             prof.save(os.path.join(out_dir,
                                    f"{spec.name}-{pt.n_ranks:05d}.json"))
-        if verbose:
-            tot = sum(s.total_bytes_sent for s in prof.regions.values())
-            print(f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
-                  f"{len(prof.regions)} regions, {tot:.3e} bytes sent")
     return profiles

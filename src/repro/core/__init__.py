@@ -1,6 +1,9 @@
 """Core: communication-region profiling (the paper's contribution, in JAX).
 
 Public API:
+  compat                     — JAX version-portability substrate (meshes,
+                               shard_map, axis types); all mesh/shard_map
+                               construction in this repo routes through it
   comm_region(name)          — mark a communication region (Caliper analog)
   recording()                — install a profiling recorder for a trace
   profile_traced(fn, *args)  — abstract-trace fn and return its CommProfile
@@ -9,6 +12,7 @@ Public API:
   Frame / reports            — Thicket-style analysis & paper-table emitters
 """
 
+from repro.core import compat  # noqa: F401
 from repro.core.regions import (  # noqa: F401
     comm_region, recording, current_region, COMM_REGION_SCOPE_PREFIX,
 )

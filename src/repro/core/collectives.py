@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
 from repro.core import regions as _regions
 from repro.core.topology import active_topology
 
@@ -55,9 +56,7 @@ def _axis_size(axis_name) -> int:
             return topo.axis_size(axis_name)
         except ValueError:
             pass
-    if isinstance(axis_name, (tuple, list)):
-        return math.prod(lax.axis_size(a) for a in axis_name)
-    return lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 def _flatten(tree):

@@ -1,0 +1,190 @@
+"""Version-portability substrate for JAX mesh / shard_map APIs.
+
+Everything in this repo that builds a device mesh, an abstract (trace-only)
+mesh, or a shard-mapped function goes through this module and **only** this
+module.  The motivation is the same one ucTrace gives for layering a
+profiler behind a stable abstraction: the underlying stack churns, and a
+trace-time profiling substrate must not die with it.  JAX moved
+``shard_map`` out of ``jax.experimental``, grew ``AxisType``, and changed
+the ``AbstractMesh`` constructor between 0.4.x and 0.5+; a reproduction
+whose imports hard-code either side cannot even be collected on the other.
+
+Supported JAX versions
+----------------------
+* **jax 0.4.3x** (CI pins 0.4.37): ``jax.experimental.shard_map.shard_map``
+  (``check_rep`` kwarg), ``jax.make_mesh(shapes, names)`` without
+  ``axis_types``, ``AbstractMesh(shape_tuple)`` taking ``(name, size)``
+  pairs, and no ``jax.sharding.AxisType``.
+* **jax >= 0.5**: ``jax.shard_map`` (``check_vma`` kwarg),
+  ``jax.make_mesh(..., axis_types=...)``, ``AbstractMesh(axis_sizes,
+  axis_names, axis_types=...)``, and ``AxisType.Auto``.
+
+Contract
+--------
+``make_mesh(axis_shapes, axis_names)``
+    Real device mesh with every axis in Auto mode where the concept
+    exists; plain mesh otherwise.  Identical call sites on both versions.
+``abstract_mesh(axis_shapes, axis_names)``
+    Trace-only mesh (no devices needed) usable with ``shard_map`` +
+    ``jax.eval_shape`` — the substrate under all paper-scale profiling.
+``shard_map(fn, mesh=..., in_specs=..., out_specs=..., check_vma=None)``
+    The repo-wide spelling of shard_map.  ``check_vma`` maps to the old
+    ``check_rep`` on 0.4.x; ``None`` means library default on both.
+``axis_type_kwargs(n_axes)``
+    ``{"axis_types": (AxisType.Auto,) * n_axes}`` when AxisType exists,
+    else ``{}`` — for callers that must invoke ``jax.make_mesh`` directly.
+``AxisType``
+    Re-export when present, ``None`` otherwise; gate on ``HAS_AXIS_TYPE``.
+
+Callers must not import ``AxisType``, ``AbstractMesh`` or ``shard_map``
+from jax directly; new version drift then lands in exactly one file.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import (  # noqa: F401  (re-exports: one-stop import)
+    AbstractMesh as _AbstractMesh,
+    Mesh,
+    NamedSharding,
+    PartitionSpec,
+)
+
+
+def _version_tuple(v: str) -> tuple:
+    parts = []
+    for p in v.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts)
+
+
+#: Parsed ``jax.__version__`` (e.g. ``(0, 4, 37)``).
+JAX_VERSION: tuple = _version_tuple(jax.__version__)
+
+
+# --- AxisType ---------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPE = True
+except ImportError:            # jax 0.4.x: implicit-Auto semantics only
+    AxisType = None            # type: ignore[assignment]
+    HAS_AXIS_TYPE = False
+
+
+def axis_type_kwargs(n_axes: int) -> dict:
+    """Kwargs marking ``n_axes`` mesh axes Auto, or ``{}`` pre-AxisType."""
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+    return {}
+
+
+# --- shard_map --------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.5
+    _shard_map_impl = jax.shard_map
+    _SHARD_MAP_SOURCE = "jax.shard_map"
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _SHARD_MAP_SOURCE = "jax.experimental.shard_map"
+
+_SHARD_MAP_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """Portable ``shard_map`` (the only spelling used in this repo).
+
+    ``check_vma=None`` leaves replication/VMA checking at the library
+    default; an explicit bool is forwarded as ``check_vma`` (new) or
+    ``check_rep`` (0.4.x) — same meaning, renamed upstream.
+    """
+    kwargs: dict = {}
+    if check_vma is not None:
+        flag = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS \
+            else "check_rep"
+        kwargs[flag] = check_vma
+    return _shard_map_impl(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name):
+    """Size of a named mesh axis, inside shard_map.
+
+    ``jax.lax.axis_size`` only exists on newer JAX; on 0.4.x,
+    ``lax.psum(1, axis)`` is the idiomatic equivalent (it is evaluated
+    statically at trace time — no collective is emitted).  Accepts a tuple
+    of axis names with product semantics, like the new API.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        if isinstance(axis_name, (tuple, list)):
+            out = 1
+            for a in axis_name:
+                out *= jax.lax.axis_size(a)
+            return out
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# --- meshes -----------------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Optional[Sequence[Any]] = None):
+    """Real device mesh, Auto axis types where the concept exists."""
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    kwargs: dict = axis_type_kwargs(len(shapes))
+    if devices is not None:
+        kwargs["devices"] = devices
+    try:
+        return jax.make_mesh(shapes, names, **kwargs)
+    except TypeError:
+        # AxisType exists but this jax.make_mesh predates the kwarg.
+        kwargs.pop("axis_types", None)
+        return jax.make_mesh(shapes, names, **kwargs)
+
+
+_ABSTRACT_MESH_PAIR_STYLE = "shape_tuple" in inspect.signature(
+    _AbstractMesh.__init__).parameters
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Trace-only mesh: shard_map structure without any devices.
+
+    This is what lets paper-scale rank counts (64..512) profile on a
+    single-CPU host — ``jax.eval_shape`` over a shard-mapped function on
+    an abstract mesh records the full communication structure.
+    """
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    if _ABSTRACT_MESH_PAIR_STYLE:                  # jax 0.4.x
+        return _AbstractMesh(tuple(zip(names, shapes)))
+    return _AbstractMesh(shapes, names, **axis_type_kwargs(len(shapes)))
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``.
+
+    jax 0.4.x returns a one-element list of dicts (one per executable);
+    newer jax returns the dict directly.  Always returns a dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
+def describe() -> dict:
+    """Which implementations this substrate resolved to (for debugging)."""
+    return {
+        "jax_version": jax.__version__,
+        "shard_map": _SHARD_MAP_SOURCE,
+        "has_axis_type": HAS_AXIS_TYPE,
+        "abstract_mesh_style": (
+            "pairs" if _ABSTRACT_MESH_PAIR_STYLE else "sizes+names"),
+    }

@@ -13,6 +13,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import registry            # noqa: E402
+from repro.core import compat                 # noqa: E402
 from repro.configs.base import SHAPES, model_flops  # noqa: E402
 from repro.core.hlo import (parse_hlo_collectives_with_loops,  # noqa: E402
                             summarize_collectives)
@@ -100,7 +101,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    xla_cost = compiled.cost_analysis()
+    xla_cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     ops = parse_hlo_collectives_with_loops(hlo, total_devices=n_dev)
     summ = summarize_collectives(ops)

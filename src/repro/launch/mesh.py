@@ -4,20 +4,21 @@ Defined as functions (never module-level constants) so importing this module
 never touches jax device state.  The dry-run process sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import (see dryrun.py's first two lines).
+
+Mesh construction goes through :mod:`repro.core.compat` so this module
+imports and runs on both jax 0.4.x (no ``AxisType``) and >= 0.5.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def mesh_shape_dict(mesh) -> dict:
@@ -26,5 +27,4 @@ def mesh_shape_dict(mesh) -> dict:
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh for in-process tests (1 device by default)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

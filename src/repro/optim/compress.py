@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as coll
+from repro.core import compat
 from repro.core.regions import comm_region
 
 
@@ -31,7 +32,7 @@ def compressed_psum(grads, err_state, axis_name):
     collective) makes the summed int8 payload exactly dequantizable; the
     quantization residual is carried into the next step (error feedback).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
 
     def one(g, err):
         gf = g.astype(jnp.float32) + err
@@ -67,7 +68,7 @@ def make_compressed_allreduce(mesh, dp_axes=("data",)):
             return compressed_psum(g, e, axis)
         spec = jax.tree.map(lambda _: P(), grads)
         espec = jax.tree.map(lambda _: P(), err)
-        return jax.shard_map(
+        return compat.shard_map(
             inner, mesh=mesh,
             in_specs=(spec, espec), out_specs=(spec, espec))(grads, err)
     return fn

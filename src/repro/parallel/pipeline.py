@@ -24,6 +24,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import collectives as coll
+from repro.core import compat
 from repro.core.regions import comm_region
 
 
@@ -85,7 +86,7 @@ def run_pipeline(stage_fn, stage_params_stacked, microbatches, mesh,
         return pipeline_forward(stage_fn, n_stages, axis)(params, mbs)
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params_stacked)
-    return jax.shard_map(
+    return compat.shard_map(
         inner, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
         check_vma=False)(stage_params_stacked, microbatches)

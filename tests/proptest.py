@@ -1,0 +1,85 @@
+"""Property-testing facade: real hypothesis when installed, fallback shim.
+
+The tier-1 environment does not guarantee ``hypothesis`` (and this repo
+must not grow new dependencies), but the property tests are worth keeping.
+This module exports ``given`` / ``settings`` / ``st`` from hypothesis when
+available, and otherwise a minimal deterministic re-implementation:
+
+* ``st.integers(lo, hi)`` — uniform ints from a fixed-seed PRNG;
+* ``st.composite`` — same draw-based composition protocol;
+* ``@given(...)`` — runs the test body ``max_examples`` times (from an
+  enclosing ``@settings``, default 20) with independently drawn examples.
+
+The fallback is deterministic across runs (seeded), so failures reproduce;
+it does not shrink counterexamples.  Only the subset of the hypothesis API
+used by this test suite is provided.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def draw_fn(rng):
+                    return fn(lambda strat: strat.example(rng),
+                              *args, **kwargs)
+                return _Strategy(draw_fn)
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                # read max_examples at call time so @settings works in
+                # either decorator order (real hypothesis allows both)
+                n = getattr(wrapper, "_prop_max_examples",
+                            getattr(fn, "_prop_max_examples", 20))
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    fn(*(s.example(rng) for s in strategies))
+
+            # pytest introspects the signature for fixtures; the example
+            # args are supplied here, not by fixtures.
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__dict__["__wrapped__"]
+            return wrapper
+        return deco

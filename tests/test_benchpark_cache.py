@@ -1,0 +1,99 @@
+"""Benchpark runner: profile cache hit/miss/invalidation + concurrency."""
+
+from repro.benchpark import runner
+from repro.benchpark.runner import ProfileCache, run_experiment
+from repro.benchpark.spec import ExperimentSpec, ScalePoint
+
+
+def _spec():
+    return ExperimentSpec(
+        name="kripke-cache-test", app="kripke", scaling="weak",
+        points=(ScalePoint((1, 1, 2)), ScalePoint((1, 2, 2)),
+                ScalePoint((2, 2, 2))),
+        app_params=dict(nx=4, ny=4, nz=4, n_octants=1))
+
+
+def _bomb(*a, **kw):
+    raise AssertionError("re-traced a point that should have been cached")
+
+
+def test_cache_miss_then_hit(tmp_path, monkeypatch):
+    cache = ProfileCache(str(tmp_path / "cache"))
+    first = run_experiment(_spec(), verbose=False, cache=cache)
+    assert cache.misses == 3 and cache.hits == 0
+    assert len(first) == 3
+
+    # Second invocation must be served entirely from disk: arm a bomb in
+    # place of the tracer and require identical profiles.
+    from repro.apps import kripke
+    monkeypatch.setattr(kripke, "profile", _bomb)
+    cache2 = ProfileCache(str(tmp_path / "cache"))
+    second = run_experiment(_spec(), verbose=False, cache=cache2)
+    assert cache2.hits == 3 and cache2.misses == 0
+    for a, b in zip(first, second):
+        assert a.to_json() == b.to_json()
+
+
+def test_cache_key_covers_config_and_code_version(tmp_path, monkeypatch):
+    cache = ProfileCache(str(tmp_path / "cache"))
+    spec = _spec()
+    _, cfg = spec.configs()[0]
+    k1 = cache.key("kripke", cfg, (1, 1, 2))
+    # config change -> different key
+    from dataclasses import replace
+    assert cache.key("kripke", replace(cfg, nx=8), (1, 1, 2)) != k1
+    # decomp change -> different key
+    assert cache.key("kripke", cfg, (2, 1, 1)) != k1
+    # code change -> different key (fingerprint participates)
+    monkeypatch.setattr(runner, "_code_fingerprint", lambda: "deadbeef")
+    assert cache.key("kripke", cfg, (1, 1, 2)) != k1
+
+
+def test_code_change_invalidates_cache(tmp_path, monkeypatch):
+    cache = ProfileCache(str(tmp_path / "cache"))
+    run_experiment(_spec(), verbose=False, cache=cache)
+    assert cache.misses == 3
+
+    # Simulate an edit to a fingerprinted module: every key changes, the
+    # old entries can never be served, and the sweep re-traces.
+    monkeypatch.setattr(runner, "_code_fingerprint", lambda: "other-code")
+    cache2 = ProfileCache(str(tmp_path / "cache"))
+    run_experiment(_spec(), verbose=False, cache=cache2)
+    assert cache2.hits == 0 and cache2.misses == 3
+
+
+def test_cache_hit_restamps_experiment_labels(tmp_path):
+    """Two experiments sharing a physics point share the cache entry but
+    keep their own names/meta."""
+    cache = ProfileCache(str(tmp_path / "cache"))
+    a = run_experiment(_spec(), verbose=False, cache=cache)
+    spec_b = ExperimentSpec(
+        name="kripke-cache-test-b", app="kripke", scaling="weak",
+        points=_spec().points, app_params=_spec().app_params)
+    b = run_experiment(spec_b, verbose=False, cache=cache)
+    assert cache.hits == 3
+    assert b[0].name == "kripke-cache-test-b-2"
+    assert b[0].meta["experiment"] == "kripke-cache-test-b"
+    assert a[0].meta["experiment"] == "kripke-cache-test"
+    # physics identical
+    assert {r: s.to_dict() for r, s in a[0].regions.items()} == \
+        {r: s.to_dict() for r, s in b[0].regions.items()}
+
+
+def test_concurrent_points_match_serial(tmp_path):
+    serial = run_experiment(_spec(), verbose=False, max_workers=1)
+    concur = run_experiment(_spec(), verbose=False, max_workers=3)
+    assert [p.name for p in serial] == [p.name for p in concur]
+    for a, b in zip(serial, concur):
+        assert a.to_json() == b.to_json()
+
+
+def test_out_dir_still_written_on_cache_hit(tmp_path):
+    cache = ProfileCache(str(tmp_path / "cache"))
+    run_experiment(_spec(), verbose=False, cache=cache)
+    out = tmp_path / "out"
+    run_experiment(_spec(), out_dir=str(out), verbose=False, cache=cache)
+    names = sorted(p.name for p in out.iterdir())
+    assert names == ["kripke-cache-test-00002.json",
+                     "kripke-cache-test-00004.json",
+                     "kripke-cache-test-00008.json"]

@@ -3,10 +3,11 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (CommPatternProfiler, comm_region, profile_traced,
-                        recording)
+from proptest import given, settings, st
+
+from repro.core import (CommPatternProfiler, comm_region, compat,
+                        profile_traced, recording)
 from repro.core import collectives as coll
 from repro.core.regions import RegionEvent, RegionRecorder
 from repro.core.topology import Topology, topology
@@ -98,8 +99,8 @@ def test_topology_groups_partition():
 # ---------------------------------------------------------------------------
 
 def test_profile_traced_ring():
-    from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
-    mesh = AbstractMesh((8,), ("x",), axis_types=(AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    mesh = compat.abstract_mesh((8,), ("x",))
 
     def step(u):
         def inner(u):
@@ -108,8 +109,8 @@ def test_profile_traced_ring():
             with comm_region("sum"):
                 s = coll.psum(u.sum(), "x")
             return u + g + s
-        return jax.shard_map(inner, mesh=mesh, in_specs=P("x"),
-                             out_specs=P("x"))(u)
+        return compat.shard_map(inner, mesh=mesh, in_specs=P("x"),
+                                out_specs=P("x"))(u)
 
     u = jax.ShapeDtypeStruct((64, 32), jnp.float32)
     with topology(("x", 8)):
@@ -126,8 +127,8 @@ def test_profile_traced_ring():
 
 
 def test_nested_regions_innermost_attribution():
-    from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
-    mesh = AbstractMesh((4,), ("x",), axis_types=(AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    mesh = compat.abstract_mesh((4,), ("x",))
 
     def step(u):
         def inner(u):
@@ -135,8 +136,8 @@ def test_nested_regions_innermost_attribution():
                 with comm_region("inner"):
                     g = coll.ppermute(u, "x", [(0, 1)])
             return u + g
-        return jax.shard_map(inner, mesh=mesh, in_specs=P("x"),
-                             out_specs=P("x"))(u)
+        return compat.shard_map(inner, mesh=mesh, in_specs=P("x"),
+                                out_specs=P("x"))(u)
 
     with topology(("x", 4)):
         prof = profile_traced(step, jax.ShapeDtypeStruct((8,), jnp.float32))

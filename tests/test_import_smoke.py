@@ -1,0 +1,75 @@
+"""Import-smoke regression: API drift must fail as ONE clear test.
+
+The seed suite died with four opaque collection errors when JAX moved
+``shard_map``/``AxisType``; these tests turn any future drift into a single
+readable failure listing exactly which ``repro.*`` modules broke, and
+assert that pytest collection of the whole suite stays clean.
+
+Both checks run in a subprocess: importing every module must not leak
+side effects (e.g. ``repro.launch.dryrun`` sets ``XLA_FLAGS`` at import,
+which would poison jax device-count state in this process).
+"""
+
+import os
+import subprocess
+import sys
+
+from helpers import REPO_SRC
+
+_TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+_WALK_AND_IMPORT = """
+import importlib, os
+import repro
+
+# filesystem walk: repro uses namespace packages, which pkgutil skips
+root = list(repro.__path__)[0]
+names = []
+for dirpath, _dirs, files in os.walk(root):
+    rel = os.path.relpath(dirpath, os.path.dirname(root))
+    pkg = rel.replace(os.sep, ".")
+    for f in sorted(files):
+        if f.endswith(".py"):
+            mod = pkg if f == "__init__.py" else f"{pkg}.{f[:-3]}"
+            names.append(mod)
+names = sorted(set(names))
+assert len(names) > 30, f"module walk looks broken: {names}"
+
+failures = []
+for name in names:
+    try:
+        importlib.import_module(name)
+    except Exception as e:
+        failures.append(f"{name}: {type(e).__name__}: {e}")
+if failures:
+    raise SystemExit("unimportable modules:\\n" + "\\n".join(failures))
+print(f"OK {len(names)} modules")
+"""
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC)
+    return env
+
+
+def test_every_repro_module_imports():
+    proc = subprocess.run([sys.executable, "-c", _WALK_AND_IMPORT],
+                          env=_env(), capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert proc.stdout.startswith("OK")
+
+
+def test_pytest_collection_has_zero_errors():
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q", _TESTS_DIR,
+         "-p", "no:cacheprovider"],
+        env=_env(), cwd=os.path.dirname(_TESTS_DIR),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, \
+        f"collection errors:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    # the summary line must say "N tests collected", with no error count
+    summary = proc.stdout.strip().splitlines()[-1]
+    assert "collected" in summary and "error" not in summary, summary

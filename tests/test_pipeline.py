@@ -6,10 +6,10 @@ from helpers import run_with_devices
 def test_pipeline_matches_sequential_4stages():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.core import compat
         from repro.parallel.pipeline import run_pipeline
 
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+        mesh = compat.make_mesh((4,), ("pod",))
         S, M, mb, D = 4, 6, 2, 8
         ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) / np.sqrt(D)
 
@@ -31,12 +31,11 @@ def test_pipeline_comm_profile():
     """The pipeline's shifts are visible to the comm-region profiler."""
     run_with_devices("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
-        from repro.core import profile_traced
+        from repro.core import compat, profile_traced
         from repro.core.topology import topology
         from repro.parallel.pipeline import run_pipeline
 
-        mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+        mesh = compat.make_mesh((4,), ("pod",))
         ws = jnp.zeros((4, 8, 8))
 
         def stage_fn(w, x):

@@ -1,0 +1,154 @@
+"""Vectorized vs reference profiler accounting must be bit-identical.
+
+The NumPy accumulation path (``impl="numpy"``, the default) replaces the
+original dict-of-dicts accounting (kept as ``impl="reference"``).  These
+tests assert full RegionStats equality — sends/recvs/dest_ranks/src_ranks,
+bytes min/max, coll, coll_bytes, totals, largest_send, kinds, n_ranks — on
+randomized RegionEvent streams and on the real kripke/amg/laghos profile
+paths.
+"""
+
+import random
+
+from proptest import given, settings, st
+
+from repro.apps.stencil import Decomp3D
+from repro.core.profiler import CommPatternProfiler, CommProfile
+from repro.core.regions import RegionEvent, RegionRecorder
+
+
+# ---------------------------------------------------------------------------
+# Randomized event streams
+# ---------------------------------------------------------------------------
+
+def _random_p2p_event(rng, region, n):
+    """A ppermute-like event with deliberately sparse/misaligned dicts.
+
+    Keys are dropped independently per dict so the masking semantics
+    (bytes/dest entries for ranks outside sends|recvs are ignored) get
+    exercised, not just the aligned common case.
+    """
+    ranks = [r for r in range(n) if rng.random() < 0.7]
+    sends = {r: rng.randint(0, 5) for r in ranks if rng.random() < 0.8}
+    recvs = {r: rng.randint(0, 5) for r in ranks if rng.random() < 0.8}
+    extra = {r for r in range(n) if rng.random() < 0.2}   # outside ranks
+    dests = {r: {rng.randint(0, n - 1) for _ in range(rng.randint(0, 4))}
+             for r in list(sends) + list(extra)}
+    srcs = {r: {rng.randint(0, n - 1) for _ in range(rng.randint(0, 4))}
+            for r in list(recvs) + list(extra)}
+    bsent = {r: rng.randint(0, 1 << 16)
+             for r in list(sends) + list(extra) if rng.random() < 0.9}
+    brecv = {r: rng.randint(0, 1 << 16)
+             for r in list(recvs) + list(extra) if rng.random() < 0.9}
+    return RegionEvent(region=region, region_path=(region,),
+                       kind=rng.choice(["ppermute", "send_recv"]),
+                       sends_per_rank=sends, recvs_per_rank=recvs,
+                       dest_ranks=dests, src_ranks=srcs,
+                       bytes_sent=bsent, bytes_recv=brecv)
+
+
+def _random_coll_event(rng, region, n):
+    bsent = {r: rng.randint(1, 1 << 12) for r in range(n)
+             if rng.random() < 0.6}
+    return RegionEvent(region=region, region_path=(region,),
+                       kind=rng.choice(["psum", "all_gather", "pmin"]),
+                       sends_per_rank={}, recvs_per_rank={},
+                       dest_ranks={}, src_ranks={},
+                       bytes_sent=bsent, bytes_recv=dict(bsent),
+                       is_collective=1)
+
+
+def _random_recorder(seed):
+    rng = random.Random(seed)
+    rec = RegionRecorder()
+    n = rng.randint(2, 24)
+    regions = [f"reg{i}" for i in range(rng.randint(1, 5))]
+    for reg in regions:
+        for _ in range(rng.randint(1, 3)):
+            rec.enter(reg)
+    # a region that was entered but never communicated
+    rec.enter("quiet")
+    for _ in range(rng.randint(0, 40)):
+        reg = rng.choice(regions)
+        if rng.random() < 0.3:
+            rec.record(_random_coll_event(rng, reg, n))
+        else:
+            rec.record(_random_p2p_event(rng, reg, n))
+    return rec
+
+
+def _assert_profiles_equal(a: CommProfile, b: CommProfile):
+    assert a.name == b.name
+    assert a.n_ranks == b.n_ranks
+    assert list(a.regions) == list(b.regions)
+    for rname in a.regions:
+        assert a.regions[rname].to_dict() == b.regions[rname].to_dict(), \
+            rname
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=60, deadline=None)
+def test_parity_on_random_streams(seed):
+    rec = _random_recorder(seed)
+    repl = (seed % 3) + 1
+    new = CommPatternProfiler.from_recorder(rec, name="p", replication=repl)
+    ref = CommPatternProfiler.from_recorder(rec, name="p", replication=repl,
+                                            impl="reference")
+    _assert_profiles_equal(new, ref)
+
+
+def test_parity_empty_recorder():
+    rec = RegionRecorder()
+    new = CommPatternProfiler.from_recorder(rec)
+    ref = CommPatternProfiler.from_recorder(rec, impl="reference")
+    _assert_profiles_equal(new, ref)
+    assert new.n_ranks == 0 and new.regions == {}
+
+
+def test_unknown_impl_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        CommPatternProfiler.from_recorder(RegionRecorder(), impl="magic")
+
+
+# ---------------------------------------------------------------------------
+# Real app profile paths (acceptance: kripke/amg/laghos reproduce exactly)
+# ---------------------------------------------------------------------------
+
+def _profile_with_impl(profile_fn, cfg, impl):
+    orig = CommPatternProfiler.from_recorder
+
+    def patched(rec, **kw):
+        kw["impl"] = impl
+        return orig(rec, **kw)
+
+    CommPatternProfiler.from_recorder = staticmethod(patched)
+    try:
+        return profile_fn(cfg)
+    finally:
+        CommPatternProfiler.from_recorder = staticmethod(orig)
+
+
+def _check_app(profile_fn, cfg):
+    new = _profile_with_impl(profile_fn, cfg, "numpy")
+    ref = _profile_with_impl(profile_fn, cfg, "reference")
+    _assert_profiles_equal(new, ref)
+    assert new.to_json() == ref.to_json()
+
+
+def test_parity_kripke_profile_path():
+    from repro.apps.kripke import KripkeConfig, profile
+    _check_app(profile, KripkeConfig(decomp=Decomp3D(2, 2, 2),
+                                     nx=4, ny=4, nz=4, n_octants=2,
+                                     fuse_messages=False))
+
+
+def test_parity_amg_profile_path():
+    from repro.apps.amg import AMGConfig, profile
+    _check_app(profile, AMGConfig(decomp=Decomp3D(2, 2, 2)))
+
+
+def test_parity_laghos_profile_path():
+    from repro.apps.laghos import LaghosConfig, profile
+    _check_app(profile, LaghosConfig(decomp=Decomp3D(2, 2, 1),
+                                     nx=32, ny=32, n_steps=1))

@@ -6,9 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-
 from helpers import run_with_devices
+from proptest import given, settings, st
 
 from repro.ckpt.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -144,11 +143,11 @@ def test_ckpt_elastic_restore_across_meshes(tmp_path):
     """Save on one 'mesh', restore onto another (8 devices, subprocess)."""
     run_with_devices(f"""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import compat
         from repro.ckpt.manager import CheckpointManager
-        mesh1 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(AxisType.Auto,) * 2)
+        mesh1 = compat.make_mesh((8,), ("data",))
+        mesh2 = compat.make_mesh((2, 4), ("data", "model"))
         tree = {{"w": jax.device_put(jnp.arange(64.0).reshape(8, 8),
                  NamedSharding(mesh1, P("data", None)))}}
         mgr = CheckpointManager({str(tmp_path)!r}, retain=1)
@@ -199,16 +198,17 @@ def test_unknown_logical_axis_rejected():
 def test_compressed_allreduce_8ranks():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro.core import compat
         from repro.optim.compress import compressed_psum, init_error_state
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("data",))
 
         def run(grads, err):
             def inner(g, e):
                 return compressed_psum(g, e, "data")
-            return jax.shard_map(inner, mesh=mesh,
-                                 in_specs=(P("data"), P("data")),
-                                 out_specs=(P("data"), P("data")))(grads, err)
+            return compat.shard_map(inner, mesh=mesh,
+                                    in_specs=(P("data"), P("data")),
+                                    out_specs=(P("data"), P("data")))(grads, err)
 
         # per-shard distinct gradients; exact mean known
         g = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8 * 64) / 100.0
