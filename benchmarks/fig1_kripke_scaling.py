@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 from paper_data import profiles, write
-from repro.core.thicket import Frame
 
 
 def run() -> list:

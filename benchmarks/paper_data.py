@@ -5,7 +5,7 @@ from __future__ import annotations
 import functools
 import os
 
-from repro.benchpark.runner import run_experiment
+from repro.benchpark.runner import default_cache_dir, run_experiment
 from repro.benchpark.spec import PAPER_EXPERIMENTS
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -15,11 +15,12 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 def profiles(exp_name: str) -> tuple:
     spec = PAPER_EXPERIMENTS[exp_name]
     out_dir = os.path.join(RESULTS, "profiles")
-    # content-addressed on-disk cache: regenerating figures re-traces
-    # nothing unless configs or profiling code changed
-    cache_dir = os.path.join(out_dir, ".cache")
+    # content-addressed on-disk cache, shared with the benchpark runner and
+    # the CI smoke sweep (REPRO_PROFILE_CACHE_DIR overrides the location):
+    # regenerating figures re-traces nothing unless configs or profiling
+    # code changed
     return tuple(run_experiment(spec, out_dir=out_dir, verbose=False,
-                                cache_dir=cache_dir))
+                                cache_dir=default_cache_dir()))
 
 
 def write(name: str, text: str) -> str:

@@ -1,8 +1,10 @@
-# One function per paper table/figure + the assignment's roofline analysis.
+# One function per paper table/figure + the assignment's roofline analysis,
+# plus a --smoke mode for CI (paper-scale sweep, cache-serve assertion).
 # Prints ``name,us_per_call,derived`` CSV rows; markdown artifacts land in
 # benchmarks/results/.
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -10,7 +12,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
+def run_figures() -> None:
     import fig1_kripke_scaling
     import fig2_amg_levels
     import fig3_amg_ranks
@@ -37,6 +39,65 @@ def main() -> None:
             continue
         for row_name, us, derived in rows:
             print(f"{row_name},{us:.2f},{derived}")
+
+
+def run_smoke(out_dir: str) -> None:
+    """CI smoke: sweep the paper's 64..512-rank kripke experiment twice.
+
+    The first pass traces under the process-pool executor and populates the
+    shared profile cache; the second (serial) pass must be served entirely
+    from the cache and produce byte-identical profiles.  Profile JSONs land
+    in ``out_dir`` for the workflow to upload as an artifact.
+    """
+    import time
+
+    from repro.benchpark.runner import (
+        ProfileCache,
+        default_cache_dir,
+        run_experiment,
+    )
+    from repro.benchpark.spec import PAPER_EXPERIMENTS
+
+    spec = PAPER_EXPERIMENTS["kripke-weak-dane"]  # 64..512 ranks
+    cache_root = default_cache_dir()
+    n = len(spec.points)
+
+    cache = ProfileCache(cache_root)
+    t0 = time.perf_counter()
+    first = run_experiment(spec, out_dir=out_dir, cache=cache, executor="process")
+    t1 = time.perf_counter()
+    assert len(first) == n
+
+    cache2 = ProfileCache(cache_root)
+    second = run_experiment(spec, out_dir=out_dir, cache=cache2, executor="serial")
+    t2 = time.perf_counter()
+    assert cache2.hits == n and cache2.misses == 0, (cache2.hits, cache2.misses)
+    for a, b in zip(first, second):
+        assert a.to_json() == b.to_json()
+    print(
+        f"smoke OK: {n} points in {out_dir}; "
+        f"first pass {t1 - t0:.1f}s (executor=process, hits={cache.hits}), "
+        f"second pass {t2 - t1:.1f}s (serial, served from cache)"
+    )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description="paper figures / CI smoke")
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="run the cache/process-pool smoke sweep instead of the figures",
+    )
+    parser.add_argument(
+        "--out",
+        default=os.path.join(os.path.dirname(__file__), "results", "smoke"),
+        help="output directory for smoke profile JSONs",
+    )
+    args = parser.parse_args()
+    if args.smoke:
+        run_smoke(args.out)
+    else:
+        run_figures()
 
 
 if __name__ == "__main__":

@@ -24,10 +24,10 @@ bit-comparable to the single-domain reference.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -116,31 +116,31 @@ def _local_sweep(q, in_x, in_y, in_z, cfg: KripkeConfig, signs=(1, 1, 1)):
             out_face(psi, 4, sz))
 
 
-def _active_pairs(dc: Decomp3D, stage: int, axis: int, signs) -> list:
-    """Global-rank (src, dst) pairs logically active at one pass stage.
+def _active_pairs(dc: Decomp3D, stage: int, axis: int, signs):
+    """Global-rank (src, dst) pairs logically active at one pass stage,
+    as an ``(P, 2)`` int64 array.
 
     MPI Kripke only posts sends from ranks on the active plane of the
     current axis pass; the profiler records these while the TPU executes
-    the full (dense) permute.
+    the full (dense) permute.  The active plane is a single coordinate
+    slab along ``axis``, so the pair set is the row-major enumeration of
+    the other two axes broadcast against the slab/neighbor offsets — no
+    Python loop over ranks.
     """
-    pairs = []
     sizes = dc.shape
-    for i in range(sizes[0]):
-        for j in range(sizes[1]):
-            for k in range(sizes[2]):
-                c = (i, j, k)
-                t = (sizes[axis] - 1 - c[axis]) if signs[axis] < 0 \
-                    else c[axis]
-                if t != stage:
-                    continue
-                nc = list(c)
-                nc[axis] += 1 if signs[axis] > 0 else -1
-                if not (0 <= nc[axis] < sizes[axis]):
-                    continue
-                rank = (c[0] * sizes[1] + c[1]) * sizes[2] + c[2]
-                nrank = (nc[0] * sizes[1] + nc[1]) * sizes[2] + nc[2]
-                pairs.append((rank, nrank))
-    return pairs
+    step = 1 if signs[axis] > 0 else -1
+    c = stage if signs[axis] > 0 else sizes[axis] - 1 - stage
+    nc = c + step
+    if not (0 <= c < sizes[axis] and 0 <= nc < sizes[axis]):
+        return np.zeros((0, 2), np.int64)
+    strides = (sizes[1] * sizes[2], sizes[2], 1)
+    others = [i for i in range(3) if i != axis]
+    oa, ob = others
+    base = (np.arange(sizes[oa], dtype=np.int64)[:, None] * strides[oa]
+            + np.arange(sizes[ob], dtype=np.int64)[None, :] * strides[ob]
+            ).reshape(-1)
+    src = base + c * strides[axis]
+    return np.stack([src, src + step * strides[axis]], axis=1)
 
 
 def _send_downwind(face, axis: int, cfg: KripkeConfig, stage: int, signs):

@@ -18,8 +18,6 @@ this module works unchanged on every supported JAX.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -6,18 +6,25 @@ profile gets a roofline step-seconds estimate from the app's arithmetic
 (compute+memory+wire over the system model) so the §V bandwidth /
 message-rate analysis has a time denominator.
 
-Two sweep-scalability features on top of the plain loop:
+Sweep-scalability features on top of the plain loop:
 
 * **Content-addressed profile cache** (:class:`ProfileCache`): each scaling
   point is keyed by sha256 over (app, full config, decomposition, and a
   fingerprint of the profiling/app source code) and stored as CommProfile
   JSON.  Re-running a paper-scale sweep (64..512 ranks x 3 apps) loads
   from disk instead of re-tracing; editing any fingerprinted module
-  invalidates every key, so stale profiles can never be served.
-* **Concurrent scaling points**: independent points of a sweep trace in a
-  thread pool.  The recorder and topology contexts are thread-local (see
-  ``repro.core.regions`` / ``repro.core.topology``), so concurrent traces
-  cannot cross-attribute events.
+  invalidates every key, so stale profiles can never be served.  Writes are
+  atomic (write-temp + rename), so one cache directory can be shared by
+  any number of threads *and processes*; :func:`default_cache_dir` names
+  the directory shared by the runner and the ``benchmarks/`` figure
+  scripts.  The cache is size-capped (LRU by file mtime, refreshed on every
+  hit) — see :attr:`ProfileCache.max_bytes`.
+* **Concurrent scaling points**: independent points of a sweep trace under
+  ``executor="thread"`` (recorder/topology state is thread-local, see
+  ``repro.core.regions`` / ``repro.core.topology``) or ``"process"`` — a
+  process pool sidesteps the GIL entirely now that RegionEvents are
+  picklable arrays, giving true multi-core trace throughput; ``"serial"``
+  keeps the plain loop.  All three produce byte-identical profiles.
 """
 
 from __future__ import annotations
@@ -27,7 +34,7 @@ import importlib
 import json
 import os
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import asdict, is_dataclass
 from typing import Optional
 
@@ -38,6 +45,20 @@ from repro.core.profiler import CommProfile
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+
+#: Environment knobs for the shared profile cache.
+CACHE_DIR_ENV = "REPRO_PROFILE_CACHE_DIR"
+CACHE_MAX_BYTES_ENV = "REPRO_PROFILE_CACHE_MAX_BYTES"
+_DEFAULT_CACHE_MAX_BYTES = 512 * 1024 * 1024
+
+
+def default_cache_dir() -> str:
+    """The profile-cache directory shared by the runner and the
+    ``benchmarks/`` figure scripts (override via ``REPRO_PROFILE_CACHE_DIR``)."""
+    env = os.environ.get(CACHE_DIR_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-profiles")
 
 
 def _flops_estimate(app: str, cfg) -> float:
@@ -110,13 +131,27 @@ class ProfileCache:
     deliberately excluded so identical physics shared between experiments
     (e.g. the (4,4,4) point of the dane and tioga kripke sweeps) hits the
     same entry — the runner re-stamps name/meta on every hit.
+
+    Entries publish via write-temp + atomic rename, so a directory can be
+    shared by concurrent threads and worker processes.  ``max_bytes`` caps
+    the directory size: after every put, least-recently-used entries (by
+    mtime; hits refresh it) are evicted until under the cap.  Default from
+    ``REPRO_PROFILE_CACHE_MAX_BYTES`` (<= 0 disables the cap).
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, max_bytes: Optional[int] = None):
         self.root = str(root)
+        if max_bytes is None:
+            max_bytes = int(os.environ.get(CACHE_MAX_BYTES_ENV,
+                                           _DEFAULT_CACHE_MAX_BYTES))
+        self.max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
         self._lock = threading.Lock()
+        # Amortized eviction state: directory bytes as of the last scan
+        # (None = never scanned) + bytes written by this handle since.
+        self._scanned_total: Optional[int] = None
+        self._written_since_scan = 0
 
     def key(self, app: str, cfg, decomp) -> str:
         payload = {"app": app, "config": _config_payload(cfg),
@@ -128,13 +163,18 @@ class ProfileCache:
         return os.path.join(self.root, key + ".json")
 
     def get(self, key: str) -> Optional[CommProfile]:
+        path = self._path(key)
         try:
-            with open(self._path(key)) as f:
+            with open(path) as f:
                 prof = CommProfile.from_json(f.read())
         except (OSError, ValueError, KeyError, TypeError):
             with self._lock:
                 self.misses += 1
             return None
+        try:
+            os.utime(path)             # LRU: a hit refreshes recency
+        except OSError:
+            pass
         with self._lock:
             self.hits += 1
         return prof
@@ -142,74 +182,155 @@ class ProfileCache:
     def put(self, key: str, profile: CommProfile) -> None:
         os.makedirs(self.root, exist_ok=True)
         path = self._path(key)
+        data = profile.to_json()
         tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
         with open(tmp, "w") as f:
-            f.write(profile.to_json())
+            f.write(data)
         os.replace(tmp, path)          # atomic publish
+        if self.max_bytes is None or self.max_bytes <= 0:
+            return
+        # Amortized cap check: only pay the full directory scan when the
+        # last-known total plus bytes written since could exceed the cap
+        # (overwrites overcount, which just triggers a rescan early).
+        with self._lock:
+            self._written_since_scan += len(data)
+            known = self._scanned_total
+            pending = self._written_since_scan
+        if known is None or known + pending > self.max_bytes:
+            self._evict()
+
+    def _evict(self) -> None:
+        """Drop least-recently-used entries until under ``max_bytes``."""
+        if self.max_bytes is None or self.max_bytes <= 0:
+            return
+        entries = []
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return
+        for fname in names:
+            if not fname.endswith(".json"):
+                continue
+            p = os.path.join(self.root, fname)
+            try:
+                st = os.stat(p)
+            except OSError:
+                continue               # raced with another evictor
+            entries.append((st.st_mtime, st.st_size, p))
+        total = sum(size for _, size, _ in entries)
+        if total > self.max_bytes:
+            for _, size, p in sorted(entries):     # oldest mtime first
+                try:
+                    os.remove(p)
+                except OSError:
+                    continue
+                total -= size
+                if total <= self.max_bytes:
+                    break
+        with self._lock:
+            self._scanned_total = total
+            self._written_since_scan = 0
 
 
 # ---------------------------------------------------------------------------
 # Sweep execution
 # ---------------------------------------------------------------------------
 
-def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
-                   verbose: bool = True, *,
-                   cache: Optional[ProfileCache] = None,
-                   cache_dir: Optional[str] = None,
-                   max_workers: Optional[int] = None) -> list:
-    """Profile every scaling point of ``spec`` (cached + concurrent).
+def _trace_point(spec: ExperimentSpec, pt, cfg,
+                 cache: Optional[ProfileCache], verbose: bool) -> tuple:
+    """Profile (or cache-load) one scaling point.
 
-    ``cache`` / ``cache_dir``: enable the content-addressed profile cache
-    (``cache`` wins if both are given).  ``max_workers``: thread-pool width
-    for independent points; defaults to min(4, n_points).  Results keep the
-    spec's point order regardless of completion order.
+    Module-level so it pickles into process-pool workers; ``cache`` state
+    (hit/miss counters) is process-local, the backing directory is shared.
+    Returns ``(pt, profile, cached)``.
     """
     from repro.apps import amg, kripke, laghos
     profile_fns = {"kripke": kripke.profile, "amg": amg.profile,
                    "laghos": laghos.profile}
+    meta = {"app": spec.app, "scaling": spec.scaling,
+            "experiment": spec.name, "decomp": list(pt.decomp),
+            "system": spec.system}
+    key = cache.key(spec.app, cfg, pt.decomp) if cache else None
+    prof = cache.get(key) if cache else None
+    cached = prof is not None
+    if cached:
+        # identical physics, this experiment's labels
+        prof.name = f"{spec.name}-{pt.n_ranks}"
+        prof.meta = meta
+    else:
+        prof = profile_fns[spec.app](
+            cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta)
+    prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
+    if cache and not cached:
+        cache.put(key, prof)
+    if verbose:                        # stream progress as points finish
+        tot = sum(s.total_bytes_sent for s in prof.regions.values())
+        tag = " [cached]" if cached else ""
+        print(f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
+              f"{len(prof.regions)} regions, "
+              f"{tot:.3e} bytes sent{tag}", flush=True)
+    return pt, prof, cached
+
+
+def _trace_point_in_worker(args) -> tuple:
+    """Process-pool entry: rebuild a cache handle on the shared directory."""
+    spec, pt, cfg, cache_root, max_bytes, verbose = args
+    cache = ProfileCache(cache_root, max_bytes) if cache_root else None
+    return _trace_point(spec, pt, cfg, cache, verbose)
+
+
+def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
+                   verbose: bool = True, *,
+                   cache: Optional[ProfileCache] = None,
+                   cache_dir: Optional[str] = None,
+                   max_workers: Optional[int] = None,
+                   executor: str = "thread") -> list:
+    """Profile every scaling point of ``spec`` (cached + concurrent).
+
+    ``cache`` / ``cache_dir``: enable the content-addressed profile cache
+    (``cache`` wins if both are given).  ``executor``: ``"thread"``
+    (default), ``"process"`` (true multi-core tracing; events and profiles
+    are picklable arrays, workers share the cache directory via atomic
+    renames), or ``"serial"``.  ``max_workers``: pool width for independent
+    points; defaults to min(4, n_points).  Results keep the spec's point
+    order regardless of completion order; all executors produce
+    byte-identical profiles.
+    """
+    if executor not in ("thread", "process", "serial"):
+        raise ValueError(f"unknown executor: {executor!r}")
     if cache is None and cache_dir is not None:
         cache = ProfileCache(cache_dir)
 
     points = spec.configs()
-    print_lock = threading.Lock()
-
-    def one_point(pt_cfg):
-        pt, cfg = pt_cfg
-        meta = {"app": spec.app, "scaling": spec.scaling,
-                "experiment": spec.name, "decomp": list(pt.decomp),
-                "system": spec.system}
-        key = cache.key(spec.app, cfg, pt.decomp) if cache else None
-        prof = cache.get(key) if cache else None
-        cached = prof is not None
-        if cached:
-            # identical physics, this experiment's labels
-            prof.name = f"{spec.name}-{pt.n_ranks}"
-            prof.meta = meta
-        else:
-            prof = profile_fns[spec.app](
-                cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta)
-        prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
-        if cache and not cached:
-            cache.put(key, prof)
-        if verbose:                        # stream progress as points finish
-            tot = sum(s.total_bytes_sent for s in prof.regions.values())
-            tag = " [cached]" if cached else ""
-            with print_lock:
-                print(f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
-                      f"{len(prof.regions)} regions, "
-                      f"{tot:.3e} bytes sent{tag}", flush=True)
-        return pt, prof
-
     if max_workers is None:
         max_workers = min(4, len(points)) or 1
-    if max_workers > 1 and len(points) > 1:
+    concurrent = executor != "serial" and max_workers > 1 and len(points) > 1
+
+    if concurrent and executor == "process":
+        work = [(spec, pt, cfg, cache.root if cache else None,
+                 cache.max_bytes if cache else None, verbose)
+                for pt, cfg in points]
+        with ProcessPoolExecutor(max_workers=max_workers) as ex:
+            results = list(ex.map(_trace_point_in_worker, work))
+        if cache:
+            # mirror worker-local counters so caller-visible accounting
+            # matches thread/serial execution
+            for _, _, cached in results:
+                if cached:
+                    cache.hits += 1
+                else:
+                    cache.misses += 1
+    elif concurrent:
         with ThreadPoolExecutor(max_workers=max_workers) as ex:
-            results = list(ex.map(one_point, points))   # keeps point order
+            results = list(ex.map(
+                lambda pc: _trace_point(spec, pc[0], pc[1], cache, verbose),
+                points))               # keeps point order
     else:
-        results = [one_point(p) for p in points]
+        results = [_trace_point(spec, pt, cfg, cache, verbose)
+                   for pt, cfg in points]
 
     profiles = []
-    for pt, prof in results:
+    for pt, prof, _ in results:
         profiles.append(prof)
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)

@@ -12,7 +12,6 @@ The paper's own experiments (Table III) ship as ``PAPER_EXPERIMENTS``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 from repro.apps.stencil import Decomp3D
 

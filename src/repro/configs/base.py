@@ -8,8 +8,7 @@ to their exact published configurations plus reduced smoke variants.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 

@@ -26,16 +26,36 @@ Following Caliper's schema (paper Table I), point-to-point-like patterns
 (ppermute) populate Sends/Recvs/Dest-ranks/Src-ranks/Bytes; true collectives
 increment the region's collective-call count ("Coll") and a collective-bytes
 extension field.
+
+Profiling data model
+--------------------
+
+Event capture is **array-native** (see :mod:`repro.core.regions` for the
+canonical :class:`RegionEvent` layout): there is no Python loop over ranks
+anywhere on the recording path, so per-event overhead is O(pairs) vector
+work rather than O(n_ranks) interpreter work.
+
+* :func:`build_p2p_event` turns a ``(P, 2)`` array of global ``(src, dst)``
+  pairs into dense send/recv count and byte vectors with one ``np.add.at``
+  scatter each, and into the CSR destination/source *set* encodings by
+  uniquing ``src * n + dst`` pair codes (row-sorted by construction).  The
+  byte vectors preserve the ppermute convention above: every pair moves the
+  full ``nbytes`` of the permuted operand.
+* :func:`build_collective_event` broadcasts the per-rank ring-equivalent
+  byte cost (the ``bytes_factor`` column of the table above, evaluated at
+  the communicator-group size) over the flattened group arrays returned by
+  ``topology.groups`` — collective peer sets are implicit (complete graph
+  within each group) and never materialized.
 """
 
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import compat
@@ -63,24 +83,80 @@ def _flatten(tree):
     return jax.tree_util.tree_leaves(tree)
 
 
-def _record(kind: str, *, axis_name, sends, recvs, dests, srcs,
-            bsent, brecv, is_collective: int) -> None:
-    if _regions.active_recorder() is None:
-        return
-    name = _regions.current_region() or "<unannotated>"
-    _regions.record_event(_regions.RegionEvent(
-        region=name,
+# ---------------------------------------------------------------------------
+# Array-native event construction (no Python loop over ranks)
+# ---------------------------------------------------------------------------
+
+def _peer_csr(rows: np.ndarray, cols: np.ndarray, n: int) -> tuple:
+    """CSR (indptr, indices) of the distinct peer set per rank.
+
+    Duplicate (row, col) pairs collapse via one ``np.unique`` over encoded
+    pair codes; rows come back sorted with sorted unique columns per row.
+    """
+    if not len(rows):
+        return np.zeros(n + 1, np.int64), np.zeros(0, np.int64)
+    codes = np.unique(rows * np.int64(n) + cols)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(codes // n, minlength=n), out=indptr[1:])
+    return indptr, codes % n
+
+
+def build_p2p_event(kind: str, axis_name, pairs, n: int,
+                    nbytes: int) -> _regions.RegionEvent:
+    """Array-native point-to-point RegionEvent from global (src, dst) pairs.
+
+    ``pairs`` is any ``(P, 2)``-shaped sequence/array of global rank pairs;
+    every pair moves ``nbytes``.  All ``n`` ranks participate (matching the
+    SPMD execution model: the permute runs on every rank, including ranks
+    with no active pair this call).
+    """
+    pairs = np.asarray(list(pairs) if not isinstance(pairs, np.ndarray)
+                       else pairs, np.int64).reshape(-1, 2)
+    src, dst = pairs[:, 0], pairs[:, 1]
+    sends = np.zeros(n, np.int64)
+    recvs = np.zeros(n, np.int64)
+    np.add.at(sends, src, 1)
+    np.add.at(recvs, dst, 1)
+    dptr, dind = _peer_csr(src, dst, n)
+    sptr, sind = _peer_csr(dst, src, n)
+    return _regions.RegionEvent(
+        region=_regions.current_region() or "<unannotated>",
         region_path=_regions.current_region_path(),
-        kind=kind,
-        sends_per_rank=sends,
-        recvs_per_rank=recvs,
-        dest_ranks=dests,
-        src_ranks=srcs,
-        bytes_sent=bsent,
-        bytes_recv=brecv,
-        is_collective=is_collective,
-        axis_name=str(axis_name),
-    ))
+        kind=kind, n_ranks=n,
+        sends=sends, recvs=recvs,
+        bytes_sent=sends * nbytes, bytes_recv=recvs * nbytes,
+        dest_indptr=dptr, dest_indices=dind,
+        src_indptr=sptr, src_indices=sind,
+        participants=np.ones(n, bool),
+        is_collective=0, axis_name=str(axis_name))
+
+
+def build_collective_event(kind: str, axis_name, groups: np.ndarray, n: int,
+                           per_rank_bytes: int) -> _regions.RegionEvent:
+    """Array-native collective RegionEvent.
+
+    ``groups`` is the ``(n_groups, group_size)`` global-rank array from
+    ``topology.groups`` (or ``arange(n)[None, :]`` for a flat axis); each
+    member rank sends/receives ``per_rank_bytes`` ring-equivalent bytes.
+    """
+    members = np.asarray(groups, np.int64).reshape(-1)
+    bytes_vec = np.zeros(n, np.int64)
+    bytes_vec[members] = per_rank_bytes
+    participants = np.zeros(n, bool)
+    participants[members] = True
+    zero = np.zeros(n, np.int64)
+    dptr, dind = _regions._empty_csr(n)
+    sptr, sind = _regions._empty_csr(n)
+    return _regions.RegionEvent(
+        region=_regions.current_region() or "<unannotated>",
+        region_path=_regions.current_region_path(),
+        kind=kind, n_ranks=n,
+        sends=zero, recvs=zero.copy(),
+        bytes_sent=bytes_vec, bytes_recv=bytes_vec.copy(),
+        dest_indptr=dptr, dest_indices=dind,
+        src_indptr=sptr, src_indices=sind,
+        participants=participants,
+        is_collective=1, axis_name=str(axis_name))
 
 
 # ---------------------------------------------------------------------------
@@ -107,31 +183,17 @@ def ppermute(x, axis_name, perm: Sequence[tuple],
         topo = active_topology()
         total = sum(_nbytes(leaf) for leaf in _flatten(x))
         if record_pairs is not None:
-            pairs = list(record_pairs)
+            pairs = record_pairs
             n = topo.n_ranks if topo is not None else _axis_size(axis_name)
         elif topo is not None and isinstance(axis_name, str) \
                 and axis_name in topo.names:
             pairs = topo.expand_pairs(axis_name, perm)
             n = topo.n_ranks
         else:
-            pairs = list(perm)
+            pairs = perm
             n = _axis_size(axis_name)
-        sends = {r: 0 for r in range(n)}
-        recvs = {r: 0 for r in range(n)}
-        dests = {r: set() for r in range(n)}
-        srcs = {r: set() for r in range(n)}
-        bsent = {r: 0 for r in range(n)}
-        brecv = {r: 0 for r in range(n)}
-        for (src, dst) in pairs:
-            sends[src] += 1
-            recvs[dst] += 1
-            dests[src].add(dst)
-            srcs[dst].add(src)
-            bsent[src] += total
-            brecv[dst] += total
-        _record("ppermute", axis_name=axis_name, sends=sends, recvs=recvs,
-                dests=dests, srcs=srcs, bsent=bsent, brecv=brecv,
-                is_collective=0)
+        _regions.record_event(
+            build_p2p_event("ppermute", axis_name, pairs, n, total))
     return jax.tree.map(
         lambda leaf: lax.ppermute(leaf, axis_name, perm=list(perm)), x)
 
@@ -151,26 +213,14 @@ def _record_collective(kind, x, axis_name, bytes_factor) -> None:
     if names_ok:
         groups = topo.groups(axis_name)
         n_total = topo.n_ranks
-        gsize = len(groups[0]) if groups else 1
+        gsize = int(groups.shape[1]) if groups.size else 1
         per_rank = int(total * bytes_factor(max(1, gsize)))
-        peers = {}
-        for g in groups:
-            gs = set(g)
-            for r in g:
-                peers[r] = gs - {r}
-        ranks = range(n_total)
     else:
-        n = _axis_size(axis_name)
-        per_rank = int(total * bytes_factor(max(1, n)))
-        peers = {r: set(p for p in range(n) if p != r) for r in range(n)}
-        ranks = range(n)
-    _record(kind, axis_name=axis_name,
-            sends={r: 0 for r in ranks},
-            recvs={r: 0 for r in ranks},
-            dests=peers, srcs=peers,
-            bsent={r: per_rank for r in ranks},
-            brecv={r: per_rank for r in ranks},
-            is_collective=1)
+        n_total = _axis_size(axis_name)
+        groups = np.arange(n_total, dtype=np.int64)[None, :]
+        per_rank = int(total * bytes_factor(max(1, n_total)))
+    _regions.record_event(
+        build_collective_event(kind, axis_name, groups, n_total, per_rank))
 
 
 def psum(x, axis_name):

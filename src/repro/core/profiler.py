@@ -26,13 +26,12 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field, asdict
-from itertools import chain as _chain
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-from repro.core.regions import RegionEvent, RegionRecorder, recording
+from repro.core.regions import RegionRecorder, recording
 
 
 @dataclass
@@ -115,21 +114,19 @@ class CommProfile:
 class CommPatternProfiler:
     """Aggregates a RegionRecorder's event stream into RegionStats.
 
-    Two implementations with bit-identical output:
+    Events arrive array-native (see the data-model section of
+    :mod:`repro.core.regions`): dense per-rank count/byte vectors plus CSR
+    peer-set encodings.  Two implementations with bit-identical output:
 
-    * ``impl="numpy"`` (default) — the hot path.  Per (region, statistic),
-      every event's per-rank dict is flattened through one chained
-      ``np.fromiter`` into ragged index/value arrays, accumulated with
-      ``np.add.at`` over rank ids; per-event participant masking uses
-      encoded (event, rank) codes against one sorted membership array,
-      distinct source/destination ranks are counted by uniquing
-      (rank, peer) pair arrays, and largest-message maxima use
-      ``np.maximum.reduceat`` over event segments.  At paper-scale rank
-      counts (512 ranks x thousands of events per sweep) this removes the
-      per-rank Python inner loops; the residual cost is boxing dict
-      entries into arrays (see ROADMAP: array-based RegionEvents).
+    * ``impl="numpy"`` (default) — the hot path.  Per region, dense event
+      vectors are summed straight into per-rank accumulators, distinct
+      source/destination ranks are counted by uniquing the concatenated
+      CSR (rank, peer) pair codes of all events, and participant masks are
+      OR-reductions of the events' masks.  There is no per-rank Python
+      anywhere — cost is O(events) vector operations.
     * ``impl="reference"`` — the original dict-of-dicts accounting, kept
-      as the executable specification; the parity tests in
+      as the executable specification; it consumes the same events through
+      ``RegionEvent.to_dicts()``.  The parity tests in
       ``tests/test_profiler_parity.py`` assert equality on randomized
       event streams and on the real kripke/amg/laghos profile paths.
     """
@@ -167,142 +164,71 @@ class CommPatternProfiler:
         for rname in rec.instances:
             by_region.setdefault(rname, [])
 
-        # Ragged batch conversion: one fromiter per (region, statistic)
-        # instead of one per (event, dict).  The only per-event python work
-        # is list appends; everything else is array algebra over rank ids.
-
-        def ragged_vals(dicts):
-            """(lens, keys, vals): per-event dict sizes + concatenated
-            key/value arrays, positionally paired per dict."""
-            lens = np.fromiter(map(len, dicts), np.int64, len(dicts))
-            total = int(lens.sum())
-            keys = np.fromiter(
-                _chain.from_iterable(d.keys() for d in dicts),
-                np.int64, total)
-            vals = np.fromiter(
-                _chain.from_iterable(d.values() for d in dicts),
-                np.int64, total)
-            return lens, keys, vals
-
-        def ragged_sets(dicts):
-            """(lens, keys, sizes, peers) for dicts of rank -> peer set."""
-            lens = np.fromiter(map(len, dicts), np.int64, len(dicts))
-            total = int(lens.sum())
-            keys = np.fromiter(
-                _chain.from_iterable(d.keys() for d in dicts),
-                np.int64, total)
-            sizes = np.fromiter(
-                _chain.from_iterable(map(len, d.values()) for d in dicts),
-                np.int64, total)
-            peers = np.fromiter(
-                _chain.from_iterable(
-                    _chain.from_iterable(d.values()) for d in dicts),
-                np.int64, int(sizes.sum()))
-            return lens, keys, sizes, peers
-
-        def event_ids(lens):
-            return np.repeat(np.arange(len(lens), dtype=np.int64), lens)
-
-        def seg_max(vals, lens):
-            """Per-event max of a ragged array; (maxima, nonempty mask).
-            Empty events get 0 (reduceat cannot express empty segments)."""
-            out = np.zeros(len(lens), np.int64)
-            nz = lens > 0
-            if nz.any():
-                starts = np.zeros(len(lens), np.int64)
-                np.cumsum(lens[:-1], out=starts[1:])
-                out[nz] = np.maximum.reduceat(vals, starts[nz])
-            return out, nz
-
         reduced: dict[str, dict] = {}
         n_ranks = 0
         for region, events in by_region.items():
             kinds: dict = {}
             p2p = []
-            coll_bytes_dicts = []
-            coll_calls = 0
+            colls = []
+            # R = 1 + highest participating rank, the accumulator extent
+            # (identical to the reference's max-accumulator-key semantics).
+            R = 0
             for ev in events:
                 kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
-                if ev.is_collective:
-                    coll_calls += 1
-                    if ev.bytes_sent:
-                        coll_bytes_dicts.append(ev.bytes_sent)
-                else:
-                    p2p.append(ev)
-
-            ls, ks, vs = ragged_vals([ev.sends_per_rank for ev in p2p])
-            lr, kr, vr = ragged_vals([ev.recvs_per_rank for ev in p2p])
-            lbs, kbs, vbs = ragged_vals([ev.bytes_sent for ev in p2p])
-            lbr, kbr, vbr = ragged_vals([ev.bytes_recv for ev in p2p])
-            ldd, kdd, zdd, pdd = ragged_sets([ev.dest_ranks for ev in p2p])
-            lds, kds, zds, pds = ragged_sets([ev.src_ranks for ev in p2p])
-            _, kc, vc = ragged_vals(coll_bytes_dicts)
-
-            # participants: union of sends/recvs keys, *per event*.
-            # Encode (event, rank) pairs as event*stride + rank so a
-            # single sorted-array membership test replaces every
-            # per-event "is this rank a participant" check.
-            stride = 1 + max((int(k.max()) if len(k) else -1)
-                             for k in (ks, kr, kbs, kbr, kdd, kds, kc))
-            part_codes = np.unique(np.concatenate(
-                [event_ids(ls) * stride + ks,
-                 event_ids(lr) * stride + kr]))
-
-            part_ranks = part_codes % stride if len(part_codes) \
-                else part_codes
-            R = 1 + max(
-                int(part_ranks.max()) if len(part_ranks) else -1,
-                int(kc.max()) if len(kc) else -1)
+                R = max(R, ev.rank_extent())
+                (colls if ev.is_collective else p2p).append(ev)
             n_ranks = max(n_ranks, R)
 
-            def accum(idx, val):
-                out = np.zeros(R, np.int64)
-                if len(idx):
-                    np.add.at(out, idx, val)
-                return out
+            sends = np.zeros(R, np.int64)
+            recvs = np.zeros(R, np.int64)
+            bsent = np.zeros(R, np.int64)
+            brecv = np.zeros(R, np.int64)
+            cbytes = np.zeros(R, np.int64)
+            part = np.zeros(R, bool)
+            cpart = np.zeros(R, bool)
+            largest = 0
+            dest_rows, dest_peers, src_rows, src_peers = [], [], [], []
+            for ev in p2p:
+                k = min(ev.n_ranks, R)
+                sends[:k] += ev.sends[:k]
+                recvs[:k] += ev.recvs[:k]
+                bsent[:k] += ev.bytes_sent[:k]
+                brecv[:k] += ev.bytes_recv[:k]
+                part[:k] |= ev.participants[:k]
+                ranks = np.arange(ev.n_ranks, dtype=np.int64)
+                dest_rows.append(np.repeat(ranks, np.diff(ev.dest_indptr)))
+                dest_peers.append(ev.dest_indices)
+                src_rows.append(np.repeat(ranks, np.diff(ev.src_indptr)))
+                src_peers.append(ev.src_indices)
+                if ev.participants.any():
+                    pv = ev.sends[ev.participants]
+                    pb = ev.bytes_sent[ev.participants]
+                    largest = max(largest,
+                                  int(pb.max()) // max(1, int(pv.max())))
+            for ev in colls:
+                k = min(ev.n_ranks, R)
+                cbytes[:k] += ev.bytes_sent[:k]
+                cpart[:k] |= ev.participants[:k]
 
-            part_mask = np.zeros(R, bool)
-            part_mask[part_ranks] = True
-            coll_mask = np.zeros(R, bool)
-            coll_mask[kc] = True
-
-            def member(lens, keys):
-                """Participant membership of each (event, key) entry.
-                Keys outside the event's participant set are ignored,
-                exactly as in the reference accounting."""
-                return np.isin(event_ids(lens) * stride + keys, part_codes,
-                               assume_unique=False)
-
-            mbs = member(lbs, kbs)
-            mbr = member(lbr, kbr)
-
-            def distinct_counts(lens, keys, sizes, peers):
-                keep = np.repeat(member(lens, keys), sizes)
-                src = np.repeat(keys, sizes)[keep]
-                dst = peers[keep]
-                if not len(src):
+            def distinct_counts(rows_list, peers_list):
+                """|union of peer sets| per rank, via unique pair codes."""
+                rows = np.concatenate(rows_list) if rows_list \
+                    else np.zeros(0, np.int64)
+                peers = np.concatenate(peers_list) if peers_list \
+                    else np.zeros(0, np.int64)
+                if not len(rows):
                     return np.zeros(R, np.int64)
-                pstride = int(dst.max()) + 1
-                uniq = np.unique(src * pstride + dst)
+                pstride = int(peers.max()) + 1
+                uniq = np.unique(rows * pstride + peers)
                 return np.bincount(uniq // pstride, minlength=R)
 
-            # largest single message: per-event max sends (>=1) dividing
-            # per-event max *raw* bytes (reference takes the unmasked max)
-            mx_s, has_s = seg_max(vs, ls)
-            mx_b, _ = seg_max(vbs, lbs)
-            per_msg = mx_b // np.maximum(mx_s, 1)
-            largest = int(per_msg[has_s].max()) if has_s.any() else 0
-
             reduced[region] = dict(
-                sends=accum(ks, vs),
-                recvs=accum(kr, vr),
-                bsent=accum(kbs[mbs], vbs[mbs]),
-                brecv=accum(kbr[mbr], vbr[mbr]),
-                cbytes=accum(kc, vc),
-                dests=distinct_counts(ldd, kdd, zdd, pdd),
-                srcs=distinct_counts(lds, kds, zds, pds),
-                part=part_mask, cpart=coll_mask,
-                coll=coll_calls, largest=largest, kinds=kinds)
+                sends=sends, recvs=recvs, bsent=bsent, brecv=brecv,
+                cbytes=cbytes,
+                dests=distinct_counts(dest_rows, dest_peers),
+                srcs=distinct_counts(src_rows, src_peers),
+                part=part, cpart=cpart,
+                coll=len(colls), largest=largest, kinds=kinds)
 
         def mm(arr, mask):
             if not mask.any():
@@ -353,24 +279,31 @@ class CommPatternProfiler:
         for ev in rec.events:
             a = acc(ev.region)
             a["kinds"][ev.kind] = a["kinds"].get(ev.kind, 0) + 1
+            d = ev.to_dicts()
             if ev.is_collective:
                 a["coll"] += 1
-                for r, b in ev.bytes_sent.items():
+                for r, b in d["bytes_sent"].items():
                     a["cbytes"][r] = a["cbytes"].get(r, 0) + b
                 continue
-            ranks = set(ev.sends_per_rank) | set(ev.recvs_per_rank)
+            ranks = set(d["sends_per_rank"]) | set(d["recvs_per_rank"])
             for r in ranks:
-                a["sends"][r] = a["sends"].get(r, 0) + ev.sends_per_rank.get(r, 0)
-                a["recvs"][r] = a["recvs"].get(r, 0) + ev.recvs_per_rank.get(r, 0)
-                a["dests"].setdefault(r, set()).update(ev.dest_ranks.get(r, ()))
-                a["srcs"].setdefault(r, set()).update(ev.src_ranks.get(r, ()))
-                a["bsent"][r] = a["bsent"].get(r, 0) + ev.bytes_sent.get(r, 0)
-                a["brecv"][r] = a["brecv"].get(r, 0) + ev.bytes_recv.get(r, 0)
-            if ev.sends_per_rank:
-                n_msgs = max(1, max(ev.sends_per_rank.values()))
+                a["sends"][r] = a["sends"].get(r, 0) \
+                    + d["sends_per_rank"].get(r, 0)
+                a["recvs"][r] = a["recvs"].get(r, 0) \
+                    + d["recvs_per_rank"].get(r, 0)
+                a["dests"].setdefault(r, set()).update(
+                    d["dest_ranks"].get(r, ()))
+                a["srcs"].setdefault(r, set()).update(
+                    d["src_ranks"].get(r, ()))
+                a["bsent"][r] = a["bsent"].get(r, 0) \
+                    + d["bytes_sent"].get(r, 0)
+                a["brecv"][r] = a["brecv"].get(r, 0) \
+                    + d["bytes_recv"].get(r, 0)
+            if d["sends_per_rank"]:
+                n_msgs = max(1, max(d["sends_per_rank"].values()))
                 # largest single message in this event:
-                per_msg = max(ev.bytes_sent.values()) // n_msgs \
-                    if ev.bytes_sent else 0
+                per_msg = max(d["bytes_sent"].values()) // n_msgs \
+                    if d["bytes_sent"] else 0
                 a["largest"] = max(a["largest"], per_msg)
 
         # Regions entered but containing no communication (pure-compute

@@ -35,20 +35,62 @@ events.  The shard_map/mesh machinery the instrumented collectives run
 under is provided by :mod:`repro.core.compat`, which keeps this layer
 working across JAX API churn (0.4.x through >= 0.5) — see compat's module
 docstring for the supported versions and contract.
+
+Profiling data model
+--------------------
+
+A :class:`RegionEvent` is **array-native**: per-rank structure is stored as
+compact NumPy arrays rather than dict-of-dicts, so recording a collective at
+trace time costs a handful of vector operations regardless of rank count
+(512-rank traces were dominated by per-rank dict construction before this).
+
+For an event covering ranks ``[0, n_ranks)``:
+
+* ``sends`` / ``recvs`` — dense ``int64[n_ranks]`` message-count vectors;
+* ``bytes_sent`` / ``bytes_recv`` — dense ``int64[n_ranks]`` byte vectors;
+* ``(dest_indptr, dest_indices)`` / ``(src_indptr, src_indices)`` — CSR
+  encodings of the per-rank destination / source rank *sets*: the peers of
+  rank ``r`` are ``indices[indptr[r]:indptr[r+1]]``, sorted and duplicate-free
+  per row (``indptr`` has length ``n_ranks + 1``);
+* ``participants`` — ``bool[n_ranks]`` mask of ranks taking part in the call.
+  Dense vectors are zero and CSR rows empty outside the mask (the *canonical
+  form*; :meth:`RegionEvent.from_dicts` canonicalizes legacy dicts).
+
+For point-to-point events the participants are the ranks of the permutation's
+axis groups; for collective events they are the communicator-group members,
+and only ``bytes_sent``/``bytes_recv`` carry information — the peer structure
+of a collective is implicit (complete graph within each group) and is not
+materialized.  Byte accounting follows the conventions documented in
+:mod:`repro.core.collectives` (ring-equivalent traffic per rank).
+
+Events are plain ``str``/``int``/ndarray records, so they pickle cheaply —
+this is what allows the benchpark runner to trace scaling points in a
+*process* pool and ship profiles between workers.
 """
 
 from __future__ import annotations
 
 import contextlib
 import threading
-from dataclasses import dataclass, field
-from typing import Iterator, Optional
+from dataclasses import dataclass
+from typing import Iterator, Mapping, Optional
 
 import jax
+import numpy as np
 
 #: Prefix used inside jax.named_scope so HLO metadata can be recognized as a
 #: communication region (rather than an ordinary profiling scope).
 COMM_REGION_SCOPE_PREFIX = "commr::"
+
+
+def _empty_csr(n_ranks: int) -> tuple:
+    return (np.zeros(n_ranks + 1, np.int64), np.zeros(0, np.int64))
+
+
+def _csr_rows_to_dicts(indptr, indices, ranks) -> dict:
+    """CSR rows -> {rank: set(peers)} for the given rank ids."""
+    return {int(r): {int(p) for p in indices[indptr[r]:indptr[r + 1]]}
+            for r in ranks}
 
 
 @dataclass
@@ -56,28 +98,129 @@ class RegionEvent:
     """One instrumented collective call observed inside a region.
 
     All fields describe the *static* structure of the collective, per
-    participating rank (paper Table I is derived from these).
+    participating rank (paper Table I is derived from these), in the
+    array-native canonical form described in the module docstring.
     """
 
     region: str                 # innermost region name ("sweep_comm")
     region_path: tuple          # full nesting path ("main", "sweep_comm")
     kind: str                   # ppermute | psum | all_gather | all_to_all | ...
-    # Mapping rank -> number of messages that rank sends in this call.
-    sends_per_rank: dict
-    # Mapping rank -> number of messages that rank receives in this call.
-    recvs_per_rank: dict
-    # Mapping rank -> set of destination ranks.
-    dest_ranks: dict
-    # Mapping rank -> set of source ranks.
-    src_ranks: dict
-    # Mapping rank -> bytes sent by that rank in this call.
-    bytes_sent: dict
-    # Mapping rank -> bytes received by that rank.
-    bytes_recv: dict
+    n_ranks: int                # extent of the dense per-rank vectors
+    # Dense per-rank vectors, int64[n_ranks].
+    sends: np.ndarray           # messages sent by each rank in this call
+    recvs: np.ndarray           # messages received by each rank
+    bytes_sent: np.ndarray      # bytes sent by each rank
+    bytes_recv: np.ndarray      # bytes received by each rank
+    # CSR per-rank peer sets: peers of rank r are indices[indptr[r]:indptr[r+1]].
+    dest_indptr: np.ndarray     # int64[n_ranks + 1]
+    dest_indices: np.ndarray    # int64[nnz], sorted unique per row
+    src_indptr: np.ndarray
+    src_indices: np.ndarray
+    # Ranks taking part in this call, bool[n_ranks]; dense vectors are zero
+    # and CSR rows empty outside this mask.
+    participants: np.ndarray
     # 1 if this call is a collective (all-reduce/all-gather/...), 0 for
     # point-to-point-like patterns (ppermute).
     is_collective: int = 0
     axis_name: str = ""
+
+    # -- adapters -----------------------------------------------------------
+
+    @classmethod
+    def from_dicts(cls, *, region: str, region_path: tuple, kind: str,
+                   sends_per_rank: Mapping, recvs_per_rank: Mapping,
+                   dest_ranks: Mapping, src_ranks: Mapping,
+                   bytes_sent: Mapping, bytes_recv: Mapping,
+                   is_collective: int = 0, axis_name: str = "",
+                   n_ranks: Optional[int] = None) -> "RegionEvent":
+        """Build an array-native event from the legacy dict-of-dicts fields.
+
+        Canonicalization matches the original dict accounting exactly:
+        participants are ``keys(sends) | keys(recvs)`` for point-to-point
+        events and ``keys(bytes_sent)`` for collectives; entries for ranks
+        outside the participant set are dropped, missing entries default to
+        zero / the empty set.
+        """
+        if is_collective:
+            part = sorted(int(r) for r in bytes_sent)
+        else:
+            part = sorted({int(r) for r in sends_per_rank}
+                          | {int(r) for r in recvs_per_rank})
+        peer_max = -1
+        for d in (dest_ranks, src_ranks):
+            for r in part:
+                for p in d.get(r, ()):
+                    peer_max = max(peer_max, int(p))
+        n = max(part[-1] + 1 if part else 0, peer_max + 1, n_ranks or 0)
+
+        def dense(d: Mapping) -> np.ndarray:
+            out = np.zeros(n, np.int64)
+            for r in part:
+                out[r] = int(d.get(r, 0))
+            return out
+
+        def csr(d: Mapping) -> tuple:
+            indptr = np.zeros(n + 1, np.int64)
+            rows = []
+            for r in part:
+                peers = sorted(int(p) for p in set(d.get(r, ())))
+                indptr[r + 1] = len(peers)
+                rows.extend(peers)
+            np.cumsum(indptr, out=indptr)
+            return indptr, np.asarray(rows, np.int64)
+
+        participants = np.zeros(n, bool)
+        participants[part] = True
+        if is_collective:
+            dptr, dind = _empty_csr(n)
+            sptr, sind = _empty_csr(n)
+            zero = np.zeros(n, np.int64)
+            return cls(region=region, region_path=region_path, kind=kind,
+                       n_ranks=n, sends=zero, recvs=zero.copy(),
+                       bytes_sent=dense(bytes_sent),
+                       bytes_recv=dense(bytes_recv),
+                       dest_indptr=dptr, dest_indices=dind,
+                       src_indptr=sptr, src_indices=sind,
+                       participants=participants,
+                       is_collective=1, axis_name=axis_name)
+        dptr, dind = csr(dest_ranks)
+        sptr, sind = csr(src_ranks)
+        return cls(region=region, region_path=region_path, kind=kind,
+                   n_ranks=n, sends=dense(sends_per_rank),
+                   recvs=dense(recvs_per_rank),
+                   bytes_sent=dense(bytes_sent), bytes_recv=dense(bytes_recv),
+                   dest_indptr=dptr, dest_indices=dind,
+                   src_indptr=sptr, src_indices=sind,
+                   participants=participants,
+                   is_collective=0, axis_name=axis_name)
+
+    def to_dicts(self) -> dict:
+        """Legacy dict-of-dicts view (canonical form: participants only).
+
+        Used by the reference profiler implementation — the executable
+        specification the vectorized path is parity-tested against.
+        """
+        ranks = np.flatnonzero(self.participants)
+        if self.is_collective:
+            return dict(
+                sends_per_rank={}, recvs_per_rank={},
+                dest_ranks={}, src_ranks={},
+                bytes_sent={int(r): int(self.bytes_sent[r]) for r in ranks},
+                bytes_recv={int(r): int(self.bytes_recv[r]) for r in ranks})
+        return dict(
+            sends_per_rank={int(r): int(self.sends[r]) for r in ranks},
+            recvs_per_rank={int(r): int(self.recvs[r]) for r in ranks},
+            dest_ranks=_csr_rows_to_dicts(self.dest_indptr,
+                                          self.dest_indices, ranks),
+            src_ranks=_csr_rows_to_dicts(self.src_indptr,
+                                         self.src_indices, ranks),
+            bytes_sent={int(r): int(self.bytes_sent[r]) for r in ranks},
+            bytes_recv={int(r): int(self.bytes_recv[r]) for r in ranks})
+
+    def rank_extent(self) -> int:
+        """1 + highest participating rank (0 when nobody participates)."""
+        idx = np.flatnonzero(self.participants)
+        return int(idx[-1]) + 1 if len(idx) else 0
 
 
 class RegionRecorder:

@@ -13,15 +13,23 @@ Apps declare their decomposition once::
 
 Global rank = mixed-radix index over the declared axes, in declared order
 (matching ``jax.make_mesh`` device ordering).
+
+``expand_pairs`` and ``groups`` return **NumPy arrays** (shape ``(P, 2)``
+rank pairs and ``(n_groups, group_size)`` communicator groups) built by
+broadcasting axis offsets — no Python loop over ranks — so the instrumented
+collectives can assemble array-native RegionEvents straight from them.
+Element order matches the historical list-of-tuples implementation
+(row-major over the non-participating axes, then the permutation/group).
 """
 
 from __future__ import annotations
 
 import contextlib
-import itertools
 import math
 import threading
 from typing import Iterator, Optional, Sequence
+
+import numpy as np
 
 
 class Topology:
@@ -48,40 +56,43 @@ class Topology:
             return math.prod(self.axis_size(n) for n in name)
         return self.sizes[self.axis_pos(name)]
 
-    def expand_pairs(self, axis_name: str, perm: Sequence[tuple]) -> list:
-        """Axis-local (src, dst) pairs -> global-rank pairs, for every
-        combination of the other axes' indices."""
-        pos = self.axis_pos(axis_name)
-        others = [range(s) for i, s in enumerate(self.sizes) if i != pos]
-        out = []
-        for combo in itertools.product(*others):
-            for (src, dst) in perm:
-                cs = list(combo[:pos]) + [src] + list(combo[pos:])
-                cd = list(combo[:pos]) + [dst] + list(combo[pos:])
-                out.append((self.rank(cs), self.rank(cd)))
-        return out
+    def _axis_offsets(self, positions: Sequence[int]) -> np.ndarray:
+        """Global-rank contribution of every index combination over the
+        given axes (row-major over ``positions`` order), as a 1-D array."""
+        if not positions:
+            return np.zeros(1, np.int64)
+        grids = np.meshgrid(
+            *[np.arange(self.sizes[i], dtype=np.int64) * self.strides[i]
+              for i in positions],
+            indexing="ij")
+        out = grids[0]
+        for g in grids[1:]:
+            out = out + g
+        return out.reshape(-1)
 
-    def groups(self, axis_name) -> list:
+    def expand_pairs(self, axis_name: str, perm: Sequence[tuple]
+                     ) -> np.ndarray:
+        """Axis-local (src, dst) pairs -> global-rank pairs, for every
+        combination of the other axes' indices; shape ``(P, 2)`` int64."""
+        pos = self.axis_pos(axis_name)
+        others = [i for i in range(len(self.sizes)) if i != pos]
+        perm_arr = np.asarray(list(perm), np.int64).reshape(-1, 2)
+        base = self._axis_offsets(others)                 # (B,)
+        stride = self.strides[pos]
+        # (B, P, 2): every other-axes combo x every permutation pair.
+        out = base[:, None, None] + perm_arr[None, :, :] * stride
+        return out.reshape(-1, 2)
+
+    def groups(self, axis_name) -> np.ndarray:
         """Communicator groups for a collective over axis_name (possibly a
-        tuple of axes): list of lists of global ranks."""
+        tuple of axes): ``(n_groups, group_size)`` int64 global ranks."""
         names = ([axis_name] if isinstance(axis_name, str)
                  else list(axis_name))
         pos = [self.axis_pos(n) for n in names]
         others = [i for i in range(len(self.sizes)) if i not in pos]
-        out = []
-        for combo in itertools.product(*[range(self.sizes[i])
-                                         for i in others]):
-            group = []
-            for inner in itertools.product(*[range(self.sizes[i])
-                                             for i in pos]):
-                coords = [0] * len(self.sizes)
-                for i, c in zip(others, combo):
-                    coords[i] = c
-                for i, c in zip(pos, inner):
-                    coords[i] = c
-                group.append(self.rank(coords))
-            out.append(group)
-        return out
+        outer = self._axis_offsets(others)                # (n_groups,)
+        inner = self._axis_offsets(pos)                   # (group_size,)
+        return outer[:, None] + inner[None, :]
 
 
 class _TopoState(threading.local):

@@ -13,7 +13,6 @@ learnable structure (examples train a ~100M model on it).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,6 @@ class SyntheticLM:
 
     def global_batch_on(self, step: int, mesh, plan) -> dict:
         """Materialize a globally-sharded batch via per-shard callbacks."""
-        from jax.sharding import NamedSharding
         b = self.batch(step)
         sh = plan.sharding(mesh, "batch", "seq")
         return {k: jax.device_put(v, sh) for k, v in b.items()}

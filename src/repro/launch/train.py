@@ -14,13 +14,11 @@ Fault-tolerance posture (exercised end-to-end by ``examples/train_lm.py``):
 from __future__ import annotations
 
 import argparse
-import os
 import signal
 import time
 from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt.manager import CheckpointManager
 from repro.configs import registry

@@ -157,7 +157,7 @@ def chunked_sdpa(q, k, v, *, causal: bool = True, chunk: int = 1024,
     q_pos = jnp.arange(Sq) + (Sk - Sq)          # decode-style offset
 
     def step(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         ci, kb, vb = inp
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) \
             * scale
@@ -170,17 +170,17 @@ def chunked_sdpa(q, k, v, *, causal: bool = True, chunk: int = 1024,
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l = l * alpha + p.sum(axis=-1)
+        lsum = lsum * alpha + p.sum(axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     init = (jnp.full((B, H, Sq), -1e30, jnp.float32),
             jnp.zeros((B, H, Sq), jnp.float32),
             jnp.zeros((B, H, Sq, D), jnp.float32))
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         step, init, (jnp.arange(nc), kc, vc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return out.astype(q.dtype)
 
 

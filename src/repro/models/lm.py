@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional
 
 import jax
@@ -33,7 +32,7 @@ from repro.models import mamba as M
 from repro.models import moe as MOE
 from repro.models import xlstm as X
 from repro.models.params import (ParamDef, abstract_params, axes_tree,
-                                 init_params, is_def, stack_defs)
+                                 init_params, stack_defs)
 from repro.parallel.context import shard_act
 
 

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 
 from repro.models.blocks import rmsnorm
 from repro.models.params import ParamDef
-from repro.parallel.context import shard_act
 
 
 def _dims(cfg):

@@ -16,12 +16,11 @@ compiles; the HLO analyzer multiplies collectives by trip count).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass(frozen=True)

@@ -27,7 +27,6 @@ import jax.numpy as jnp
 
 from repro.models.blocks import rmsnorm
 from repro.models.params import ParamDef
-from repro.parallel.context import shard_act
 
 NEG_INF = -1e30
 

@@ -13,8 +13,6 @@ Wrapped in a ``grad_allreduce`` comm region so the profiler shows the
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -16,8 +16,6 @@ training composes it with jax.grad through the shifts.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax import lax

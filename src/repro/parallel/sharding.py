@@ -61,8 +61,8 @@ class ShardingPlan:
         sharding wins and the vocab dim of that activation replicates)."""
         used: set = set()
         out = []
-        for l in logical:
-            axes = self.get(l)
+        for logical_name in logical:
+            axes = self.get(logical_name)
             tup = (axes,) if isinstance(axes, str) else tuple(axes or ())
             if any(a in used for a in tup):
                 out.append(None)

@@ -9,7 +9,6 @@ every (arch × shape) cell — weak-type-correct, shardable, no allocation.
 
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
@@ -18,9 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.regions import comm_region
 from repro.models.model import build_model
-from repro.models.params import abstract_params
 from repro.optim import adamw
-from repro.parallel.context import shard_act
 
 # Default stub frontend sizes (assignment: modality frontends are stubs
 # supplying precomputed embeddings).

@@ -1,15 +1,12 @@
 """The paper's three benchmarks: comm-pattern findings + numerics."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from helpers import run_with_devices
 
 from repro.apps.amg import AMGConfig, make_rhs, profile as amg_profile, solve
-from repro.apps.kripke import (KripkeConfig, distributed_sweep, make_source,
-                               profile as kripke_profile, reference_sweep)
+from repro.apps.kripke import KripkeConfig, profile as kripke_profile
 from repro.apps.laghos import (LaghosConfig, make_state,
                                profile as laghos_profile, run_steps)
 from repro.apps.stencil import Decomp3D

@@ -88,6 +88,75 @@ def test_concurrent_points_match_serial(tmp_path):
         assert a.to_json() == b.to_json()
 
 
+def test_process_executor_matches_serial_and_shares_cache(tmp_path):
+    """Process-pool sweeps must be byte-identical to serial execution and
+    populate the same on-disk cache (workers publish via atomic rename)."""
+    cache = ProfileCache(str(tmp_path / "cache"))
+    par = run_experiment(_spec(), verbose=False, cache=cache,
+                         executor="process", max_workers=3)
+    assert cache.misses == 3 and cache.hits == 0
+    ser = run_experiment(_spec(), verbose=False, executor="serial")
+    assert [p.name for p in par] == [p.name for p in ser]
+    for a, b in zip(par, ser):
+        assert a.to_json() == b.to_json()
+    # a second process-pool run is served from the shared directory
+    cache2 = ProfileCache(str(tmp_path / "cache"))
+    again = run_experiment(_spec(), verbose=False, cache=cache2,
+                           executor="process", max_workers=3)
+    assert cache2.hits == 3 and cache2.misses == 0
+    for a, b in zip(par, again):
+        assert a.to_json() == b.to_json()
+
+
+def test_unknown_executor_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        run_experiment(_spec(), verbose=False, executor="gpu")
+
+
+def _mini_profile(name):
+    from repro.core.profiler import CommProfile
+    return CommProfile(name=name, n_ranks=2, meta={"pad": "x" * 512})
+
+
+def test_cache_eviction_lru_by_mtime(tmp_path):
+    import os
+    root = str(tmp_path / "cache")
+    entry = len(_mini_profile("p").to_json())
+    # room for two entries, not three
+    cache = ProfileCache(root, max_bytes=int(entry * 2.5))
+    for i, key in enumerate(["k0", "k1", "k2"]):
+        cache.put(key, _mini_profile(f"p{i}"))
+        os.utime(cache._path(key), (1000.0 + i, 1000.0 + i))
+    cache._evict()
+    assert cache.get("k0") is None          # oldest mtime evicted
+    assert cache.get("k1") is not None and cache.get("k2") is not None
+
+    # a hit refreshes recency: k1 survives the next eviction, k2 does not
+    os.utime(cache._path("k1"), (2000.0, 2000.0))
+    os.utime(cache._path("k2"), (1500.0, 1500.0))
+    cache.put("k3", _mini_profile("p3"))    # forces eviction down to cap
+    assert cache.get("k2") is None
+    assert cache.get("k1") is not None and cache.get("k3") is not None
+
+
+def test_cache_cap_from_env(tmp_path, monkeypatch):
+    monkeypatch.setenv(runner.CACHE_MAX_BYTES_ENV, "12345")
+    assert ProfileCache(str(tmp_path)).max_bytes == 12345
+    monkeypatch.setenv(runner.CACHE_MAX_BYTES_ENV, "0")   # 0 disables the cap
+    c = ProfileCache(str(tmp_path))
+    c.put("k", _mini_profile("p"))
+    c._evict()
+    assert c.get("k") is not None
+
+
+def test_default_cache_dir_env_override(monkeypatch):
+    monkeypatch.setenv(runner.CACHE_DIR_ENV, "/tmp/some-shared-cache")
+    assert runner.default_cache_dir() == "/tmp/some-shared-cache"
+    monkeypatch.delenv(runner.CACHE_DIR_ENV)
+    assert runner.default_cache_dir().endswith("repro-profiles")
+
+
 def test_out_dir_still_written_on_cache_hit(tmp_path):
     cache = ProfileCache(str(tmp_path / "cache"))
     run_experiment(_spec(), verbose=False, cache=cache)

@@ -7,7 +7,7 @@ import pytest
 from proptest import given, settings, st
 
 from repro.core import (CommPatternProfiler, comm_region, compat,
-                        profile_traced, recording)
+                        profile_traced)
 from repro.core import collectives as coll
 from repro.core.regions import RegionEvent, RegionRecorder
 from repro.core.topology import Topology, topology
@@ -28,6 +28,8 @@ def perm_events(draw):
 
 
 def event_from_pairs(region, n, pairs, nbytes):
+    """Build an event the way the pre-array dict path did, then adapt it —
+    exercising RegionEvent.from_dicts alongside the aggregation tests."""
     sends = {r: 0 for r in range(n)}
     recvs = {r: 0 for r in range(n)}
     dests = {r: set() for r in range(n)}
@@ -41,10 +43,11 @@ def event_from_pairs(region, n, pairs, nbytes):
         srcs[d].add(s)
         bsent[s] += nbytes
         brecv[d] += nbytes
-    return RegionEvent(region=region, region_path=(region,),
-                       kind="ppermute", sends_per_rank=sends,
-                       recvs_per_rank=recvs, dest_ranks=dests,
-                       src_ranks=srcs, bytes_sent=bsent, bytes_recv=brecv)
+    return RegionEvent.from_dicts(region=region, region_path=(region,),
+                                  kind="ppermute", sends_per_rank=sends,
+                                  recvs_per_rank=recvs, dest_ranks=dests,
+                                  src_ranks=srcs, bytes_sent=bsent,
+                                  bytes_recv=brecv)
 
 
 @given(perm_events())
@@ -65,9 +68,8 @@ def test_stats_invariants(ev):
         lo, hi = getattr(st_, attr)
         assert lo <= hi
     # conservation: bytes sent == bytes received overall
-    assert sum(ev_b for ev_b in
-               rec.events[0].bytes_sent.values()) == \
-        sum(ev_b for ev_b in rec.events[0].bytes_recv.values())
+    assert int(rec.events[0].bytes_sent.sum()) == \
+        int(rec.events[0].bytes_recv.sum())
     # avg send size consistent
     if len(pairs):
         assert st_.avg_send_size == pytest.approx(nbytes)
@@ -79,11 +81,10 @@ def test_topology_expand_counts(px, py, pz):
     topo = Topology((("x", px), ("y", py), ("z", pz)))
     perm = [(i, i + 1) for i in range(px - 1)]
     pairs = topo.expand_pairs("x", perm)
-    assert len(pairs) == len(perm) * py * pz
+    assert pairs.shape == (len(perm) * py * pz, 2)
     # all global ranks within range and unique per (src,dst)
-    for s, d in pairs:
-        assert 0 <= s < topo.n_ranks and 0 <= d < topo.n_ranks
-    assert len(set(pairs)) == len(pairs)
+    assert pairs.min() >= 0 and pairs.max() < topo.n_ranks
+    assert len({(int(s), int(d)) for s, d in pairs}) == len(pairs)
 
 
 def test_topology_groups_partition():

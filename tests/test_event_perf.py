@@ -1,0 +1,138 @@
+"""Trace-time micro-benchmark: array-native event construction must beat
+the legacy dict-of-dicts path at paper-scale rank counts.
+
+Marked ``perf`` and skipped unless ``REPRO_PERF_TESTS`` is set — timing
+assertions are environment-sensitive and must not gate the tier-1 suite.
+The CI benchmark-smoke job runs them with the flag enabled.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import collectives as coll
+from repro.core.regions import RegionEvent
+from repro.core.topology import Topology
+
+pytestmark = [
+    pytest.mark.perf,
+    pytest.mark.skipif(
+        not os.environ.get("REPRO_PERF_TESTS"),
+        reason="perf micro-benchmarks run only with REPRO_PERF_TESTS=1",
+    ),
+]
+
+N_RANKS = 512
+N_EVENTS = 200
+
+
+def _dict_path_event(pairs, n, nbytes):
+    """The pre-array construction: Python loop over ranks and pairs
+    building six dicts, then the adapter into the canonical form."""
+    sends = {r: 0 for r in range(n)}
+    recvs = {r: 0 for r in range(n)}
+    dests = {r: set() for r in range(n)}
+    srcs = {r: set() for r in range(n)}
+    bsent = {r: 0 for r in range(n)}
+    brecv = {r: 0 for r in range(n)}
+    for s, d in pairs:
+        sends[s] += 1
+        recvs[d] += 1
+        dests[s].add(d)
+        srcs[d].add(s)
+        bsent[s] += nbytes
+        brecv[d] += nbytes
+    return RegionEvent.from_dicts(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        sends_per_rank=sends,
+        recvs_per_rank=recvs,
+        dest_ranks=dests,
+        src_ranks=srcs,
+        bytes_sent=bsent,
+        bytes_recv=brecv,
+    )
+
+
+def _best_of(fn, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def test_array_construction_beats_dict_path_at_512_ranks():
+    topo = Topology((("x", 8), ("y", 8), ("z", 8)))
+    perm = [(i, i + 1) for i in range(7)]
+    pairs = topo.expand_pairs("x", perm)  # 448 global pairs
+    pair_list = [(int(s), int(d)) for s, d in pairs]
+
+    def array_path():
+        for _ in range(N_EVENTS):
+            coll.build_p2p_event("ppermute", "x", pairs, N_RANKS, 4096)
+
+    def dict_path():
+        for _ in range(N_EVENTS):
+            _dict_path_event(pair_list, N_RANKS, 4096)
+
+    array_t = _best_of(array_path)
+    dict_t = _best_of(dict_path)
+    print(
+        f"\n  {N_EVENTS} events @ {N_RANKS} ranks: "
+        f"array {array_t * 1e3:.1f} ms vs dict {dict_t * 1e3:.1f} ms "
+        f"({dict_t / array_t:.1f}x)"
+    )
+    assert array_t < dict_t, (array_t, dict_t)
+
+    # the arrays produced are equivalent to the dict-built event
+    a = coll.build_p2p_event("ppermute", "x", pairs, N_RANKS, 4096)
+    b = _dict_path_event(pair_list, N_RANKS, 4096)
+    np.testing.assert_array_equal(a.sends, b.sends)
+    np.testing.assert_array_equal(a.bytes_recv, b.bytes_recv)
+    np.testing.assert_array_equal(a.dest_indptr, b.dest_indptr)
+    np.testing.assert_array_equal(a.dest_indices, b.dest_indices)
+
+
+def test_collective_construction_beats_dict_path_at_512_ranks():
+    topo = Topology((("x", 8), ("y", 8), ("z", 8)))
+    groups = topo.groups(("x", "y", "z"))
+
+    def array_path():
+        for _ in range(N_EVENTS):
+            coll.build_collective_event("psum", "xyz", groups, N_RANKS, 8192)
+
+    def dict_path():
+        # the pre-array collective recording built a peers dict of sets —
+        # O(n^2) set entries per event at a 512-wide communicator
+        for _ in range(N_EVENTS):
+            peers = {}
+            for g in groups:
+                gs = set(int(r) for r in g)
+                for r in gs:
+                    peers[r] = gs - {r}
+            RegionEvent.from_dicts(
+                region="r",
+                region_path=("r",),
+                kind="psum",
+                sends_per_rank={},
+                recvs_per_rank={},
+                dest_ranks={},
+                src_ranks={},
+                bytes_sent={r: 8192 for r in range(N_RANKS)},
+                bytes_recv={r: 8192 for r in range(N_RANKS)},
+                is_collective=1,
+            )
+
+    array_t = _best_of(array_path)
+    dict_t = _best_of(dict_path)
+    print(
+        f"\n  {N_EVENTS} collectives @ {N_RANKS} ranks: "
+        f"array {array_t * 1e3:.1f} ms vs dict {dict_t * 1e3:.1f} ms "
+        f"({dict_t / array_t:.1f}x)"
+    )
+    assert array_t < dict_t, (array_t, dict_t)

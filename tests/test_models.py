@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import registry
-from repro.configs.base import SHAPES
 from repro.models.model import build_model
 from repro.optim import adamw
 from repro.train.steps import make_train_step

@@ -1,14 +1,20 @@
 """Vectorized vs reference profiler accounting must be bit-identical.
 
-The NumPy accumulation path (``impl="numpy"``, the default) replaces the
-original dict-of-dicts accounting (kept as ``impl="reference"``).  These
-tests assert full RegionStats equality — sends/recvs/dest_ranks/src_ranks,
-bytes min/max, coll, coll_bytes, totals, largest_send, kinds, n_ranks — on
-randomized RegionEvent streams and on the real kripke/amg/laghos profile
-paths.
+Events are array-native (dense per-rank vectors + CSR peer sets, see
+``repro.core.regions``).  The NumPy aggregation path (``impl="numpy"``, the
+default) is parity-tested against the original dict-of-dicts accounting
+(``impl="reference"``, consuming the same events through
+``RegionEvent.to_dicts()``): full RegionStats equality — sends/recvs/
+dest_ranks/src_ranks, bytes min/max, coll, coll_bytes, totals,
+largest_send, kinds, n_ranks — on randomized event streams (built from
+legacy dicts via ``RegionEvent.from_dicts``) and on the real
+kripke/amg/laghos profile paths.  ``from_dicts``/``to_dicts`` round-trips
+are asserted on all three app paths as well.
 """
 
 import random
+
+import numpy as np
 
 from proptest import given, settings, st
 
@@ -18,15 +24,16 @@ from repro.core.regions import RegionEvent, RegionRecorder
 
 
 # ---------------------------------------------------------------------------
-# Randomized event streams
+# Randomized event streams (legacy dicts -> from_dicts adapter)
 # ---------------------------------------------------------------------------
 
 def _random_p2p_event(rng, region, n):
     """A ppermute-like event with deliberately sparse/misaligned dicts.
 
-    Keys are dropped independently per dict so the masking semantics
-    (bytes/dest entries for ranks outside sends|recvs are ignored) get
-    exercised, not just the aligned common case.
+    Keys are dropped independently per dict so the canonicalization in
+    ``from_dicts`` (entries for ranks outside sends|recvs are dropped,
+    missing entries default to zero/empty) gets exercised, not just the
+    aligned dense case the instrumented collectives produce.
     """
     ranks = [r for r in range(n) if rng.random() < 0.7]
     sends = {r: rng.randint(0, 5) for r in ranks if rng.random() < 0.8}
@@ -40,22 +47,24 @@ def _random_p2p_event(rng, region, n):
              for r in list(sends) + list(extra) if rng.random() < 0.9}
     brecv = {r: rng.randint(0, 1 << 16)
              for r in list(recvs) + list(extra) if rng.random() < 0.9}
-    return RegionEvent(region=region, region_path=(region,),
-                       kind=rng.choice(["ppermute", "send_recv"]),
-                       sends_per_rank=sends, recvs_per_rank=recvs,
-                       dest_ranks=dests, src_ranks=srcs,
-                       bytes_sent=bsent, bytes_recv=brecv)
+    return RegionEvent.from_dicts(
+        region=region, region_path=(region,),
+        kind=rng.choice(["ppermute", "send_recv"]),
+        sends_per_rank=sends, recvs_per_rank=recvs,
+        dest_ranks=dests, src_ranks=srcs,
+        bytes_sent=bsent, bytes_recv=brecv)
 
 
 def _random_coll_event(rng, region, n):
     bsent = {r: rng.randint(1, 1 << 12) for r in range(n)
              if rng.random() < 0.6}
-    return RegionEvent(region=region, region_path=(region,),
-                       kind=rng.choice(["psum", "all_gather", "pmin"]),
-                       sends_per_rank={}, recvs_per_rank={},
-                       dest_ranks={}, src_ranks={},
-                       bytes_sent=bsent, bytes_recv=dict(bsent),
-                       is_collective=1)
+    return RegionEvent.from_dicts(
+        region=region, region_path=(region,),
+        kind=rng.choice(["psum", "all_gather", "pmin"]),
+        sends_per_rank={}, recvs_per_rank={},
+        dest_ranks={}, src_ranks={},
+        bytes_sent=bsent, bytes_recv=dict(bsent),
+        is_collective=1)
 
 
 def _random_recorder(seed):
@@ -86,6 +95,18 @@ def _assert_profiles_equal(a: CommProfile, b: CommProfile):
             rname
 
 
+def _roundtrip_recorder(rec: RegionRecorder) -> RegionRecorder:
+    """Push every event through to_dicts -> from_dicts."""
+    out = RegionRecorder()
+    out.instances = dict(rec.instances)
+    for ev in rec.events:
+        out.record(RegionEvent.from_dicts(
+            region=ev.region, region_path=ev.region_path, kind=ev.kind,
+            is_collective=ev.is_collective, axis_name=ev.axis_name,
+            **ev.to_dicts()))
+    return out
+
+
 @given(st.integers(0, 10**6))
 @settings(max_examples=60, deadline=None)
 def test_parity_on_random_streams(seed):
@@ -95,6 +116,10 @@ def test_parity_on_random_streams(seed):
     ref = CommPatternProfiler.from_recorder(rec, name="p", replication=repl,
                                             impl="reference")
     _assert_profiles_equal(new, ref)
+    # dict adapter round-trip must preserve the stats exactly
+    rt = CommPatternProfiler.from_recorder(_roundtrip_recorder(rec),
+                                           name="p", replication=repl)
+    _assert_profiles_equal(new, rt)
 
 
 def test_parity_empty_recorder():
@@ -111,15 +136,37 @@ def test_unknown_impl_rejected():
         CommPatternProfiler.from_recorder(RegionRecorder(), impl="magic")
 
 
+def test_event_csr_canonical_form():
+    """Production events: dense vectors zero outside participants, CSR rows
+    sorted/unique, byte conservation between send and recv sides."""
+    from repro.core import collectives as coll
+    ev = coll.build_p2p_event("ppermute", "x",
+                              [(0, 1), (1, 2), (0, 1), (2, 0)], 4, 64)
+    assert ev.n_ranks == 4 and bool(ev.participants.all())
+    assert ev.sends.tolist() == [2, 1, 1, 0]
+    assert ev.recvs.tolist() == [1, 2, 1, 0]
+    assert int(ev.bytes_sent.sum()) == int(ev.bytes_recv.sum()) == 4 * 64
+    # duplicate (0, 1) pair collapses in the peer set
+    assert ev.dest_indptr.tolist() == [0, 1, 2, 3, 3]
+    assert ev.dest_indices.tolist() == [1, 2, 0]
+    for indptr, indices in ((ev.dest_indptr, ev.dest_indices),
+                            (ev.src_indptr, ev.src_indices)):
+        for r in range(ev.n_ranks):
+            row = indices[indptr[r]:indptr[r + 1]]
+            assert sorted(set(row.tolist())) == row.tolist()
+
+
 # ---------------------------------------------------------------------------
 # Real app profile paths (acceptance: kripke/amg/laghos reproduce exactly)
 # ---------------------------------------------------------------------------
 
-def _profile_with_impl(profile_fn, cfg, impl):
+def _profile_with_impl(profile_fn, cfg, impl, events_out=None):
     orig = CommPatternProfiler.from_recorder
 
     def patched(rec, **kw):
         kw["impl"] = impl
+        if events_out is not None:
+            events_out.append(rec)
         return orig(rec, **kw)
 
     CommPatternProfiler.from_recorder = staticmethod(patched)
@@ -130,10 +177,21 @@ def _profile_with_impl(profile_fn, cfg, impl):
 
 
 def _check_app(profile_fn, cfg):
-    new = _profile_with_impl(profile_fn, cfg, "numpy")
+    recs = []
+    new = _profile_with_impl(profile_fn, cfg, "numpy", events_out=recs)
     ref = _profile_with_impl(profile_fn, cfg, "reference")
     _assert_profiles_equal(new, ref)
     assert new.to_json() == ref.to_json()
+    # from_dicts round-trip of the real recorded event stream
+    (rec,) = recs
+    assert rec.events, "app trace recorded no events"
+    rt = CommPatternProfiler.from_recorder(
+        _roundtrip_recorder(rec), name=new.name)
+    for rname in new.regions:
+        assert new.regions[rname].to_dict() == rt.regions[rname].to_dict()
+    for ev in rec.events:
+        assert isinstance(ev.sends, np.ndarray)
+        assert len(ev.dest_indptr) == ev.n_ranks + 1
 
 
 def test_parity_kripke_profile_path():

@@ -1,10 +1,6 @@
 """End-to-end behaviour: Thicket-analog analysis + paper report emitters."""
 
-import jax
-import jax.numpy as jnp
-
 from repro.apps.kripke import KripkeConfig, profile as kripke_profile
-from repro.apps.laghos import LaghosConfig, profile as laghos_profile
 from repro.apps.stencil import Decomp3D
 from repro.core.reports import (bandwidth_msgrate_report, per_level_report,
                                 region_stats_table, scaling_report,
