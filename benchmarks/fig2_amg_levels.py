@@ -4,21 +4,25 @@ from __future__ import annotations
 
 from paper_data import profiles, write
 from repro.core.reports import per_level_report
+from repro.core.thicket import Frame
 
 
 def run() -> list:
     rows = []
-    parts = ["## Fig 2 analog — AMG max bytes sent per process, per MG "
-             "level\n"]
+    parts = ["## Fig 2 analog — AMG max bytes sent per process, per MG level\n"]
     for exp in ("amg-weak-dane", "amg-weak-tioga"):
         parts.append(f"### {exp}\n")
         profs = profiles(exp)
         parts.append(per_level_report(profs, metric="bytes_sent_max"))
         parts.append("")
-        for p in profs:
-            lv0 = p.regions.get("mg_level_0")
-            if lv0:
-                rows.append((f"fig2/{p.name}", p.meta["seconds"] * 1e6,
-                             f"lvl0_bytes_max={lv0.bytes_sent[1]}"))
+        frame = Frame.from_profiles(profs).where(region="mg_level_0")
+        for r in frame:
+            rows.append(
+                (
+                    f"fig2/{r['profile']}",
+                    r["meta_seconds"] * 1e6,
+                    f"lvl0_bytes_max={r['bytes_sent_max']}",
+                )
+            )
     write("fig2_amg_levels.md", "\n".join(parts))
     return rows

@@ -4,24 +4,35 @@ from __future__ import annotations
 
 from paper_data import profiles, write
 from repro.core.reports import per_level_report
+from repro.core.thicket import Frame
 
 
 def run() -> list:
     rows = []
-    parts = ["## Fig 3 analog — AMG max src ranks per process, per MG "
-             "level (coarse_solve row shows the all-ranks gather)\n"]
+    parts = [
+        "## Fig 3 analog — AMG max src ranks per process, per MG "
+        "level (coarse_solve row shows the all-ranks gather)\n"
+    ]
     for exp in ("amg-weak-dane", "amg-weak-tioga"):
         parts.append(f"### {exp}\n")
         profs = profiles(exp)
         parts.append(per_level_report(profs, metric="src_ranks_max"))
         parts.append("\n| ranks | coarse_solve collective bytes (max/rank) |")
         parts.append("|---|---|")
+        frame = Frame.from_profiles(profs)
+        cs = {r["n_ranks"]: r for r in frame.where(region="coarse_solve")}
+        lv0 = {r["n_ranks"]: r for r in frame.where(region="mg_level_0")}
         for p in profs:
-            cs = p.regions.get("coarse_solve")
-            parts.append(f"| {p.n_ranks} | {cs.coll_bytes[1] if cs else 0} |")
-            lv0 = p.regions.get("mg_level_0")
-            rows.append((f"fig3/{p.name}", p.meta["seconds"] * 1e6,
-                         f"lvl0_src_ranks={lv0.src_ranks[1] if lv0 else 0}"))
+            c = cs.get(p.n_ranks)
+            parts.append(f"| {p.n_ranks} | {c['coll_bytes_max'] if c else 0} |")
+            l0 = lv0.get(p.n_ranks)
+            rows.append(
+                (
+                    f"fig3/{p.name}",
+                    p.meta["seconds"] * 1e6,
+                    f"lvl0_src_ranks={l0['src_ranks_max'] if l0 else 0}",
+                )
+            )
         parts.append("")
     write("fig3_amg_ranks.md", "\n".join(parts))
     return rows

@@ -3,22 +3,36 @@
 from __future__ import annotations
 
 from paper_data import profiles, write
+from repro.core.thicket import Frame
 
 
 def run() -> list:
     rows = []
     profs = profiles("laghos-strong")
-    lines = ["## Fig 4 analog — Laghos strong scaling (rs-analog config)\n",
-             "| ranks | step_s (roofline) | halo bytes/rank (max) | "
-             "timestep collectives | timestep coll bytes (max) |",
-             "|---|---|---|---|---|"]
+    frame = Frame.from_profiles(profs)
+    he = {r["n_ranks"]: r for r in frame.where(region="halo_exchange")}
+    ts = {r["n_ranks"]: r for r in frame.where(region="timestep")}
+    lines = [
+        "## Fig 4 analog — Laghos strong scaling (rs-analog config)\n",
+        "| ranks | step_s (roofline) | halo bytes/rank (max) | "
+        "timestep collectives | timestep coll bytes (max) |",
+        "|---|---|---|---|---|",
+    ]
     for p in profs:
-        he = p.regions["halo_exchange"]
-        ts = p.regions["timestep"]
-        lines.append(f"| {p.n_ranks} | {p.meta['seconds']:.3e} | "
-                     f"{he.bytes_sent[1]} | {ts.coll} | "
-                     f"{ts.coll_bytes[1]} |")
-        rows.append((f"fig4/{p.name}", p.meta["seconds"] * 1e6,
-                     f"halo_bytes_max={he.bytes_sent[1]}"))
+        h = he.get(p.n_ranks)
+        t = ts.get(p.n_ranks)
+        halo_bytes = h["bytes_sent_max"] if h else 0
+        lines.append(
+            f"| {p.n_ranks} | {p.meta['seconds']:.3e} | "
+            f"{halo_bytes} | {t['coll'] if t else 0} | "
+            f"{t['coll_bytes_max'] if t else 0} |"
+        )
+        rows.append(
+            (
+                f"fig4/{p.name}",
+                p.meta["seconds"] * 1e6,
+                f"halo_bytes_max={halo_bytes}",
+            )
+        )
     write("fig4_laghos_strong.md", "\n".join(lines))
     return rows

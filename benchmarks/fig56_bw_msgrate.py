@@ -4,22 +4,37 @@ from __future__ import annotations
 
 from paper_data import profiles, write
 from repro.core.reports import bandwidth_msgrate_report
+from repro.core.thicket import Frame
 
 
 def run() -> list:
     profs = []
-    for exp in ("amg-weak-dane", "kripke-weak-dane", "laghos-strong",
-                "amg-weak-tioga", "kripke-weak-tioga"):
+    for exp in (
+        "amg-weak-dane",
+        "kripke-weak-dane",
+        "laghos-strong",
+        "amg-weak-tioga",
+        "kripke-weak-tioga",
+    ):
         profs.extend(profiles(exp))
-    md = "## Fig 5/6 analog — bandwidth & message rate (roofline-time " \
-         "denominator)\n\n" + bandwidth_msgrate_report(profs)
-    write("fig56_bw_msgrate.md", md)
+    hdr = "## Fig 5/6 analog — bandwidth & message rate (roofline-time denominator)"
+    write("fig56_bw_msgrate.md", hdr + "\n\n" + bandwidth_msgrate_report(profs))
+    frame = Frame.from_profiles(profs).agg(
+        ("profile", "n_ranks", "meta_seconds"),
+        {
+            "tb": ("total_bytes_sent", sum),
+            "ts": ("total_sends", sum),
+        },
+    )
     rows = []
-    for p in profs:
-        tb = sum(s.total_bytes_sent for s in p.regions.values())
-        ts = sum(s.total_sends for s in p.regions.values())
-        sec = p.meta["seconds"]
-        rows.append((f"fig56/{p.name}", sec * 1e6,
-                     f"bw={tb / max(1, p.n_ranks) / sec:.3e}B/s;"
-                     f"rate={ts / max(1, p.n_ranks) / sec:.3e}/s"))
+    for r in frame:
+        sec = r["meta_seconds"]
+        n = max(1, r["n_ranks"])
+        rows.append(
+            (
+                f"fig56/{r['profile']}",
+                sec * 1e6,
+                f"bw={r['tb'] / n / sec:.3e}B/s;rate={r['ts'] / n / sec:.3e}/s",
+            )
+        )
     return rows

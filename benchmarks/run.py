@@ -45,9 +45,11 @@ def run_smoke(out_dir: str) -> None:
     """CI smoke: sweep the paper's 64..512-rank kripke experiment twice.
 
     The first pass traces under the process-pool executor and populates the
-    shared profile cache; the second (serial) pass must be served entirely
-    from the cache and produce byte-identical profiles.  Profile JSONs land
-    in ``out_dir`` for the workflow to upload as an artifact.
+    shared profile cache (the directory manifest must account for every
+    worker's hits/misses exactly); the second (serial) pass must be served
+    entirely from the cache and produce byte-identical profiles.  Profile
+    JSONs plus one aggregated Thicket-frame CSV built from them land in
+    ``out_dir`` for the workflow to upload as an artifact.
     """
     import time
 
@@ -57,27 +59,47 @@ def run_smoke(out_dir: str) -> None:
         run_experiment,
     )
     from repro.benchpark.spec import PAPER_EXPERIMENTS
+    from repro.core.thicket import Frame
 
     spec = PAPER_EXPERIMENTS["kripke-weak-dane"]  # 64..512 ranks
     cache_root = default_cache_dir()
     n = len(spec.points)
 
     cache = ProfileCache(cache_root)
+    m0 = cache.manifest.read()
     t0 = time.perf_counter()
     first = run_experiment(spec, out_dir=out_dir, cache=cache, executor="process")
     t1 = time.perf_counter()
     assert len(first) == n
+    m1 = cache.manifest.read()
+    served = m1["hits"] - m0["hits"]
+    traced = m1["misses"] - m0["misses"]
+    # exact cross-process accounting via the shared manifest
+    assert served + traced == n, (m0, m1)
 
     cache2 = ProfileCache(cache_root)
     second = run_experiment(spec, out_dir=out_dir, cache=cache2, executor="serial")
     t2 = time.perf_counter()
     assert cache2.hits == n and cache2.misses == 0, (cache2.hits, cache2.misses)
+    m2 = cache.manifest.read()
+    assert m2["hits"] - m1["hits"] == n, (m1, m2)
+    assert m2["misses"] == m1["misses"], (m1, m2)
     for a, b in zip(first, second):
         assert a.to_json() == b.to_json()
+
+    # one aggregated Thicket frame over the sweep's profile JSONs
+    frame = Frame.from_profile_dir(out_dir)
+    assert len(frame) >= n
+    frame_path = os.path.join(out_dir, "thicket_frame.csv")
+    with open(frame_path, "w") as f:
+        f.write(frame.to_csv())
     print(
         f"smoke OK: {n} points in {out_dir}; "
-        f"first pass {t1 - t0:.1f}s (executor=process, hits={cache.hits}), "
-        f"second pass {t2 - t1:.1f}s (serial, served from cache)"
+        f"first pass {t1 - t0:.1f}s (executor=process, manifest "
+        f"hits={served} misses={traced}), "
+        f"second pass {t2 - t1:.1f}s (serial, served from cache); "
+        f"aggregated frame {len(frame)} rows x {len(frame.columns())} cols "
+        f"-> {frame_path}"
     )
 
 

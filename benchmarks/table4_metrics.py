@@ -4,20 +4,35 @@ from __future__ import annotations
 
 from paper_data import profiles, write
 from repro.core.reports import table4_metrics
+from repro.core.thicket import Frame
 
 
 def run() -> list:
     profs = []
-    for exp in ("kripke-weak-dane", "kripke-weak-tioga", "amg-weak-dane",
-                "amg-weak-tioga", "laghos-strong"):
+    for exp in (
+        "kripke-weak-dane",
+        "kripke-weak-tioga",
+        "amg-weak-dane",
+        "amg-weak-tioga",
+        "laghos-strong",
+    ):
         profs.extend(profiles(exp))
-    md = "## Table IV analog — per-app totals across scales\n\n" \
-        + table4_metrics(profs)
-    write("table4_metrics.md", md)
+    md = "## Table IV analog — per-app totals across scales\n\n"
+    write("table4_metrics.md", md + table4_metrics(profs))
+    frame = Frame.from_profiles(profs).agg(
+        ("profile", "meta_seconds"),
+        {
+            "tb": ("total_bytes_sent", sum),
+            "ts": ("total_sends", sum),
+        },
+    )
     rows = []
-    for p in profs:
-        tb = sum(s.total_bytes_sent for s in p.regions.values())
-        ts = sum(s.total_sends for s in p.regions.values())
-        rows.append((f"table4/{p.name}", p.meta["seconds"] * 1e6,
-                     f"bytes={tb:.3e};sends={ts:.3e}"))
+    for r in frame:
+        rows.append(
+            (
+                f"table4/{r['profile']}",
+                r["meta_seconds"] * 1e6,
+                f"bytes={r['tb']:.3e};sends={r['ts']:.3e}",
+            )
+        )
     return rows

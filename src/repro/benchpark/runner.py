@@ -19,12 +19,24 @@ Sweep-scalability features on top of the plain loop:
   the directory shared by the runner and the ``benchmarks/`` figure
   scripts.  The cache is size-capped (LRU by file mtime, refreshed on every
   hit) — see :attr:`ProfileCache.max_bytes`.
+* **Shared cache manifest** (:class:`CacheManifest`): one ``manifest.json``
+  per cache directory accumulates exact hit/miss/put/eviction totals across
+  every handle — including process-pool workers — so concurrent sweeps can
+  report per-directory accounting instead of mirroring process-local
+  counters.  Updates publish via write-temp + atomic rename, serialized by
+  an ``O_CREAT|O_EXCL`` sidecar lock (stale locks from crashed holders are
+  broken after a timeout), so no increment is ever lost.
 * **Concurrent scaling points**: independent points of a sweep trace under
   ``executor="thread"`` (recorder/topology state is thread-local, see
   ``repro.core.regions`` / ``repro.core.topology``) or ``"process"`` — a
-  process pool sidesteps the GIL entirely now that RegionEvents are
-  picklable arrays, giving true multi-core trace throughput; ``"serial"``
-  keeps the plain loop.  All three produce byte-identical profiles.
+  process pool sidesteps the GIL entirely since the columnar TraceBuffer
+  and profiles pickle cheaply, giving true multi-core trace throughput;
+  ``"serial"`` keeps the plain loop.  All three produce byte-identical
+  profiles.
+* **Aggregated sweep frames**: ``run_experiment(..., frame_csv=...)`` also
+  emits the whole sweep as one NumPy-backed Thicket
+  :class:`~repro.core.thicket.Frame` CSV (one row per profile x region),
+  the form the paper's scaling analysis consumes.
 """
 
 from __future__ import annotations
@@ -34,12 +46,14 @@ import importlib
 import json
 import os
 import threading
+import time
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import asdict, is_dataclass
 from typing import Optional
 
 from repro.benchpark.spec import ExperimentSpec
 from repro.core.profiler import CommProfile
+from repro.core.thicket import Frame
 
 # same system model the dry-run uses (TPU v5e)
 PEAK_FLOPS = 197e12
@@ -65,13 +79,12 @@ def _flops_estimate(app: str, cfg) -> float:
     """Per-rank per-step useful FLOPs (napkin model; see benchmarks/)."""
     if app == "kripke":
         zones = cfg.nx * cfg.ny * cfg.nz
-        ang = (cfg.n_dirsets * cfg.n_groupsets * cfg.dirs_per_set
-               * cfg.groups_per_set)
+        ang = cfg.n_dirsets * cfg.n_groupsets * cfg.dirs_per_set * cfg.groups_per_set
         return 12.0 * zones * ang * cfg.n_octants
     if app == "amg":
         fine = cfg.nx * cfg.ny * cfg.nz
         sweeps = cfg.n_pre + cfg.n_post + 2
-        return 8.0 * fine * sweeps * 1.15 * cfg.n_cycles   # + coarser levels
+        return 8.0 * fine * sweeps * 1.15 * cfg.n_cycles  # + coarser levels
     if app == "laghos":
         lx, ly = cfg.local_shape
         return 40.0 * lx * ly * cfg.n_steps
@@ -80,9 +93,12 @@ def _flops_estimate(app: str, cfg) -> float:
 
 def _roofline_seconds(app: str, cfg, profile: CommProfile) -> float:
     flops = _flops_estimate(app, cfg)
-    mem = flops * 2.0    # ~2 bytes/flop for stencil codes (bandwidth-bound)
-    wire = max((st.bytes_sent[1] + st.coll_bytes[1])
-               for st in profile.regions.values()) if profile.regions else 0
+    mem = flops * 2.0  # ~2 bytes/flop for stencil codes (bandwidth-bound)
+    wire = (
+        max((st.bytes_sent[1] + st.coll_bytes[1]) for st in profile.regions.values())
+        if profile.regions
+        else 0
+    )
     return max(flops / PEAK_FLOPS, mem / HBM_BW, wire / LINK_BW)
 
 
@@ -94,9 +110,14 @@ def _roofline_seconds(app: str, cfg, profile: CommProfile) -> float:
 #: trace/profiling semantics or the app kernels changes the fingerprint and
 #: therefore invalidates every cached profile.
 _FINGERPRINT_MODULES = (
-    "repro.core.collectives", "repro.core.compat", "repro.core.profiler",
-    "repro.core.regions", "repro.core.topology",
-    "repro.apps.stencil", "repro.apps.amg", "repro.apps.kripke",
+    "repro.core.collectives",
+    "repro.core.compat",
+    "repro.core.profiler",
+    "repro.core.regions",
+    "repro.core.topology",
+    "repro.apps.stencil",
+    "repro.apps.amg",
+    "repro.apps.kripke",
     "repro.apps.laghos",
 )
 
@@ -123,6 +144,97 @@ def _config_payload(cfg) -> dict:
     return dict(vars(cfg))
 
 
+class CacheManifest:
+    """Exact shared accounting for one cache directory (single JSON file).
+
+    ``manifest.json`` holds monotonic counters
+    ``{"hits", "misses", "puts", "evictions"}`` covering *every* handle that
+    ever touched the directory — threads and process-pool workers alike.
+    :meth:`bump` serializes writers on an ``O_CREAT|O_EXCL`` sidecar lock
+    and publishes the updated file via write-temp + atomic ``os.replace``,
+    so concurrent increments are never lost and readers always see a
+    consistent snapshot.  Locks left behind by crashed holders are broken
+    after :attr:`STALE_LOCK_SECONDS` via an atomic rename, so exactly one
+    waiter wins the break; a *live* holder stalled past that limit can
+    momentarily lose exclusion (inherent to timeout-based lock breaking,
+    and far beyond a bump's millisecond critical section), but the release
+    path verifies lock ownership so the loss cannot cascade further.
+    """
+
+    FILENAME = "manifest.json"
+    FIELDS = ("hits", "misses", "puts", "evictions")
+    STALE_LOCK_SECONDS = 10.0
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        self.path = os.path.join(self.root, self.FILENAME)
+        self._lock_path = self.path + ".lock"
+
+    def read(self) -> dict:
+        """Current totals (zeros when the manifest does not exist yet)."""
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError):
+            raw = {}
+        return {k: int(raw.get(k, 0)) for k in self.FIELDS}
+
+    def _acquire_lock(self) -> int:
+        while True:
+            try:
+                return os.open(self._lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    age = time.time() - os.stat(self._lock_path).st_mtime
+                except OSError:
+                    continue  # holder released (or broke) it; retry open
+                if age > self.STALE_LOCK_SECONDS:
+                    # Break a crashed holder by renaming the lock to a
+                    # unique name first: rename is atomic, so exactly one
+                    # breaker wins it (the losers see ENOENT and retry),
+                    # and nobody can delete a lock a fresh holder just
+                    # re-created.
+                    stale = (
+                        f"{self._lock_path}.stale"
+                        f".{os.getpid()}.{threading.get_ident()}"
+                    )
+                    try:
+                        os.rename(self._lock_path, stale)
+                        os.remove(stale)
+                    except OSError:
+                        pass  # another breaker won the rename
+                    continue
+                time.sleep(0.002)
+
+    def _release_lock(self, fd: int) -> None:
+        try:
+            # Only remove the lock if it is still *ours*: a holder stalled
+            # past STALE_LOCK_SECONDS may have had its lock broken, and
+            # deleting the current holder's fresh lock would cascade the
+            # mutual-exclusion loss to a third writer.
+            if os.fstat(fd).st_ino == os.stat(self._lock_path).st_ino:
+                os.remove(self._lock_path)
+        except OSError:
+            pass  # a stale-lock breaker beat us to it
+        finally:
+            os.close(fd)
+
+    def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to the shared counters."""
+        os.makedirs(self.root, exist_ok=True)
+        fd = self._acquire_lock()
+        try:
+            data = self.read()
+            for k, v in deltas.items():
+                data[k] = data.get(k, 0) + int(v)
+            tmp = f"{self.path}.{os.getpid()}.{threading.get_ident()}.tmp"
+            with open(tmp, "w") as f:
+                json.dump(data, f, sort_keys=True)
+            os.replace(tmp, self.path)  # atomic publish
+        finally:
+            self._release_lock(fd)
+
+
 class ProfileCache:
     """Content-addressed CommProfile store (one JSON file per key).
 
@@ -137,16 +249,22 @@ class ProfileCache:
     the directory size: after every put, least-recently-used entries (by
     mtime; hits refresh it) are evicted until under the cap.  Default from
     ``REPRO_PROFILE_CACHE_MAX_BYTES`` (<= 0 disables the cap).
+
+    ``hits`` / ``misses`` count this handle's traffic only; the directory's
+    exact cross-handle totals live in :attr:`manifest` (see
+    :class:`CacheManifest`), which every get/put/eviction also updates.
     """
 
     def __init__(self, root: str, max_bytes: Optional[int] = None):
         self.root = str(root)
         if max_bytes is None:
-            max_bytes = int(os.environ.get(CACHE_MAX_BYTES_ENV,
-                                           _DEFAULT_CACHE_MAX_BYTES))
+            max_bytes = int(
+                os.environ.get(CACHE_MAX_BYTES_ENV, _DEFAULT_CACHE_MAX_BYTES)
+            )
         self.max_bytes = max_bytes
         self.hits = 0
         self.misses = 0
+        self.manifest = CacheManifest(self.root)
         self._lock = threading.Lock()
         # Amortized eviction state: directory bytes as of the last scan
         # (None = never scanned) + bytes written by this handle since.
@@ -154,8 +272,12 @@ class ProfileCache:
         self._written_since_scan = 0
 
     def key(self, app: str, cfg, decomp) -> str:
-        payload = {"app": app, "config": _config_payload(cfg),
-                   "decomp": list(decomp), "code": _code_fingerprint()}
+        payload = {
+            "app": app,
+            "config": _config_payload(cfg),
+            "decomp": list(decomp),
+            "code": _code_fingerprint(),
+        }
         blob = json.dumps(payload, sort_keys=True, default=str)
         return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -170,13 +292,15 @@ class ProfileCache:
         except (OSError, ValueError, KeyError, TypeError):
             with self._lock:
                 self.misses += 1
+            self.manifest.bump(misses=1)
             return None
         try:
-            os.utime(path)             # LRU: a hit refreshes recency
+            os.utime(path)  # LRU: a hit refreshes recency
         except OSError:
             pass
         with self._lock:
             self.hits += 1
+        self.manifest.bump(hits=1)
         return prof
 
     def put(self, key: str, profile: CommProfile) -> None:
@@ -186,7 +310,8 @@ class ProfileCache:
         tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
         with open(tmp, "w") as f:
             f.write(data)
-        os.replace(tmp, path)          # atomic publish
+        os.replace(tmp, path)  # atomic publish
+        self.manifest.bump(puts=1)
         if self.max_bytes is None or self.max_bytes <= 0:
             return
         # Amortized cap check: only pay the full directory scan when the
@@ -209,24 +334,28 @@ class ProfileCache:
         except OSError:
             return
         for fname in names:
-            if not fname.endswith(".json"):
+            if not fname.endswith(".json") or fname == CacheManifest.FILENAME:
                 continue
             p = os.path.join(self.root, fname)
             try:
                 st = os.stat(p)
             except OSError:
-                continue               # raced with another evictor
+                continue  # raced with another evictor
             entries.append((st.st_mtime, st.st_size, p))
         total = sum(size for _, size, _ in entries)
+        evicted = 0
         if total > self.max_bytes:
-            for _, size, p in sorted(entries):     # oldest mtime first
+            for _, size, p in sorted(entries):  # oldest mtime first
                 try:
                     os.remove(p)
                 except OSError:
                     continue
+                evicted += 1
                 total -= size
                 if total <= self.max_bytes:
                     break
+        if evicted:
+            self.manifest.bump(evictions=evicted)
         with self._lock:
             self._scanned_total = total
             self._written_since_scan = 0
@@ -236,20 +365,30 @@ class ProfileCache:
 # Sweep execution
 # ---------------------------------------------------------------------------
 
-def _trace_point(spec: ExperimentSpec, pt, cfg,
-                 cache: Optional[ProfileCache], verbose: bool) -> tuple:
+
+def _trace_point(
+    spec: ExperimentSpec, pt, cfg, cache: Optional[ProfileCache], verbose: bool
+) -> tuple:
     """Profile (or cache-load) one scaling point.
 
-    Module-level so it pickles into process-pool workers; ``cache`` state
-    (hit/miss counters) is process-local, the backing directory is shared.
-    Returns ``(pt, profile, cached)``.
+    Module-level so it pickles into process-pool workers; ``cache``
+    hit/miss counters are handle-local, the backing directory and its
+    manifest are shared.  Returns ``(pt, profile, cached)``.
     """
     from repro.apps import amg, kripke, laghos
-    profile_fns = {"kripke": kripke.profile, "amg": amg.profile,
-                   "laghos": laghos.profile}
-    meta = {"app": spec.app, "scaling": spec.scaling,
-            "experiment": spec.name, "decomp": list(pt.decomp),
-            "system": spec.system}
+
+    profile_fns = {
+        "kripke": kripke.profile,
+        "amg": amg.profile,
+        "laghos": laghos.profile,
+    }
+    meta = {
+        "app": spec.app,
+        "scaling": spec.scaling,
+        "experiment": spec.name,
+        "decomp": list(pt.decomp),
+        "system": spec.system,
+    }
     key = cache.key(spec.app, cfg, pt.decomp) if cache else None
     prof = cache.get(key) if cache else None
     cached = prof is not None
@@ -258,17 +397,19 @@ def _trace_point(spec: ExperimentSpec, pt, cfg,
         prof.name = f"{spec.name}-{pt.n_ranks}"
         prof.meta = meta
     else:
-        prof = profile_fns[spec.app](
-            cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta)
+        prof = profile_fns[spec.app](cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta)
     prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
     if cache and not cached:
         cache.put(key, prof)
-    if verbose:                        # stream progress as points finish
+    if verbose:  # stream progress as points finish
         tot = sum(s.total_bytes_sent for s in prof.regions.values())
         tag = " [cached]" if cached else ""
-        print(f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
-              f"{len(prof.regions)} regions, "
-              f"{tot:.3e} bytes sent{tag}", flush=True)
+        print(
+            f"  {spec.name} @ {pt.n_ranks:4d} ranks: "
+            f"{len(prof.regions)} regions, "
+            f"{tot:.3e} bytes sent{tag}",
+            flush=True,
+        )
     return pt, prof, cached
 
 
@@ -279,22 +420,29 @@ def _trace_point_in_worker(args) -> tuple:
     return _trace_point(spec, pt, cfg, cache, verbose)
 
 
-def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
-                   verbose: bool = True, *,
-                   cache: Optional[ProfileCache] = None,
-                   cache_dir: Optional[str] = None,
-                   max_workers: Optional[int] = None,
-                   executor: str = "thread") -> list:
+def run_experiment(
+    spec: ExperimentSpec,
+    out_dir: Optional[str] = None,
+    verbose: bool = True,
+    *,
+    cache: Optional[ProfileCache] = None,
+    cache_dir: Optional[str] = None,
+    max_workers: Optional[int] = None,
+    executor: str = "thread",
+    frame_csv: Optional[str] = None,
+) -> list:
     """Profile every scaling point of ``spec`` (cached + concurrent).
 
     ``cache`` / ``cache_dir``: enable the content-addressed profile cache
     (``cache`` wins if both are given).  ``executor``: ``"thread"``
-    (default), ``"process"`` (true multi-core tracing; events and profiles
-    are picklable arrays, workers share the cache directory via atomic
-    renames), or ``"serial"``.  ``max_workers``: pool width for independent
-    points; defaults to min(4, n_points).  Results keep the spec's point
-    order regardless of completion order; all executors produce
-    byte-identical profiles.
+    (default), ``"process"`` (true multi-core tracing; the columnar trace
+    buffers and profiles pickle cheaply, workers share the cache directory
+    and its manifest via atomic renames), or ``"serial"``.
+    ``max_workers``: pool width for independent points; defaults to
+    min(4, n_points).  ``frame_csv``: also write the sweep as one
+    aggregated Thicket-frame CSV (one row per profile x region).  Results
+    keep the spec's point order regardless of completion order; all
+    executors produce byte-identical profiles.
     """
     if executor not in ("thread", "process", "serial"):
         raise ValueError(f"unknown executor: {executor!r}")
@@ -307,14 +455,23 @@ def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
     concurrent = executor != "serial" and max_workers > 1 and len(points) > 1
 
     if concurrent and executor == "process":
-        work = [(spec, pt, cfg, cache.root if cache else None,
-                 cache.max_bytes if cache else None, verbose)
-                for pt, cfg in points]
+        work = [
+            (
+                spec,
+                pt,
+                cfg,
+                cache.root if cache else None,
+                cache.max_bytes if cache else None,
+                verbose,
+            )
+            for pt, cfg in points
+        ]
         with ProcessPoolExecutor(max_workers=max_workers) as ex:
             results = list(ex.map(_trace_point_in_worker, work))
         if cache:
             # mirror worker-local counters so caller-visible accounting
-            # matches thread/serial execution
+            # matches thread/serial execution (the directory manifest holds
+            # the exact cross-process totals)
             for _, _, cached in results:
                 if cached:
                     cache.hits += 1
@@ -322,18 +479,25 @@ def run_experiment(spec: ExperimentSpec, out_dir: Optional[str] = None,
                     cache.misses += 1
     elif concurrent:
         with ThreadPoolExecutor(max_workers=max_workers) as ex:
-            results = list(ex.map(
-                lambda pc: _trace_point(spec, pc[0], pc[1], cache, verbose),
-                points))               # keeps point order
+            results = list(
+                ex.map(
+                    lambda pc: _trace_point(spec, pc[0], pc[1], cache, verbose),
+                    points,
+                )
+            )  # keeps point order
     else:
-        results = [_trace_point(spec, pt, cfg, cache, verbose)
-                   for pt, cfg in points]
+        results = [_trace_point(spec, pt, cfg, cache, verbose) for pt, cfg in points]
 
     profiles = []
     for pt, prof, _ in results:
         profiles.append(prof)
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)
-            prof.save(os.path.join(out_dir,
-                                   f"{spec.name}-{pt.n_ranks:05d}.json"))
+            prof.save(os.path.join(out_dir, f"{spec.name}-{pt.n_ranks:05d}.json"))
+    if frame_csv:
+        parent = os.path.dirname(frame_csv)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(frame_csv, "w") as f:
+            f.write(Frame.from_profiles(profiles).to_csv())
     return profiles

@@ -30,22 +30,30 @@ extension field.
 Profiling data model
 --------------------
 
-Event capture is **array-native** (see :mod:`repro.core.regions` for the
-canonical :class:`RegionEvent` layout): there is no Python loop over ranks
-anywhere on the recording path, so per-event overhead is O(pairs) vector
-work rather than O(n_ranks) interpreter work.
+Event capture is **columnar** (see :mod:`repro.core.regions` for the
+:class:`TraceBuffer` schema): when a recorder is active, each wrapper calls
+``regions.record_p2p`` / ``regions.record_collective``, which append the
+call's dense per-rank count/byte vectors and CSR peer-set pairs straight
+into the recorder's structure-of-arrays buffer.  No per-event Python object
+and no Python loop over ranks exist anywhere on the recording path — the
+per-event cost is O(pairs) vector work rather than O(n_ranks) interpreter
+work, and the profiler later reduces whole columns at once.
 
-* :func:`build_p2p_event` turns a ``(P, 2)`` array of global ``(src, dst)``
+* Point-to-point capture turns a ``(P, 2)`` array of global ``(src, dst)``
   pairs into dense send/recv count and byte vectors with one ``np.add.at``
-  scatter each, and into the CSR destination/source *set* encodings by
+  scatter each, and into the destination/source peer-*set* pair columns by
   uniquing ``src * n + dst`` pair codes (row-sorted by construction).  The
   byte vectors preserve the ppermute convention above: every pair moves the
   full ``nbytes`` of the permuted operand.
-* :func:`build_collective_event` broadcasts the per-rank ring-equivalent
-  byte cost (the ``bytes_factor`` column of the table above, evaluated at
-  the communicator-group size) over the flattened group arrays returned by
+* Collective capture broadcasts the per-rank ring-equivalent byte cost (the
+  ``bytes_factor`` column of the table above, evaluated at the
+  communicator-group size) over the flattened group arrays returned by
   ``topology.groups`` — collective peer sets are implicit (complete graph
   within each group) and never materialized.
+
+:func:`build_p2p_event` / :func:`build_collective_event` remain as
+compatibility constructors that materialize a single :class:`RegionEvent`
+view with the same accounting (adapters and tests only).
 """
 
 from __future__ import annotations
@@ -84,22 +92,9 @@ def _flatten(tree):
 
 
 # ---------------------------------------------------------------------------
-# Array-native event construction (no Python loop over ranks)
+# RegionEvent view constructors (compatibility/adapters; the recording path
+# appends into the recorder's columnar TraceBuffer without building these)
 # ---------------------------------------------------------------------------
-
-def _peer_csr(rows: np.ndarray, cols: np.ndarray, n: int) -> tuple:
-    """CSR (indptr, indices) of the distinct peer set per rank.
-
-    Duplicate (row, col) pairs collapse via one ``np.unique`` over encoded
-    pair codes; rows come back sorted with sorted unique columns per row.
-    """
-    if not len(rows):
-        return np.zeros(n + 1, np.int64), np.zeros(0, np.int64)
-    codes = np.unique(rows * np.int64(n) + cols)
-    indptr = np.zeros(n + 1, np.int64)
-    np.cumsum(np.bincount(codes // n, minlength=n), out=indptr[1:])
-    return indptr, codes % n
-
 
 def build_p2p_event(kind: str, axis_name, pairs, n: int,
                     nbytes: int) -> _regions.RegionEvent:
@@ -110,17 +105,11 @@ def build_p2p_event(kind: str, axis_name, pairs, n: int,
     SPMD execution model: the permute runs on every rank, including ranks
     with no active pair this call).
     """
-    pairs = np.asarray(list(pairs) if not isinstance(pairs, np.ndarray)
-                       else pairs, np.int64).reshape(-1, 2)
-    src, dst = pairs[:, 0], pairs[:, 1]
-    sends = np.zeros(n, np.int64)
-    recvs = np.zeros(n, np.int64)
-    np.add.at(sends, src, 1)
-    np.add.at(recvs, dst, 1)
-    dptr, dind = _peer_csr(src, dst, n)
-    sptr, sind = _peer_csr(dst, src, n)
+    sends, recvs, drows, dpeers, srows, speers = _regions.p2p_structure(pairs, n)
+    dptr, dind = _regions._rows_to_csr(drows, dpeers, n)
+    sptr, sind = _regions._rows_to_csr(srows, speers, n)
     return _regions.RegionEvent(
-        region=_regions.current_region() or "<unannotated>",
+        region=_regions.current_region() or _regions.UNANNOTATED_REGION,
         region_path=_regions.current_region_path(),
         kind=kind, n_ranks=n,
         sends=sends, recvs=recvs,
@@ -148,7 +137,7 @@ def build_collective_event(kind: str, axis_name, groups: np.ndarray, n: int,
     dptr, dind = _regions._empty_csr(n)
     sptr, sind = _regions._empty_csr(n)
     return _regions.RegionEvent(
-        region=_regions.current_region() or "<unannotated>",
+        region=_regions.current_region() or _regions.UNANNOTATED_REGION,
         region_path=_regions.current_region_path(),
         kind=kind, n_ranks=n,
         sends=zero, recvs=zero.copy(),
@@ -192,8 +181,7 @@ def ppermute(x, axis_name, perm: Sequence[tuple],
         else:
             pairs = perm
             n = _axis_size(axis_name)
-        _regions.record_event(
-            build_p2p_event("ppermute", axis_name, pairs, n, total))
+        _regions.record_p2p("ppermute", axis_name, pairs, n, total)
     return jax.tree.map(
         lambda leaf: lax.ppermute(leaf, axis_name, perm=list(perm)), x)
 
@@ -219,8 +207,7 @@ def _record_collective(kind, x, axis_name, bytes_factor) -> None:
         n_total = _axis_size(axis_name)
         groups = np.arange(n_total, dtype=np.int64)[None, :]
         per_rank = int(total * bytes_factor(max(1, n_total)))
-    _regions.record_event(
-        build_collective_event(kind, axis_name, groups, n_total, per_rank))
+    _regions.record_collective(kind, axis_name, groups, n_total, per_rank)
 
 
 def psum(x, axis_name):

@@ -3,8 +3,9 @@
 The paper's profiler is invoked at the end of each marked communication
 region and computes message / rank / data-volume statistics for the MPI
 operations that occurred within the region boundaries.  This module is the
-JAX analog: it aggregates the :class:`RegionEvent` stream produced by the
-instrumented collectives into per-region :class:`RegionStats`.
+JAX analog: it reduces the columnar :class:`~repro.core.regions.TraceBuffer`
+produced by the instrumented collectives into per-region
+:class:`RegionStats`.
 
 Table I schema (all reproduced here):
 
@@ -25,13 +26,13 @@ Extensions over the paper (TPU-native):
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field, asdict
+from dataclasses import asdict, dataclass, field
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-from repro.core.regions import RegionRecorder, recording
+from repro.core.regions import RegionRecorder, TraceBuffer, recording
 
 
 @dataclass
@@ -47,14 +48,14 @@ class RegionStats:
     src_ranks: tuple = (0, 0)
     bytes_sent: tuple = (0, 0)
     bytes_recv: tuple = (0, 0)
-    coll: int = 0                       # max collective calls in the region
+    coll: int = 0  # max collective calls in the region
     # Extensions.
-    coll_bytes: tuple = (0, 0)          # (min, max) collective bytes per rank
-    total_bytes_sent: int = 0           # across all ranks (Table IV col 1)
-    total_sends: int = 0                # across all ranks (Table IV col 2)
-    largest_send: int = 0               # largest single message (Table IV col 3)
+    coll_bytes: tuple = (0, 0)  # (min, max) collective bytes per rank
+    total_bytes_sent: int = 0  # across all ranks (Table IV col 1)
+    total_sends: int = 0  # across all ranks (Table IV col 2)
+    largest_send: int = 0  # largest single message (Table IV col 3)
     n_ranks: int = 0
-    kinds: dict = field(default_factory=dict)   # kind -> call count
+    kinds: dict = field(default_factory=dict)  # kind -> call count
 
     @property
     def avg_send_size(self) -> float:
@@ -73,30 +74,42 @@ class CommProfile:
 
     name: str
     n_ranks: int
-    regions: dict = field(default_factory=dict)   # region -> RegionStats
-    meta: dict = field(default_factory=dict)      # free-form (config, mesh, ...)
+    regions: dict = field(default_factory=dict)  # region -> RegionStats
+    meta: dict = field(default_factory=dict)  # free-form (config, mesh, ...)
 
     def region(self, name: str) -> RegionStats:
         return self.regions[name]
 
     def to_json(self) -> str:
-        return json.dumps({
-            "name": self.name,
-            "n_ranks": self.n_ranks,
-            "meta": self.meta,
-            "regions": {k: v.to_dict() for k, v in self.regions.items()},
-        }, indent=2, sort_keys=True)
+        return json.dumps(
+            {
+                "name": self.name,
+                "n_ranks": self.n_ranks,
+                "meta": self.meta,
+                "regions": {k: v.to_dict() for k, v in self.regions.items()},
+            },
+            indent=2,
+            sort_keys=True,
+        )
 
     @staticmethod
     def from_json(text: str) -> "CommProfile":
         raw = json.loads(text)
-        prof = CommProfile(name=raw["name"], n_ranks=raw["n_ranks"],
-                           meta=raw.get("meta", {}))
+        prof = CommProfile(
+            name=raw["name"], n_ranks=raw["n_ranks"], meta=raw.get("meta", {})
+        )
         for rname, rd in raw["regions"].items():
             rd = dict(rd)
             rd.pop("avg_send_size", None)
-            for k in ("sends", "recvs", "dest_ranks", "src_ranks",
-                      "bytes_sent", "bytes_recv", "coll_bytes"):
+            for k in (
+                "sends",
+                "recvs",
+                "dest_ranks",
+                "src_ranks",
+                "bytes_sent",
+                "bytes_recv",
+                "coll_bytes",
+            ):
                 rd[k] = tuple(rd[k])
             prof.regions[rname] = RegionStats(**rd)
         return prof
@@ -111,30 +124,44 @@ class CommProfile:
             return CommProfile.from_json(f.read())
 
 
+_I64_MAX = np.iinfo(np.int64).max
+_I64_MIN = np.iinfo(np.int64).min
+
+
 class CommPatternProfiler:
-    """Aggregates a RegionRecorder's event stream into RegionStats.
+    """Reduces a RegionRecorder's columnar trace into RegionStats.
 
-    Events arrive array-native (see the data-model section of
-    :mod:`repro.core.regions`): dense per-rank count/byte vectors plus CSR
-    peer-set encodings.  Two implementations with bit-identical output:
+    Events live in the recorder's structure-of-arrays
+    :class:`~repro.core.regions.TraceBuffer` (dense per-rank count/byte
+    slabs plus CSR peer-set pair columns — see the data-model section of
+    :mod:`repro.core.regions`).  Two implementations with bit-identical
+    output:
 
-    * ``impl="numpy"`` (default) — the hot path.  Per region, dense event
-      vectors are summed straight into per-rank accumulators, distinct
-      source/destination ranks are counted by uniquing the concatenated
-      CSR (rank, peer) pair codes of all events, and participant masks are
-      OR-reductions of the events' masks.  There is no per-rank Python
-      anywhere — cost is O(events) vector operations.
+    * ``impl="numpy"`` (default) — the hot path.  Grouped segment
+      reductions over the whole buffer: events are ordered by region once,
+      dense slabs are laid into an (events x max-extent) grid, and every
+      statistic is computed with a single ``np.add.reduceat`` /
+      ``np.logical_or.reduceat``-style pass across *all* regions at once
+      (distinct source/destination ranks via one ``np.unique`` over encoded
+      (region, rank, peer) codes; per-rank min/max via masked axis
+      reductions).  There is no per-event or per-rank Python anywhere —
+      cost is O(total trace entries) vector work regardless of event count.
     * ``impl="reference"`` — the original dict-of-dicts accounting, kept
-      as the executable specification; it consumes the same events through
-      ``RegionEvent.to_dicts()``.  The parity tests in
+      as the executable specification; it consumes RegionEvent views
+      through ``RegionEvent.to_dicts()``.  The parity tests in
       ``tests/test_profiler_parity.py`` assert equality on randomized
       event streams and on the real kripke/amg/laghos profile paths.
     """
 
     @staticmethod
-    def from_recorder(rec: RegionRecorder, *, name: str = "profile",
-                      replication: int = 1, meta: Optional[dict] = None,
-                      impl: str = "numpy") -> CommProfile:
+    def from_recorder(
+        rec: RegionRecorder,
+        *,
+        name: str = "profile",
+        replication: int = 1,
+        meta: Optional[dict] = None,
+        impl: str = "numpy",
+    ) -> CommProfile:
         """Build a CommProfile.
 
         ``replication``: number of identical communicator groups the axis
@@ -150,130 +177,244 @@ class CommPatternProfiler:
             raise ValueError(f"unknown profiler impl: {impl!r}")
         return fn(rec, name=name, replication=replication, meta=meta)
 
-    # -- vectorized implementation (default) --------------------------------
+    # -- segment-reduced implementation (default) ---------------------------
 
     @staticmethod
-    def _from_recorder_numpy(rec: RegionRecorder, *, name: str,
-                             replication: int, meta: Optional[dict]
-                             ) -> CommProfile:
-        by_region: dict[str, list] = {}
-        for ev in rec.events:
-            by_region.setdefault(ev.region, []).append(ev)
-        # Regions entered but containing no communication (pure-compute
-        # phases like Kripke's "solve") still get a row.
-        for rname in rec.instances:
-            by_region.setdefault(rname, [])
+    def _from_recorder_numpy(
+        rec: RegionRecorder, *, name: str, replication: int, meta: Optional[dict]
+    ) -> CommProfile:
+        buf = getattr(rec, "buffer", None)
+        if buf is None:  # duck-typed recorder carrying a plain event list
+            buf = TraceBuffer()
+            for ev in rec.events:
+                buf.append_event(ev)
 
-        reduced: dict[str, dict] = {}
-        n_ranks = 0
-        for region, events in by_region.items():
-            kinds: dict = {}
-            p2p = []
-            colls = []
-            # R = 1 + highest participating rank, the accumulator extent
-            # (identical to the reference's max-accumulator-key semantics).
-            R = 0
-            for ev in events:
-                kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
-                R = max(R, ev.rank_extent())
-                (colls if ev.is_collective else p2p).append(ev)
-            n_ranks = max(n_ranks, R)
+        E = buf.n_events
+        rids = buf.region_ids
+        # Output region order matches the reference: first-event appearance,
+        # then regions that were entered but recorded no communication
+        # (pure-compute phases like Kripke's "solve" still get a row — the
+        # paper's Fig. 1 compares compute vs communication regions).
+        if E:
+            uniq, first = np.unique(rids, return_index=True)
+            ordered = uniq[np.argsort(first, kind="stable")]
+        else:
+            ordered = np.zeros(0, np.int64)
+        G = len(ordered)
+        region_names = [buf.region_names[int(r)] for r in ordered]
+        seen = set(region_names)
+        extra = [r for r in rec.instances if r not in seen]
 
-            sends = np.zeros(R, np.int64)
-            recvs = np.zeros(R, np.int64)
-            bsent = np.zeros(R, np.int64)
-            brecv = np.zeros(R, np.int64)
-            cbytes = np.zeros(R, np.int64)
-            part = np.zeros(R, bool)
-            cpart = np.zeros(R, bool)
-            largest = 0
-            dest_rows, dest_peers, src_rows, src_peers = [], [], [], []
-            for ev in p2p:
-                k = min(ev.n_ranks, R)
-                sends[:k] += ev.sends[:k]
-                recvs[:k] += ev.recvs[:k]
-                bsent[:k] += ev.bytes_sent[:k]
-                brecv[:k] += ev.bytes_recv[:k]
-                part[:k] |= ev.participants[:k]
-                ranks = np.arange(ev.n_ranks, dtype=np.int64)
-                dest_rows.append(np.repeat(ranks, np.diff(ev.dest_indptr)))
-                dest_peers.append(ev.dest_indices)
-                src_rows.append(np.repeat(ranks, np.diff(ev.src_indptr)))
-                src_peers.append(ev.src_indices)
-                if ev.participants.any():
-                    pv = ev.sends[ev.participants]
-                    pb = ev.bytes_sent[ev.participants]
-                    largest = max(largest,
-                                  int(pb.max()) // max(1, int(pv.max())))
-            for ev in colls:
-                k = min(ev.n_ranks, R)
-                cbytes[:k] += ev.bytes_sent[:k]
-                cpart[:k] |= ev.participants[:k]
+        gid_of_rid = np.zeros(max(len(buf.region_names), 1), np.int64)
+        gid_of_rid[ordered] = np.arange(G)
+        g_of_event = gid_of_rid[rids]
 
-            def distinct_counts(rows_list, peers_list):
-                """|union of peer sets| per rank, via unique pair codes."""
-                rows = np.concatenate(rows_list) if rows_list \
-                    else np.zeros(0, np.int64)
-                peers = np.concatenate(peers_list) if peers_list \
-                    else np.zeros(0, np.int64)
-                if not len(rows):
-                    return np.zeros(R, np.int64)
-                pstride = int(peers.max()) + 1
-                uniq = np.unique(rows * pstride + peers)
-                return np.bincount(uniq // pstride, minlength=R)
+        lens = buf.rank_lens
+        indptr = buf.rank_indptr()
+        Rmax = int(lens.max()) if E else 0
+        # Uniform traces (every event spans the same rank extent — the shape
+        # every real app trace has) reduce by pure reshape, no scatter.
+        uniform = E > 0 and Rmax > 0 and int(lens.min()) == Rmax
+        is_coll = buf.is_collective.astype(bool)
+        p2p_ids = np.flatnonzero(~is_coll)
+        coll_ids = np.flatnonzero(is_coll)
 
-            reduced[region] = dict(
-                sends=sends, recvs=recvs, bsent=bsent, brecv=brecv,
-                cbytes=cbytes,
-                dests=distinct_counts(dest_rows, dest_peers),
-                srcs=distinct_counts(src_rows, src_peers),
-                part=part, cpart=cpart,
-                coll=len(colls), largest=largest, kinds=kinds)
+        # Per-region per-rank grids, (G, Rmax).  Events order once by the
+        # composite (region, is_collective) key; each flat dense column then
+        # reduces with a single ``reduceat`` pass across all regions at
+        # once, and the segment key routes each reduced row to the
+        # point-to-point or the collective accumulator.  Traces that are
+        # already region-contiguous skip the permutation entirely.
+        sends_g = np.zeros((G, Rmax), np.int64)
+        recvs_g = np.zeros((G, Rmax), np.int64)
+        bsent_g = np.zeros((G, Rmax), np.int64)
+        brecv_g = np.zeros((G, Rmax), np.int64)
+        cbytes_g = np.zeros((G, Rmax), np.int64)
+        part_g = np.zeros((G, Rmax), bool)
+        cpart_g = np.zeros((G, Rmax), bool)
+        if E and Rmax:
+            key = g_of_event * 2 + is_coll
+            if np.any(np.diff(key) < 0):
+                order = np.argsort(key, kind="stable")
+                key_sorted = key[order]
+            else:
+                order = None
+                key_sorted = key
+            starts = np.concatenate(([0], np.flatnonzero(np.diff(key_sorted)) + 1))
+            seg_g = key_sorted[starts] // 2
+            seg_coll = (key_sorted[starts] % 2).astype(bool)
 
-        def mm(arr, mask):
-            if not mask.any():
-                return (0, 0)
-            v = arr[mask]
-            return (int(v.min()), int(v.max()))
+            if not uniform:
+                # Ragged slabs scatter into a rectangular grid via one
+                # precomputed (source, destination) index pair.
+                ev = order if order is not None else np.arange(E)
+                lens_e = lens[ev]
+                m = int(lens_e.sum())
+                rows = np.repeat(np.arange(E), lens_e)
+                offs = np.zeros(E, np.int64)
+                np.cumsum(lens_e[:-1], out=offs[1:])
+                within = np.arange(m) - np.repeat(offs, lens_e)
+                src_idx = np.repeat(indptr[ev], lens_e) + within
+                flat_pos = rows * Rmax + within
 
-        prof = CommProfile(name=name, n_ranks=n_ranks * replication,
-                           meta=meta or {})
-        for region, a in reduced.items():
-            part, cpart = a["part"], a["cpart"]
-            stats = RegionStats(
+            def layout(col: np.ndarray) -> np.ndarray:
+                if uniform:
+                    grid = col.reshape(E, Rmax)
+                    return grid[order] if order is not None else grid
+                grid = np.zeros((E, Rmax), col.dtype)
+                grid.reshape(-1)[flat_pos] = col[src_idx]
+                return grid
+
+            ends = np.append(starts[1:], E)
+
+            def reduce_split(col, ufunc, p2p_out, coll_out) -> None:
+                # One contiguous block reduction per (region, kind) segment
+                # — the block count is O(regions); ``ufunc.reduce`` over a
+                # contiguous block vectorizes where generic ``reduceat``
+                # falls back to a scalar inner loop.
+                grid = layout(col)
+                red = np.stack(
+                    [ufunc.reduce(grid[s:e], axis=0) for s, e in zip(starts, ends)]
+                )
+                if p2p_out is not None:
+                    p2p_out[seg_g[~seg_coll]] = red[~seg_coll]
+                if coll_out is not None:
+                    coll_out[seg_g[seg_coll]] = red[seg_coll]
+
+            reduce_split(buf.sends, np.add, sends_g, None)
+            reduce_split(buf.recvs, np.add, recvs_g, None)
+            reduce_split(buf.bytes_sent, np.add, bsent_g, cbytes_g)
+            reduce_split(buf.bytes_recv, np.add, brecv_g, None)
+            reduce_split(buf.participants, np.logical_or, part_g, cpart_g)
+
+        def distinct_grid(
+            rows_col: np.ndarray, peers_col: np.ndarray, lens_col: np.ndarray
+        ) -> np.ndarray:
+            """|union of peer sets| per (region, rank), deduplicated.
+
+            Cross-event duplicates collapse via a boolean presence bitmap
+            over the (region, rank, peer) code space when it is small (one
+            vector scatter + a row sum — no sort), falling back to
+            ``np.unique`` over the encoded pair codes otherwise.
+            """
+            if not E or Rmax == 0 or not len(rows_col):
+                return np.zeros((G, Rmax), np.int64)
+            if len(coll_ids) and int(lens_col[coll_ids].sum()):
+                keep = np.repeat(~is_coll, lens_col)
+                rows = rows_col[keep]
+                peers = peers_col[keep]
+                gp = np.repeat(g_of_event, lens_col)[keep]
+            else:  # canonical traces: collectives contribute no peer pairs
+                rows = rows_col
+                peers = peers_col
+                gp = np.repeat(g_of_event, lens_col)
+            if not len(rows):
+                return np.zeros((G, Rmax), np.int64)
+            stride = np.int64(int(peers.max()) + 1)
+            codes = (gp * Rmax + rows) * stride + peers
+            cells = G * Rmax * int(stride)
+            if cells <= (1 << 26):
+                bitmap = np.zeros(cells, bool)
+                bitmap[codes] = True
+                counts = bitmap.reshape(G * Rmax, int(stride)).sum(axis=1)
+            else:
+                uniq = np.unique(codes)
+                counts = np.bincount(uniq // stride, minlength=G * Rmax)
+            return counts.reshape(G, Rmax).astype(np.int64, copy=False)
+
+        dests_g = distinct_grid(buf.dest_rows, buf.dest_peers, buf.dest_lens)
+        srcs_g = distinct_grid(buf.src_rows, buf.src_peers, buf.src_lens)
+
+        # Per-event scalar columns reduce to per-region scalars directly.
+        if len(coll_ids):
+            coll_counts = np.bincount(g_of_event[coll_ids], minlength=G)
+        else:
+            coll_counts = np.zeros(G, np.int64)
+        largest_r = np.zeros(G, np.int64)
+        if len(p2p_ids):
+            np.maximum.at(largest_r, g_of_event[p2p_ids], buf.largest[p2p_ids])
+        K = len(buf.kind_names)
+        kind_counts = np.zeros((G, K), np.int64)
+        if E and K:
+            kc = np.bincount(g_of_event * K + buf.kind_ids, minlength=G * K)
+            kind_counts = kc.reshape(G, K)
+
+        def mm(grid: np.ndarray, mask: np.ndarray) -> tuple:
+            """(min, max) per region over the participant-masked rank axis."""
+            if G == 0 or Rmax == 0:
+                zero = np.zeros(G, np.int64)
+                return zero, zero
+            any_ = mask.any(axis=1)
+            lo = np.where(mask, grid, _I64_MAX).min(axis=1)
+            hi = np.where(mask, grid, _I64_MIN).max(axis=1)
+            return np.where(any_, lo, 0), np.where(any_, hi, 0)
+
+        sends_mm = mm(sends_g, part_g)
+        recvs_mm = mm(recvs_g, part_g)
+        dests_mm = mm(dests_g, part_g)
+        srcs_mm = mm(srcs_g, part_g)
+        bsent_mm = mm(bsent_g, part_g)
+        brecv_mm = mm(brecv_g, part_g)
+        cbytes_mm = mm(cbytes_g, cpart_g)
+        tot_bsent = bsent_g.sum(axis=1)
+        tot_sends = sends_g.sum(axis=1)
+
+        cols_any = (part_g | cpart_g).any(axis=0)
+        n_ranks = int(np.flatnonzero(cols_any)[-1]) + 1 if cols_any.any() else 0
+
+        prof = CommProfile(name=name, n_ranks=n_ranks * replication, meta=meta or {})
+        for g, region in enumerate(region_names):
+            kinds = {
+                buf.kind_names[int(k)]: int(kind_counts[g, k])
+                for k in np.flatnonzero(kind_counts[g])
+            }
+            prof.regions[region] = RegionStats(
                 region=region,
                 instances=rec.instances.get(region, 1),
-                sends=mm(a["sends"], part),
-                recvs=mm(a["recvs"], part),
-                dest_ranks=mm(a["dests"], part),
-                src_ranks=mm(a["srcs"], part),
-                bytes_sent=mm(a["bsent"], part),
-                bytes_recv=mm(a["brecv"], part),
-                coll=a["coll"],
-                coll_bytes=mm(a["cbytes"], cpart),
-                total_bytes_sent=int(a["bsent"].sum()) * replication,
-                total_sends=int(a["sends"].sum()) * replication,
-                largest_send=a["largest"],
+                sends=(int(sends_mm[0][g]), int(sends_mm[1][g])),
+                recvs=(int(recvs_mm[0][g]), int(recvs_mm[1][g])),
+                dest_ranks=(int(dests_mm[0][g]), int(dests_mm[1][g])),
+                src_ranks=(int(srcs_mm[0][g]), int(srcs_mm[1][g])),
+                bytes_sent=(int(bsent_mm[0][g]), int(bsent_mm[1][g])),
+                bytes_recv=(int(brecv_mm[0][g]), int(brecv_mm[1][g])),
+                coll=int(coll_counts[g]),
+                coll_bytes=(int(cbytes_mm[0][g]), int(cbytes_mm[1][g])),
+                total_bytes_sent=int(tot_bsent[g]) * replication,
+                total_sends=int(tot_sends[g]) * replication,
+                largest_send=int(largest_r[g]),
                 n_ranks=n_ranks * replication,
-                kinds=dict(a["kinds"]),
+                kinds=kinds,
             )
-            prof.regions[region] = stats
+        for region in extra:
+            prof.regions[region] = RegionStats(
+                region=region,
+                instances=rec.instances.get(region, 1),
+                n_ranks=n_ranks * replication,
+            )
         return prof
 
     # -- reference implementation (executable spec, parity-tested) ----------
 
     @staticmethod
-    def _from_recorder_reference(rec: RegionRecorder, *, name: str,
-                                 replication: int, meta: Optional[dict]
-                                 ) -> CommProfile:
+    def _from_recorder_reference(
+        rec: RegionRecorder, *, name: str, replication: int, meta: Optional[dict]
+    ) -> CommProfile:
         per_region: dict[str, dict] = {}
 
         def acc(region: str) -> dict:
             if region not in per_region:
                 per_region[region] = dict(
-                    sends={}, recvs={}, dests={}, srcs={},
-                    bsent={}, brecv={}, cbytes={}, coll=0,
-                    largest=0, kinds={})
+                    sends={},
+                    recvs={},
+                    dests={},
+                    srcs={},
+                    bsent={},
+                    brecv={},
+                    cbytes={},
+                    coll=0,
+                    largest=0,
+                    kinds={},
+                )
             return per_region[region]
 
         for ev in rec.events:
@@ -287,23 +428,18 @@ class CommPatternProfiler:
                 continue
             ranks = set(d["sends_per_rank"]) | set(d["recvs_per_rank"])
             for r in ranks:
-                a["sends"][r] = a["sends"].get(r, 0) \
-                    + d["sends_per_rank"].get(r, 0)
-                a["recvs"][r] = a["recvs"].get(r, 0) \
-                    + d["recvs_per_rank"].get(r, 0)
-                a["dests"].setdefault(r, set()).update(
-                    d["dest_ranks"].get(r, ()))
-                a["srcs"].setdefault(r, set()).update(
-                    d["src_ranks"].get(r, ()))
-                a["bsent"][r] = a["bsent"].get(r, 0) \
-                    + d["bytes_sent"].get(r, 0)
-                a["brecv"][r] = a["brecv"].get(r, 0) \
-                    + d["bytes_recv"].get(r, 0)
+                a["sends"][r] = a["sends"].get(r, 0) + d["sends_per_rank"].get(r, 0)
+                a["recvs"][r] = a["recvs"].get(r, 0) + d["recvs_per_rank"].get(r, 0)
+                a["dests"].setdefault(r, set()).update(d["dest_ranks"].get(r, ()))
+                a["srcs"].setdefault(r, set()).update(d["src_ranks"].get(r, ()))
+                a["bsent"][r] = a["bsent"].get(r, 0) + d["bytes_sent"].get(r, 0)
+                a["brecv"][r] = a["brecv"].get(r, 0) + d["bytes_recv"].get(r, 0)
             if d["sends_per_rank"]:
                 n_msgs = max(1, max(d["sends_per_rank"].values()))
                 # largest single message in this event:
-                per_msg = max(d["bytes_sent"].values()) // n_msgs \
-                    if d["bytes_sent"] else 0
+                per_msg = (
+                    max(d["bytes_sent"].values()) // n_msgs if d["bytes_sent"] else 0
+                )
                 a["largest"] = max(a["largest"], per_msg)
 
         # Regions entered but containing no communication (pure-compute
@@ -318,9 +454,9 @@ class CommPatternProfiler:
                 if a[key]:
                     n_ranks = max(n_ranks, max(a[key]) + 1)
 
-        prof = CommProfile(name=name, n_ranks=n_ranks * replication,
-                           meta=meta or {})
+        prof = CommProfile(name=name, n_ranks=n_ranks * replication, meta=meta or {})
         for region, a in per_region.items():
+
             def mm(d, default=0):
                 if not d:
                     return (default, default)
@@ -347,9 +483,14 @@ class CommPatternProfiler:
         return prof
 
 
-def profile_traced(fn: Callable, *args, name: str = "profile",
-                   replication: int = 1, meta: Optional[dict] = None,
-                   **kwargs) -> CommProfile:
+def profile_traced(
+    fn: Callable,
+    *args,
+    name: str = "profile",
+    replication: int = 1,
+    meta: Optional[dict] = None,
+    **kwargs,
+) -> CommProfile:
     """Trace ``fn`` abstractly and return its communication profile.
 
     Uses ``jax.eval_shape`` so no device computation or allocation happens —
@@ -360,4 +501,5 @@ def profile_traced(fn: Callable, *args, name: str = "profile",
     with recording() as rec:
         jax.eval_shape(fn, *args, **kwargs)
     return CommPatternProfiler.from_recorder(
-        rec, name=name, replication=replication, meta=meta)
+        rec, name=name, replication=replication, meta=meta
+    )

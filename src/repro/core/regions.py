@@ -36,25 +36,50 @@ under is provided by :mod:`repro.core.compat`, which keeps this layer
 working across JAX API churn (0.4.x through >= 0.5) — see compat's module
 docstring for the supported versions and contract.
 
-Profiling data model
---------------------
+Columnar trace store (profiling data model)
+-------------------------------------------
 
-A :class:`RegionEvent` is **array-native**: per-rank structure is stored as
-compact NumPy arrays rather than dict-of-dicts, so recording a collective at
-trace time costs a handful of vector operations regardless of rank count
-(512-rank traces were dominated by per-rank dict construction before this).
+Event capture is **structure-of-arrays**: the recorder owns a
+:class:`TraceBuffer` and the instrumented collectives append straight into
+its columns — no per-event Python object is built on the hot recording
+path.  :class:`RegionEvent` survives as a *view/adapter*: ``buffer.event(i)``
+materializes the i-th event on demand (array slices of the columns), and
+``RegionEvent.from_dicts`` / ``to_dicts`` adapt the legacy dict-of-dicts
+form for the reference profiler and for parity tests.
 
-For an event covering ranks ``[0, n_ranks)``:
+Column schema (all appended with amortized O(1) growth, capacity-doubling
+backing arrays; ``E`` events recorded so far):
 
-* ``sends`` / ``recvs`` — dense ``int64[n_ranks]`` message-count vectors;
-* ``bytes_sent`` / ``bytes_recv`` — dense ``int64[n_ranks]`` byte vectors;
-* ``(dest_indptr, dest_indices)`` / ``(src_indptr, src_indices)`` — CSR
-  encodings of the per-rank destination / source rank *sets*: the peers of
-  rank ``r`` are ``indices[indptr[r]:indptr[r+1]]``, sorted and duplicate-free
-  per row (``indptr`` has length ``n_ranks + 1``);
-* ``participants`` — ``bool[n_ranks]`` mask of ranks taking part in the call.
-  Dense vectors are zero and CSR rows empty outside the mask (the *canonical
-  form*; :meth:`RegionEvent.from_dicts` canonicalizes legacy dicts).
+* Per-event scalar columns, ``[E]``:
+
+  - ``region_ids`` / ``path_ids`` / ``kind_ids`` / ``axis_ids`` — **interned**
+    int32 codes into the buffer's ``region_names`` / ``region_paths`` /
+    ``kind_names`` / ``axis_names`` tables (each distinct string/tuple is
+    stored once, events carry 4-byte ids);
+  - ``is_collective`` — uint8 flag (1 = all-reduce-like, 0 = point-to-point);
+  - ``largest`` — int64 largest single message of the event (bytes), computed
+    from the dense vectors at append time so region-level "largest send" is a
+    pure segment ``max`` later;
+  - ``rank_lens`` — int64 extent of the event's dense per-rank slab;
+  - ``dest_lens`` / ``src_lens`` — int64 number of (rank, peer) pairs the
+    event contributed to the CSR peer-set columns.
+
+* Dense per-rank columns, one slab of ``rank_lens[e]`` entries per event
+  (event-major; slab ``e`` spans ``rank_indptr[e]:rank_indptr[e + 1]``):
+
+  - ``sends`` / ``recvs`` — int64 message counts per rank;
+  - ``bytes_sent`` / ``bytes_recv`` — int64 bytes per rank;
+  - ``participants`` — bool mask of ranks taking part in the call.  Dense
+    values are zero and peer rows empty outside the mask (the *canonical
+    form*; :meth:`RegionEvent.from_dicts` canonicalizes legacy dicts).
+
+* CSR peer-set columns (destination and source sides), one run of
+  ``dest_lens[e]`` / ``src_lens[e]`` pairs per event: ``dest_rows`` holds the
+  owning rank of each pair and ``dest_peers`` the distinct peer, row-major
+  with sorted unique peers per row (ditto ``src_rows`` / ``src_peers``).
+  This is the classic CSR (indptr, indices) encoding with the indptr stored
+  implicitly as per-event pair counts; ``RegionEvent`` views rebuild the
+  explicit ``indptr`` on demand.
 
 For point-to-point events the participants are the ranks of the permutation's
 axis groups; for collective events they are the communicator-group members,
@@ -63,9 +88,11 @@ of a collective is implicit (complete graph within each group) and is not
 materialized.  Byte accounting follows the conventions documented in
 :mod:`repro.core.collectives` (ring-equivalent traffic per rank).
 
-Events are plain ``str``/``int``/ndarray records, so they pickle cheaply —
+The buffer is plain ``str``/``int``/ndarray state, so it pickles cheaply —
 this is what allows the benchpark runner to trace scaling points in a
-*process* pool and ship profiles between workers.
+*process* pool and ship profiles between workers.  The profiler
+(:mod:`repro.core.profiler`) consumes the columns directly with grouped
+segment reductions; it never materializes per-event objects.
 """
 
 from __future__ import annotations
@@ -82,6 +109,9 @@ import numpy as np
 #: communication region (rather than an ordinary profiling scope).
 COMM_REGION_SCOPE_PREFIX = "commr::"
 
+#: Region name attributed to collectives issued outside any comm_region.
+UNANNOTATED_REGION = "<unannotated>"
+
 
 def _empty_csr(n_ranks: int) -> tuple:
     return (np.zeros(n_ranks + 1, np.int64), np.zeros(0, np.int64))
@@ -89,31 +119,470 @@ def _empty_csr(n_ranks: int) -> tuple:
 
 def _csr_rows_to_dicts(indptr, indices, ranks) -> dict:
     """CSR rows -> {rank: set(peers)} for the given rank ids."""
-    return {int(r): {int(p) for p in indices[indptr[r]:indptr[r + 1]]}
-            for r in ranks}
+    return {
+        int(r): {int(p) for p in indices[indptr[r] : indptr[r + 1]]} for r in ranks
+    }
+
+
+def _rows_to_csr(rows: np.ndarray, indices: np.ndarray, n: int) -> tuple:
+    """(row, peer) pair columns -> explicit CSR (indptr, indices)."""
+    indptr = np.zeros(n + 1, np.int64)
+    if len(rows):
+        np.cumsum(np.bincount(rows, minlength=n), out=indptr[1:])
+    return indptr, np.asarray(indices, np.int64)
+
+
+def p2p_structure(pairs, n: int) -> tuple:
+    """Dense count vectors + distinct peer-pair columns from (src, dst) pairs.
+
+    ``pairs`` is any ``(P, 2)``-shaped sequence/array of global rank pairs.
+    Returns ``(sends, recvs, dest_rows, dest_peers, src_rows, src_peers)``:
+    int64 message-count vectors of length ``n`` plus the duplicate-free
+    (rank, peer) pair columns of the destination/source peer *sets*, row-major
+    with sorted unique peers per row (one ``np.unique`` over encoded pair
+    codes per side — no Python loop over ranks or pairs).
+    """
+    if not isinstance(pairs, np.ndarray):
+        pairs = list(pairs)
+    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    src, dst = pairs[:, 0], pairs[:, 1]
+    sends = np.zeros(n, np.int64)
+    recvs = np.zeros(n, np.int64)
+    np.add.at(sends, src, 1)
+    np.add.at(recvs, dst, 1)
+    if len(src):
+        stride = np.int64(max(n, 1))
+        dcodes = np.unique(src * stride + dst)
+        scodes = np.unique(dst * stride + src)
+        return (
+            sends,
+            recvs,
+            dcodes // stride,
+            dcodes % stride,
+            scodes // stride,
+            scodes % stride,
+        )
+    empty = np.zeros(0, np.int64)
+    return sends, recvs, empty, empty, empty.copy(), empty.copy()
+
+
+class _Column:
+    """Append-only 1-D array with amortized-growth (capacity-doubling) backing."""
+
+    __slots__ = ("_data", "_n")
+
+    def __init__(self, dtype, capacity: int = 64):
+        self._data = np.zeros(capacity, dtype)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _grow_to(self, need: int) -> None:
+        if need > self._data.size:
+            grown = np.zeros(max(need, self._data.size * 2), self._data.dtype)
+            grown[: self._n] = self._data[: self._n]
+            self._data = grown
+
+    def push(self, value) -> None:
+        self._grow_to(self._n + 1)
+        self._data[self._n] = value
+        self._n += 1
+
+    def extend(self, values: np.ndarray) -> None:
+        values = np.asarray(values, self._data.dtype)
+        need = self._n + values.size
+        self._grow_to(need)
+        self._data[self._n : need] = values
+        self._n = need
+
+    def view(self) -> np.ndarray:
+        """The live prefix (no copy; treat as read-only)."""
+        return self._data[: self._n]
+
+    # compact pickles: drop the unused growth capacity
+    def __getstate__(self) -> tuple:
+        return (self._data[: self._n].copy(),)
+
+    def __setstate__(self, state) -> None:
+        (data,) = state
+        self._data = data
+        self._n = data.size
+
+
+class TraceBuffer:
+    """Columnar (structure-of-arrays) store of recorded collective calls.
+
+    See the module docstring for the column schema.  One buffer belongs to
+    one :class:`RegionRecorder`; the instrumented collectives append via
+    :func:`record_p2p` / :func:`record_collective`, and the profiler reduces
+    the columns directly.  ``event(i)`` / ``to_events()`` materialize
+    :class:`RegionEvent` views for adapters and the reference profiler.
+    """
+
+    def __init__(self) -> None:
+        # Interning tables: value <-> small int id.
+        self.region_names: list[str] = []
+        self.region_paths: list[tuple] = []
+        self.kind_names: list[str] = []
+        self.axis_names: list[str] = []
+        self._region_ids: dict[str, int] = {}
+        self._path_ids: dict[tuple, int] = {}
+        self._kind_ids: dict[str, int] = {}
+        self._axis_ids: dict[str, int] = {}
+        # Per-event scalar columns.
+        self._region = _Column(np.int32)
+        self._path = _Column(np.int32)
+        self._kind = _Column(np.int32)
+        self._axis = _Column(np.int32)
+        self._is_coll = _Column(np.uint8)
+        self._largest = _Column(np.int64)
+        self._rank_len = _Column(np.int64)
+        self._dest_len = _Column(np.int64)
+        self._src_len = _Column(np.int64)
+        # Dense per-rank columns (event-major slabs of rank_lens[e] entries).
+        self._sends = _Column(np.int64)
+        self._recvs = _Column(np.int64)
+        self._bytes_sent = _Column(np.int64)
+        self._bytes_recv = _Column(np.int64)
+        self._participants = _Column(bool)
+        # CSR peer-set pair columns (runs of dest_lens[e] / src_lens[e]).
+        self._dest_rows = _Column(np.int64)
+        self._dest_peers = _Column(np.int64)
+        self._src_rows = _Column(np.int64)
+        self._src_peers = _Column(np.int64)
+
+    # -- interning ----------------------------------------------------------
+
+    @staticmethod
+    def _intern(value, table: list, ids: dict) -> int:
+        code = ids.get(value)
+        if code is None:
+            code = len(table)
+            table.append(value)
+            ids[value] = code
+        return code
+
+    def region_id(self, name: str) -> int:
+        return self._intern(name, self.region_names, self._region_ids)
+
+    # -- column views (live prefixes, read-only) ----------------------------
+
+    @property
+    def n_events(self) -> int:
+        return len(self._region)
+
+    @property
+    def region_ids(self) -> np.ndarray:
+        return self._region.view()
+
+    @property
+    def path_ids(self) -> np.ndarray:
+        return self._path.view()
+
+    @property
+    def kind_ids(self) -> np.ndarray:
+        return self._kind.view()
+
+    @property
+    def axis_ids(self) -> np.ndarray:
+        return self._axis.view()
+
+    @property
+    def is_collective(self) -> np.ndarray:
+        return self._is_coll.view()
+
+    @property
+    def largest(self) -> np.ndarray:
+        return self._largest.view()
+
+    @property
+    def rank_lens(self) -> np.ndarray:
+        return self._rank_len.view()
+
+    @property
+    def dest_lens(self) -> np.ndarray:
+        return self._dest_len.view()
+
+    @property
+    def src_lens(self) -> np.ndarray:
+        return self._src_len.view()
+
+    @property
+    def sends(self) -> np.ndarray:
+        return self._sends.view()
+
+    @property
+    def recvs(self) -> np.ndarray:
+        return self._recvs.view()
+
+    @property
+    def bytes_sent(self) -> np.ndarray:
+        return self._bytes_sent.view()
+
+    @property
+    def bytes_recv(self) -> np.ndarray:
+        return self._bytes_recv.view()
+
+    @property
+    def participants(self) -> np.ndarray:
+        return self._participants.view()
+
+    @property
+    def dest_rows(self) -> np.ndarray:
+        return self._dest_rows.view()
+
+    @property
+    def dest_peers(self) -> np.ndarray:
+        return self._dest_peers.view()
+
+    @property
+    def src_rows(self) -> np.ndarray:
+        return self._src_rows.view()
+
+    @property
+    def src_peers(self) -> np.ndarray:
+        return self._src_peers.view()
+
+    def rank_indptr(self) -> np.ndarray:
+        """int64[E + 1] slab boundaries of the dense per-rank columns."""
+        return self._indptr(self.rank_lens)
+
+    def dest_indptr(self) -> np.ndarray:
+        return self._indptr(self.dest_lens)
+
+    def src_indptr(self) -> np.ndarray:
+        return self._indptr(self.src_lens)
+
+    @staticmethod
+    def _indptr(lens: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=out[1:])
+        return out
+
+    # -- appends (the hot recording path; no per-rank/per-event Python) -----
+
+    def _append_row(
+        self,
+        *,
+        region: str,
+        region_path: tuple,
+        kind: str,
+        axis_name: str,
+        is_collective: int,
+        largest: int,
+        sends: np.ndarray,
+        recvs: np.ndarray,
+        bytes_sent: np.ndarray,
+        bytes_recv: np.ndarray,
+        participants: np.ndarray,
+        dest_rows: np.ndarray,
+        dest_peers: np.ndarray,
+        src_rows: np.ndarray,
+        src_peers: np.ndarray,
+    ) -> None:
+        self._region.push(self.region_id(region))
+        self._path.push(
+            self._intern(tuple(region_path), self.region_paths, self._path_ids)
+        )
+        self._kind.push(self._intern(kind, self.kind_names, self._kind_ids))
+        self._axis.push(self._intern(str(axis_name), self.axis_names, self._axis_ids))
+        self._is_coll.push(1 if is_collective else 0)
+        self._largest.push(largest)
+        self._rank_len.push(len(sends))
+        self._dest_len.push(len(dest_rows))
+        self._src_len.push(len(src_rows))
+        self._sends.extend(sends)
+        self._recvs.extend(recvs)
+        self._bytes_sent.extend(bytes_sent)
+        self._bytes_recv.extend(bytes_recv)
+        self._participants.extend(participants)
+        self._dest_rows.extend(dest_rows)
+        self._dest_peers.extend(dest_peers)
+        self._src_rows.extend(src_rows)
+        self._src_peers.extend(src_peers)
+
+    def append_p2p(
+        self,
+        *,
+        region: str,
+        region_path: tuple,
+        kind: str,
+        axis_name: str,
+        pairs,
+        n: int,
+        nbytes: int,
+    ) -> None:
+        """Append a point-to-point event from global (src, dst) pairs.
+
+        Every pair moves ``nbytes``; all ``n`` ranks participate (matching the
+        SPMD execution model: the permute runs on every rank, including ranks
+        with no active pair this call).
+        """
+        sends, recvs, drows, dpeers, srows, speers = p2p_structure(pairs, n)
+        bytes_sent = sends * nbytes
+        largest = int(bytes_sent.max()) // max(1, int(sends.max())) if n else 0
+        self._append_row(
+            region=region,
+            region_path=region_path,
+            kind=kind,
+            axis_name=axis_name,
+            is_collective=0,
+            largest=largest,
+            sends=sends,
+            recvs=recvs,
+            bytes_sent=bytes_sent,
+            bytes_recv=recvs * nbytes,
+            participants=np.ones(n, bool),
+            dest_rows=drows,
+            dest_peers=dpeers,
+            src_rows=srows,
+            src_peers=speers,
+        )
+
+    def append_collective(
+        self,
+        *,
+        region: str,
+        region_path: tuple,
+        kind: str,
+        axis_name: str,
+        groups: np.ndarray,
+        n: int,
+        per_rank_bytes: int,
+    ) -> None:
+        """Append a collective event over communicator ``groups``.
+
+        ``groups`` is the ``(n_groups, group_size)`` global-rank array from
+        ``topology.groups`` (or ``arange(n)[None, :]`` for a flat axis); each
+        member rank sends/receives ``per_rank_bytes`` ring-equivalent bytes.
+        """
+        members = np.asarray(groups, np.int64).reshape(-1)
+        bytes_vec = np.zeros(n, np.int64)
+        bytes_vec[members] = per_rank_bytes
+        participants = np.zeros(n, bool)
+        participants[members] = True
+        zero = np.zeros(n, np.int64)
+        empty = np.zeros(0, np.int64)
+        self._append_row(
+            region=region,
+            region_path=region_path,
+            kind=kind,
+            axis_name=axis_name,
+            is_collective=1,
+            largest=0,
+            sends=zero,
+            recvs=zero,
+            bytes_sent=bytes_vec,
+            bytes_recv=bytes_vec,
+            participants=participants,
+            dest_rows=empty,
+            dest_peers=empty,
+            src_rows=empty,
+            src_peers=empty,
+        )
+
+    def append_event(self, ev: "RegionEvent") -> None:
+        """Adapter: append an already-materialized :class:`RegionEvent`."""
+        largest = 0
+        if not ev.is_collective and ev.participants.any():
+            pv = ev.sends[ev.participants]
+            pb = ev.bytes_sent[ev.participants]
+            largest = int(pb.max()) // max(1, int(pv.max()))
+        ranks = np.arange(ev.n_ranks, dtype=np.int64)
+        self._append_row(
+            region=ev.region,
+            region_path=tuple(ev.region_path),
+            kind=ev.kind,
+            axis_name=ev.axis_name,
+            is_collective=int(ev.is_collective),
+            largest=largest,
+            sends=ev.sends,
+            recvs=ev.recvs,
+            bytes_sent=ev.bytes_sent,
+            bytes_recv=ev.bytes_recv,
+            participants=ev.participants,
+            dest_rows=np.repeat(ranks, np.diff(ev.dest_indptr)),
+            dest_peers=ev.dest_indices,
+            src_rows=np.repeat(ranks, np.diff(ev.src_indptr)),
+            src_peers=ev.src_indices,
+        )
+
+    # -- views --------------------------------------------------------------
+
+    def event(self, i: int) -> "RegionEvent":
+        """Materialize the i-th event as a :class:`RegionEvent` view."""
+        return self._event(
+            int(i), self.rank_indptr(), self.dest_indptr(), self.src_indptr()
+        )
+
+    def _event(
+        self, e: int, rptr: np.ndarray, dptr: np.ndarray, sptr: np.ndarray
+    ) -> "RegionEvent":
+        if not 0 <= e < self.n_events:
+            raise IndexError(e)
+        n = int(self.rank_lens[e])
+        slab = slice(rptr[e], rptr[e + 1])
+        d = slice(dptr[e], dptr[e + 1])
+        s = slice(sptr[e], sptr[e + 1])
+        dest_indptr, dest_indices = _rows_to_csr(
+            self.dest_rows[d], self.dest_peers[d], n
+        )
+        src_indptr, src_indices = _rows_to_csr(self.src_rows[s], self.src_peers[s], n)
+        return RegionEvent(
+            region=self.region_names[self.region_ids[e]],
+            region_path=self.region_paths[self.path_ids[e]],
+            kind=self.kind_names[self.kind_ids[e]],
+            n_ranks=n,
+            sends=self.sends[slab],
+            recvs=self.recvs[slab],
+            bytes_sent=self.bytes_sent[slab],
+            bytes_recv=self.bytes_recv[slab],
+            dest_indptr=dest_indptr,
+            dest_indices=dest_indices,
+            src_indptr=src_indptr,
+            src_indices=src_indices,
+            participants=self.participants[slab],
+            is_collective=int(self.is_collective[e]),
+            axis_name=self.axis_names[self.axis_ids[e]],
+        )
+
+    def to_events(self) -> list:
+        """All events as :class:`RegionEvent` views (adapter path only).
+
+        The three slab indptrs are computed once and shared across views,
+        so materializing E views is O(total column entries), not O(E^2).
+        """
+        rptr = self.rank_indptr()
+        dptr = self.dest_indptr()
+        sptr = self.src_indptr()
+        return [self._event(i, rptr, dptr, sptr) for i in range(self.n_events)]
 
 
 @dataclass
 class RegionEvent:
     """One instrumented collective call observed inside a region.
 
-    All fields describe the *static* structure of the collective, per
-    participating rank (paper Table I is derived from these), in the
-    array-native canonical form described in the module docstring.
+    A *view/adapter* over the columnar :class:`TraceBuffer` store (see the
+    module docstring): all fields describe the static structure of the
+    collective, per participating rank (paper Table I is derived from these),
+    in the array-native canonical form.  The default profiling path never
+    materializes these — they exist for the reference profiler, the legacy
+    dict adapters, and tests.
     """
 
-    region: str                 # innermost region name ("sweep_comm")
-    region_path: tuple          # full nesting path ("main", "sweep_comm")
-    kind: str                   # ppermute | psum | all_gather | all_to_all | ...
-    n_ranks: int                # extent of the dense per-rank vectors
+    region: str  # innermost region name ("sweep_comm")
+    region_path: tuple  # full nesting path ("main", "sweep_comm")
+    kind: str  # ppermute | psum | all_gather | all_to_all | ...
+    n_ranks: int  # extent of the dense per-rank vectors
     # Dense per-rank vectors, int64[n_ranks].
-    sends: np.ndarray           # messages sent by each rank in this call
-    recvs: np.ndarray           # messages received by each rank
-    bytes_sent: np.ndarray      # bytes sent by each rank
-    bytes_recv: np.ndarray      # bytes received by each rank
+    sends: np.ndarray  # messages sent by each rank in this call
+    recvs: np.ndarray  # messages received by each rank
+    bytes_sent: np.ndarray  # bytes sent by each rank
+    bytes_recv: np.ndarray  # bytes received by each rank
     # CSR per-rank peer sets: peers of rank r are indices[indptr[r]:indptr[r+1]].
-    dest_indptr: np.ndarray     # int64[n_ranks + 1]
-    dest_indices: np.ndarray    # int64[nnz], sorted unique per row
+    dest_indptr: np.ndarray  # int64[n_ranks + 1]
+    dest_indices: np.ndarray  # int64[nnz], sorted unique per row
     src_indptr: np.ndarray
     src_indices: np.ndarray
     # Ranks taking part in this call, bool[n_ranks]; dense vectors are zero
@@ -127,12 +596,22 @@ class RegionEvent:
     # -- adapters -----------------------------------------------------------
 
     @classmethod
-    def from_dicts(cls, *, region: str, region_path: tuple, kind: str,
-                   sends_per_rank: Mapping, recvs_per_rank: Mapping,
-                   dest_ranks: Mapping, src_ranks: Mapping,
-                   bytes_sent: Mapping, bytes_recv: Mapping,
-                   is_collective: int = 0, axis_name: str = "",
-                   n_ranks: Optional[int] = None) -> "RegionEvent":
+    def from_dicts(
+        cls,
+        *,
+        region: str,
+        region_path: tuple,
+        kind: str,
+        sends_per_rank: Mapping,
+        recvs_per_rank: Mapping,
+        dest_ranks: Mapping,
+        src_ranks: Mapping,
+        bytes_sent: Mapping,
+        bytes_recv: Mapping,
+        is_collective: int = 0,
+        axis_name: str = "",
+        n_ranks: Optional[int] = None,
+    ) -> "RegionEvent":
         """Build an array-native event from the legacy dict-of-dicts fields.
 
         Canonicalization matches the original dict accounting exactly:
@@ -144,8 +623,9 @@ class RegionEvent:
         if is_collective:
             part = sorted(int(r) for r in bytes_sent)
         else:
-            part = sorted({int(r) for r in sends_per_rank}
-                          | {int(r) for r in recvs_per_rank})
+            part = sorted(
+                {int(r) for r in sends_per_rank} | {int(r) for r in recvs_per_rank}
+            )
         peer_max = -1
         for d in (dest_ranks, src_ranks):
             for r in part:
@@ -175,24 +655,42 @@ class RegionEvent:
             dptr, dind = _empty_csr(n)
             sptr, sind = _empty_csr(n)
             zero = np.zeros(n, np.int64)
-            return cls(region=region, region_path=region_path, kind=kind,
-                       n_ranks=n, sends=zero, recvs=zero.copy(),
-                       bytes_sent=dense(bytes_sent),
-                       bytes_recv=dense(bytes_recv),
-                       dest_indptr=dptr, dest_indices=dind,
-                       src_indptr=sptr, src_indices=sind,
-                       participants=participants,
-                       is_collective=1, axis_name=axis_name)
+            return cls(
+                region=region,
+                region_path=region_path,
+                kind=kind,
+                n_ranks=n,
+                sends=zero,
+                recvs=zero.copy(),
+                bytes_sent=dense(bytes_sent),
+                bytes_recv=dense(bytes_recv),
+                dest_indptr=dptr,
+                dest_indices=dind,
+                src_indptr=sptr,
+                src_indices=sind,
+                participants=participants,
+                is_collective=1,
+                axis_name=axis_name,
+            )
         dptr, dind = csr(dest_ranks)
         sptr, sind = csr(src_ranks)
-        return cls(region=region, region_path=region_path, kind=kind,
-                   n_ranks=n, sends=dense(sends_per_rank),
-                   recvs=dense(recvs_per_rank),
-                   bytes_sent=dense(bytes_sent), bytes_recv=dense(bytes_recv),
-                   dest_indptr=dptr, dest_indices=dind,
-                   src_indptr=sptr, src_indices=sind,
-                   participants=participants,
-                   is_collective=0, axis_name=axis_name)
+        return cls(
+            region=region,
+            region_path=region_path,
+            kind=kind,
+            n_ranks=n,
+            sends=dense(sends_per_rank),
+            recvs=dense(recvs_per_rank),
+            bytes_sent=dense(bytes_sent),
+            bytes_recv=dense(bytes_recv),
+            dest_indptr=dptr,
+            dest_indices=dind,
+            src_indptr=sptr,
+            src_indices=sind,
+            participants=participants,
+            is_collective=0,
+            axis_name=axis_name,
+        )
 
     def to_dicts(self) -> dict:
         """Legacy dict-of-dicts view (canonical form: participants only).
@@ -203,19 +701,21 @@ class RegionEvent:
         ranks = np.flatnonzero(self.participants)
         if self.is_collective:
             return dict(
-                sends_per_rank={}, recvs_per_rank={},
-                dest_ranks={}, src_ranks={},
+                sends_per_rank={},
+                recvs_per_rank={},
+                dest_ranks={},
+                src_ranks={},
                 bytes_sent={int(r): int(self.bytes_sent[r]) for r in ranks},
-                bytes_recv={int(r): int(self.bytes_recv[r]) for r in ranks})
+                bytes_recv={int(r): int(self.bytes_recv[r]) for r in ranks},
+            )
         return dict(
             sends_per_rank={int(r): int(self.sends[r]) for r in ranks},
             recvs_per_rank={int(r): int(self.recvs[r]) for r in ranks},
-            dest_ranks=_csr_rows_to_dicts(self.dest_indptr,
-                                          self.dest_indices, ranks),
-            src_ranks=_csr_rows_to_dicts(self.src_indptr,
-                                         self.src_indices, ranks),
+            dest_ranks=_csr_rows_to_dicts(self.dest_indptr, self.dest_indices, ranks),
+            src_ranks=_csr_rows_to_dicts(self.src_indptr, self.src_indices, ranks),
             bytes_sent={int(r): int(self.bytes_sent[r]) for r in ranks},
-            bytes_recv={int(r): int(self.bytes_recv[r]) for r in ranks})
+            bytes_recv={int(r): int(self.bytes_recv[r]) for r in ranks},
+        )
 
     def rank_extent(self) -> int:
         """1 + highest participating rank (0 when nobody participates)."""
@@ -224,16 +724,27 @@ class RegionEvent:
 
 
 class RegionRecorder:
-    """Collects RegionEvents for one profiling session (thread-local stack)."""
+    """Owns the columnar TraceBuffer for one profiling session.
+
+    The instrumented collectives append straight into :attr:`buffer`;
+    :attr:`events` materializes RegionEvent views on demand (adapter path —
+    the default profiler reduces the buffer columns directly).
+    """
 
     def __init__(self) -> None:
-        self.events: list[RegionEvent] = []
+        self.buffer = TraceBuffer()
         # Number of times each region was entered (instance count — the paper
         # distinguishes pattern *instances* across iterations).
         self.instances: dict[str, int] = {}
 
+    @property
+    def events(self) -> list:
+        """RegionEvent views of the buffer (built on access; adapters only)."""
+        return self.buffer.to_events()
+
     def record(self, event: RegionEvent) -> None:
-        self.events.append(event)
+        """Adapter: append a materialized event into the columnar buffer."""
+        self.buffer.append_event(event)
 
     def enter(self, name: str) -> None:
         self.instances[name] = self.instances.get(name, 0) + 1
@@ -301,7 +812,43 @@ def recording() -> Iterator[RegionRecorder]:
 
 
 def record_event(event: RegionEvent) -> None:
-    """Called by instrumented collectives."""
+    """Adapter entry point: append a materialized event (tests, tools)."""
     rec = _STATE.recorder
     if rec is not None:
-        rec.record(event)
+        rec.buffer.append_event(event)
+
+
+def record_p2p(kind: str, axis_name, pairs, n: int, nbytes: int) -> None:
+    """Hot path for instrumented point-to-point patterns.
+
+    Appends straight into the active recorder's columnar buffer — no
+    RegionEvent object is constructed.
+    """
+    rec = _STATE.recorder
+    if rec is not None:
+        rec.buffer.append_p2p(
+            region=current_region() or UNANNOTATED_REGION,
+            region_path=current_region_path(),
+            kind=kind,
+            axis_name=str(axis_name),
+            pairs=pairs,
+            n=n,
+            nbytes=nbytes,
+        )
+
+
+def record_collective(
+    kind: str, axis_name, groups: np.ndarray, n: int, per_rank_bytes: int
+) -> None:
+    """Hot path for instrumented collectives (columnar append, no objects)."""
+    rec = _STATE.recorder
+    if rec is not None:
+        rec.buffer.append_collective(
+            region=current_region() or UNANNOTATED_REGION,
+            region_path=current_region_path(),
+            kind=kind,
+            axis_name=str(axis_name),
+            groups=groups,
+            n=n,
+            per_rank_bytes=per_rank_bytes,
+        )

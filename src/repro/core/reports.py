@@ -2,7 +2,10 @@
 
 Each function maps one paper artifact onto the profiling data collected by
 this framework (since the container is CPU-only, "time" columns use roofline
-seconds derived from the dry-run cost model — see DESIGN.md §2).
+seconds derived from the dry-run cost model — see DESIGN.md §2).  All
+tabular aggregation routes through the NumPy-backed
+:class:`repro.core.thicket.Frame`; every emitter tolerates empty profile
+sets and profiles with disjoint region name sets (sparse scaling sweeps).
 """
 
 from __future__ import annotations
@@ -30,34 +33,62 @@ def table1_schema() -> str:
     return "\n".join(out)
 
 
-def table4_metrics(profiles: Iterable[CommProfile],
-                   region: Optional[str] = None) -> str:
+def table4_metrics(
+    profiles: Iterable[CommProfile], region: Optional[str] = None
+) -> str:
     """Paper Table IV — total bytes sent / sends / largest / average send.
 
-    One row per (application, n_ranks); aggregates over all regions unless
-    ``region`` is given.
+    One row per (profile name, n_ranks), in input order; aggregates over all
+    regions unless ``region`` is given.  Profiles lacking the requested
+    region (disjoint region sets across a sweep) contribute an explicit zero
+    row rather than silently falling back to all their regions; an empty
+    profile set yields just the header.
     """
-    out = ["| Application - Processes | Total Bytes Sent | Total Sends | "
-           "Largest Send (bytes) | Average Send Size (bytes) |",
-           "|---|---|---|---|---|"]
+    profiles = list(profiles)
+    frame = Frame.from_profiles(profiles)
+    if region is not None:
+        frame = frame.where(region=region)
+    by_key: dict = {}
+    if len(frame):
+        agg = frame.agg(
+            ("profile", "n_ranks"),
+            {
+                "tb": ("total_bytes_sent", sum),
+                "ts": ("total_sends", sum),
+                "lg": ("largest_send", max),
+            },
+        )
+        by_key = {(r["profile"], r["n_ranks"]): r for r in agg}
+    out = [
+        "| Application - Processes | Total Bytes Sent | Total Sends | "
+        "Largest Send (bytes) | Average Send Size (bytes) |",
+        "|---|---|---|---|---|",
+    ]
+    seen = set()
     for p in profiles:
-        regions = ([p.regions[region]] if region and region in p.regions
-                   else list(p.regions.values()))
-        tb = sum(r.total_bytes_sent for r in regions)
-        ts = sum(r.total_sends for r in regions)
-        lg = max((r.largest_send for r in regions), default=0)
+        key = (p.name, p.n_ranks)
+        if key in seen:
+            continue
+        seen.add(key)
+        r = by_key.get(key)
+        tb = r["tb"] if r else 0
+        ts = r["ts"] if r else 0
+        lg = r["lg"] if r else 0
         avg = tb / ts if ts else 0.0
-        out.append(f"| {p.name} - {p.n_ranks} | {tb:.3e} | {ts:.3e} | "
-                   f"{lg} | {avg:.3e} |")
+        out.append(
+            f"| {p.name} - {p.n_ranks} | {tb:.3e} | {ts:.3e} | {lg} | {avg:.3e} |"
+        )
     return "\n".join(out)
 
 
 def region_stats_table(profile: CommProfile) -> str:
     """Full Table-I-schema dump for every region in one profile."""
-    out = ["| Region | Inst | Sends (mn/mx) | Recvs (mn/mx) | "
-           "Dst ranks | Src ranks | Bytes sent (mn/mx) | "
-           "Bytes recv (mn/mx) | Coll | Coll bytes (mx) |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+    out = [
+        "| Region | Inst | Sends (mn/mx) | Recvs (mn/mx) | "
+        "Dst ranks | Src ranks | Bytes sent (mn/mx) | "
+        "Bytes recv (mn/mx) | Coll | Coll bytes (mx) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
     for name in sorted(profile.regions):
         s = profile.regions[name]
         out.append(
@@ -67,34 +98,40 @@ def region_stats_table(profile: CommProfile) -> str:
             f"{s.src_ranks[0]}/{s.src_ranks[1]} | "
             f"{s.bytes_sent[0]}/{s.bytes_sent[1]} | "
             f"{s.bytes_recv[0]}/{s.bytes_recv[1]} | "
-            f"{s.coll} | {s.coll_bytes[1]} |")
+            f"{s.coll} | {s.coll_bytes[1]} |"
+        )
     return "\n".join(out)
 
 
-def scaling_report(profiles: Iterable[CommProfile], region: str,
-                   metric: str = "total_bytes_sent",
-                   title: str = "") -> str:
+def scaling_report(
+    profiles: Iterable[CommProfile],
+    region: str,
+    metric: str = "total_bytes_sent",
+    title: str = "",
+) -> str:
     """Fig 1/4-style per-region scaling table (metric vs process count)."""
-    frame = Frame.from_profiles(profiles).where(region=region) \
-        .select("n_ranks", metric).sort("n_ranks")
+    frame = Frame.from_profiles(profiles).where(region=region)
+    frame = frame.select("n_ranks", metric).sort("n_ranks")
     hdr = f"### {title or region}: {metric} vs processes\n"
     return hdr + frame.to_markdown()
 
 
-def per_level_report(profiles: Iterable[CommProfile],
-                     level_prefix: str = "mg_level_",
-                     metric: str = "bytes_sent_max") -> str:
+def per_level_report(
+    profiles: Iterable[CommProfile],
+    level_prefix: str = "mg_level_",
+    metric: str = "bytes_sent_max",
+) -> str:
     """Fig 2/3-style AMG per-multigrid-level breakdown.
 
     Regions named ``<prefix><k>`` become columns; rows are process counts.
+    Sparse sweeps (levels present at only some scales) pivot to empty cells.
     """
+    skip = len(level_prefix)
     frame = Frame.from_profiles(profiles)
-    frame = frame.filter(lambda r: str(r["region"]).startswith(level_prefix))
-    frame = frame.with_column(
-        "level", lambda r: int(str(r["region"])[len(level_prefix):]))
+    frame = frame.filter(lambda r: str(r.get("region", "")).startswith(level_prefix))
+    frame = frame.with_column("level", lambda r: int(str(r["region"])[skip:]))
     piv = frame.pivot("n_ranks", "level", metric)
-    return (f"### {metric} per multigrid level (rows = processes)\n"
-            + piv.to_markdown())
+    return f"### {metric} per multigrid level (rows = processes)\n" + piv.to_markdown()
 
 
 def bandwidth_msgrate_report(profiles: Iterable[CommProfile]) -> str:
@@ -103,19 +140,24 @@ def bandwidth_msgrate_report(profiles: Iterable[CommProfile]) -> str:
     Each profile must carry ``meta['seconds']`` (roofline step seconds).
     """
     frame = Frame.from_profiles(profiles)
-    frame = frame.agg(("profile", "n_ranks", "meta_app", "meta_seconds"), {
-        "total_bytes_sent": ("total_bytes_sent", sum),
-        "total_sends": ("total_sends", sum),
-    })
+    frame = frame.agg(
+        ("profile", "n_ranks", "meta_app", "meta_seconds"),
+        {
+            "total_bytes_sent": ("total_bytes_sent", sum),
+            "total_sends": ("total_sends", sum),
+        },
+    )
     frame = add_rate_metrics(frame)
     frame = frame.sort("meta_app", "n_ranks")
-    return ("### Per-process bandwidth (B/s) and message rate (msg/s)\n"
-            + frame.to_markdown(cols=["meta_app", "n_ranks",
-                                      "bandwidth_Bps", "msg_rate_per_s"]))
+    md = frame.to_markdown(
+        cols=["meta_app", "n_ranks", "bandwidth_Bps", "msg_rate_per_s"]
+    )
+    return "### Per-process bandwidth (B/s) and message rate (msg/s)\n" + md
 
 
-def ascii_scaling_plot(xs: list, ys: list, width: int = 60, height: int = 12,
-                       title: str = "") -> str:
+def ascii_scaling_plot(
+    xs: list, ys: list, width: int = 60, height: int = 12, title: str = ""
+) -> str:
     """Terminal-friendly scaling plot (the paper's figures, ASCII edition)."""
     if not xs or not ys or max(ys) <= 0:
         return f"{title}: (no data)"
@@ -125,13 +167,14 @@ def ascii_scaling_plot(xs: list, ys: list, width: int = 60, height: int = 12,
     for level in range(height, -1, -1):
         thresh = lo + span * level / height
         line = "".join(
-            "*" if y >= thresh and (level == 0 or y < lo + span * (level + 1)
-                                    / height) else " "
-            for y in _resample(xs, ys, width))
+            "*"
+            if y >= thresh and (level == 0 or y < lo + span * (level + 1) / height)
+            else " "
+            for y in _resample(xs, ys, width)
+        )
         rows.append(f"{thresh:10.3e} |{line}")
     axis = " " * 11 + "+" + "-" * width
-    xlab = (" " * 12 + f"{xs[0]:<10}" + " " * max(0, width - 20)
-            + f"{xs[-1]:>10}")
+    xlab = " " * 12 + f"{xs[0]:<10}" + " " * max(0, width - 20) + f"{xs[-1]:>10}"
     return "\n".join([f"## {title}"] + rows + [axis, xlab])
 
 

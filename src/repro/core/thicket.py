@@ -2,10 +2,35 @@
 
 The paper pairs Caliper with Thicket (a pandas-based toolkit) to aggregate
 profiles from scaling studies into tables/plots (Figs. 1-6, Table IV).  This
-module is a dependency-free tabular equivalent: a :class:`Frame` of rows
-(dicts) with group-by / pivot / derived-metric helpers, plus loaders that
-ingest :class:`repro.core.profiler.CommProfile` JSON files and the dry-run
-roofline records.
+module is a dependency-free tabular equivalent: a :class:`Frame` with
+group-by / pivot / derived-metric helpers, plus loaders that ingest
+:class:`repro.core.profiler.CommProfile` JSON files and the dry-run roofline
+records.
+
+Columnar data model
+-------------------
+
+A Frame is **NumPy-backed**: rows are stored as a column dict
+``{name: ndarray}`` plus a per-column boolean *presence mask* (rows of a
+sparse scaling sweep legitimately lack columns — a profile without a region
+contributes no cell).  Column dtypes are inferred once at construction:
+
+* all-integer columns -> ``int64`` (absent cells hold 0 under a False mask),
+* numeric mixes       -> ``float64`` (absent cells hold NaN),
+* booleans            -> ``bool``,
+* everything else     -> ``object`` (absent cells hold None).
+
+Relational ops (``where`` / ``select`` / ``sort`` / ``concat`` / row
+slicing) are whole-column NumPy operations — no per-row dict is built.
+Row-oriented accessors (``rows``, iteration, ``group_by``, predicate
+``filter``, ``with_column``) materialize plain-Python dict views on demand
+(NumPy scalars are converted back to Python scalars, so downstream code and
+JSON serialization see exactly what the old list-of-dicts Frame produced).
+Column order is first-appearance order, matching the legacy behavior.
+
+``Frame.concat`` stitches frames from independent runs into one table for
+cross-run scaling studies; columns are unioned and dtypes re-unified, so
+sweeps with disjoint meta/region columns concatenate without loss.
 
 Derived metrics mirror the paper's §V analysis:
   bandwidth   bytes sent per second per process (Fig. 5/6 left axes)
@@ -21,14 +46,77 @@ import json
 import os
 from typing import Callable, Iterable, Optional
 
+import numpy as np
+
 from repro.core.profiler import CommProfile
 
 
+def _infer_column(values: list, present: np.ndarray) -> np.ndarray:
+    """Pick a compact dtype for a column; fall back to object."""
+    live = [v for v, p in zip(values, present) if p]
+    if live and all(isinstance(v, bool) for v in live):
+        return np.array([bool(v) if p else False for v, p in zip(values, present)])
+    if live and all(
+        isinstance(v, (int, np.integer)) and not isinstance(v, bool) for v in live
+    ):
+        try:
+            return np.array(
+                [int(v) if p else 0 for v, p in zip(values, present)], np.int64
+            )
+        except OverflowError:
+            pass
+    elif live and all(
+        isinstance(v, (int, float, np.integer, np.floating))
+        and not isinstance(v, bool)
+        for v in live
+    ):
+        return np.array(
+            [float(v) if p else np.nan for v, p in zip(values, present)], np.float64
+        )
+    out = np.empty(len(values), object)
+    for i, (v, p) in enumerate(zip(values, present)):
+        out[i] = v if p else None
+    return out
+
+
+def _pyval(v):
+    """NumPy scalar -> plain Python scalar (rows look like the legacy dicts)."""
+    return v.item() if isinstance(v, np.generic) else v
+
+
 class Frame:
-    """A minimal dataframe: list of dict rows + column utilities."""
+    """A minimal dataframe: NumPy column dict + relational utilities.
+
+    Public API is row-compatible with the legacy list-of-dicts Frame:
+    ``Frame(rows)`` construction, ``.rows`` / iteration yielding dicts, and
+    every helper below.  Storage and the bulk ops are columnar (see the
+    module docstring for the data model).
+    """
 
     def __init__(self, rows: Optional[Iterable[dict]] = None):
-        self.rows: list[dict] = [dict(r) for r in (rows or [])]
+        rows = [dict(r) for r in (rows or [])]
+        self._n = len(rows)
+        self._cols: dict[str, np.ndarray] = {}
+        self._mask: dict[str, np.ndarray] = {}
+        order: list[str] = []
+        for r in rows:
+            for k in r:
+                if k not in self._mask:
+                    self._mask[k] = None  # placeholder to keep order
+                    order.append(k)
+        for k in order:
+            present = np.fromiter((k in r for r in rows), bool, count=self._n)
+            values = [r.get(k) for r in rows]
+            self._cols[k] = _infer_column(values, present)
+            self._mask[k] = present
+
+    @classmethod
+    def _from_columns(cls, cols: dict, mask: dict, n: int) -> "Frame":
+        out = cls.__new__(cls)
+        out._n = n
+        out._cols = cols
+        out._mask = mask
+        return out
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -42,8 +130,10 @@ class Frame:
                     "n_ranks": p.n_ranks,
                     "region": rname,
                     "instances": st.instances,
-                    "sends_min": st.sends[0], "sends_max": st.sends[1],
-                    "recvs_min": st.recvs[0], "recvs_max": st.recvs[1],
+                    "sends_min": st.sends[0],
+                    "sends_max": st.sends[1],
+                    "recvs_min": st.recvs[0],
+                    "recvs_max": st.recvs[1],
                     "dest_ranks_min": st.dest_ranks[0],
                     "dest_ranks_max": st.dest_ranks[1],
                     "src_ranks_min": st.src_ranks[0],
@@ -65,8 +155,10 @@ class Frame:
 
     @staticmethod
     def from_profile_dir(path: str, pattern: str = "*.json") -> "Frame":
-        profs = [CommProfile.load(p)
-                 for p in sorted(glob.glob(os.path.join(path, pattern)))]
+        profs = [
+            CommProfile.load(p)
+            for p in sorted(glob.glob(os.path.join(path, pattern)))
+        ]
         return Frame.from_profiles(profs)
 
     @staticmethod
@@ -75,32 +167,168 @@ class Frame:
         with open(path) as f:
             return Frame(json.load(f))
 
+    @staticmethod
+    def concat(frames: Iterable["Frame"]) -> "Frame":
+        """Stack frames row-wise (cross-run scaling studies).
+
+        Columns are unioned in first-appearance order; rows from frames
+        lacking a column get absent cells (mask False), and dtypes are
+        re-unified (falling back to object on mixes).
+        """
+        frames = list(frames)
+        n = sum(f._n for f in frames)
+        order: list[str] = []
+        for f in frames:
+            for k in f._cols:
+                if k not in order:
+                    order.append(k)
+        cols: dict[str, np.ndarray] = {}
+        mask: dict[str, np.ndarray] = {}
+        for k in order:
+            dtypes = {f._cols[k].dtype for f in frames if k in f._cols}
+            masks = [
+                f._mask[k] if k in f._mask else np.zeros(f._n, bool) for f in frames
+            ]
+            if len(dtypes) == 1:
+                dtype = next(iter(dtypes))
+                fill = np.zeros(1, dtype)[0] if dtype != object else None
+                pieces = [
+                    f._cols[k] if k in f._cols else np.full(f._n, fill, dtype)
+                    for f in frames
+                ]
+                cols[k] = np.concatenate(pieces) if pieces else np.zeros(0, dtype)
+            else:
+                pieces = []
+                for f in frames:
+                    if k in f._cols:
+                        obj = f._cols[k].astype(object)
+                        obj[~f._mask[k]] = None
+                    else:
+                        obj = np.full(f._n, None, object)
+                    pieces.append(obj)
+                cols[k] = np.concatenate(pieces) if pieces else np.zeros(0, object)
+            mask[k] = np.concatenate(masks) if masks else np.zeros(0, bool)
+        return Frame._from_columns(cols, mask, n)
+
+    # -- row views ---------------------------------------------------------
+    def _row(self, i: int) -> dict:
+        out = {}
+        for k, col in self._cols.items():
+            if self._mask[k][i]:
+                out[k] = _pyval(col[i])
+        return out
+
+    @property
+    def rows(self) -> list:
+        """All rows as plain dicts (absent cells omitted, Python scalars)."""
+        return [self._row(i) for i in range(self._n)]
+
+    def _take(self, idx) -> "Frame":
+        idx = np.asarray(idx)
+        cols = {k: c[idx] for k, c in self._cols.items()}
+        mask = {k: m[idx] for k, m in self._mask.items()}
+        n = int(idx.sum()) if idx.dtype == bool else len(idx)
+        return Frame._from_columns(cols, mask, n)
+
     # -- relational ops ---------------------------------------------------
     def filter(self, pred: Callable[[dict], bool]) -> "Frame":
-        return Frame(r for r in self.rows if pred(r))
+        keep = np.fromiter(
+            (bool(pred(self._row(i))) for i in range(self._n)), bool, count=self._n
+        )
+        return self._take(keep)
 
     def where(self, **eq) -> "Frame":
-        return self.filter(lambda r: all(r.get(k) == v for k, v in eq.items()))
+        """Vectorized equality filter (``r.get(k) == v`` per column)."""
+        keep = np.ones(self._n, bool)
+        for k, v in eq.items():
+            if k not in self._cols:
+                if v is not None:
+                    keep[:] = False
+                continue  # missing key reads as None, so v=None matches all
+            col, m = self._cols[k], self._mask[k]
+            if v is None:
+                if col.dtype == object:
+                    hit = np.fromiter((x is None for x in col), bool, count=self._n)
+                else:
+                    hit = np.zeros(self._n, bool)
+                keep &= hit | ~m
+                continue
+            try:
+                hit = np.asarray(col == v)
+                if hit.shape != (self._n,):
+                    hit = np.full(self._n, bool(hit))
+            except Exception:
+                hit = np.fromiter(
+                    (col[i] == v for i in range(self._n)), bool, count=self._n
+                )
+            keep &= m & hit
+        return self._take(keep)
 
     def with_column(self, name: str, fn: Callable[[dict], object]) -> "Frame":
-        out = []
-        for r in self.rows:
-            r = dict(r)
-            r[name] = fn(r)
-            out.append(r)
-        return Frame(out)
+        values = [fn(self._row(i)) for i in range(self._n)]
+        present = np.ones(self._n, bool)
+        cols = dict(self._cols)
+        mask = dict(self._mask)
+        cols[name] = _infer_column(values, present)
+        mask[name] = present
+        return Frame._from_columns(cols, mask, self._n)
 
     def select(self, *cols: str) -> "Frame":
-        return Frame({c: r.get(c) for c in cols} for r in self.rows)
+        """Project to ``cols``; missing cells surface as explicit None."""
+        out_cols: dict[str, np.ndarray] = {}
+        out_mask: dict[str, np.ndarray] = {}
+        for c in cols:
+            if c in self._cols and self._mask[c].all():
+                out_cols[c] = self._cols[c]
+            elif c in self._cols:
+                obj = self._cols[c].astype(object)
+                obj[~self._mask[c]] = None
+                out_cols[c] = obj
+            else:
+                out_cols[c] = np.full(self._n, None, object)
+            out_mask[c] = np.ones(self._n, bool)
+        return Frame._from_columns(out_cols, out_mask, self._n)
 
     def sort(self, *cols: str, reverse: bool = False) -> "Frame":
-        return Frame(sorted(self.rows,
-                            key=lambda r: tuple(r.get(c) for c in cols),
-                            reverse=reverse))
+        """Stable sort by column tuple (legacy ``r.get`` key semantics).
 
-    def group_by(self, *keys: str):
+        Numeric fully-present keys sort via ``np.lexsort``; otherwise a
+        Python stable sort runs, falling back to type-grouped keys when the
+        values are not mutually comparable (e.g. None mixed with str in a
+        sparse sweep).
+        """
+        if not cols or self._n <= 1:
+            return self._take(np.arange(self._n))
+        fast = not reverse and all(
+            c in self._cols
+            and self._mask[c].all()
+            and self._cols[c].dtype.kind in "biuf"
+            for c in cols
+        )
+        if fast:
+            idx = np.lexsort(tuple(self._cols[c] for c in reversed(cols)))
+            return self._take(idx)
+        keys = [self.column(c) for c in cols]
+        try:
+            idx = sorted(
+                range(self._n),
+                key=lambda i: tuple(k[i] for k in keys),
+                reverse=reverse,
+            )
+        except TypeError:  # mixed/missing types: group by type name first
+            idx = sorted(
+                range(self._n),
+                key=lambda i: tuple(
+                    (k[i] is not None, type(k[i]).__name__, str(k[i])) for k in keys
+                ),
+                reverse=reverse,
+            )
+        return self._take(np.asarray(idx))
+
+    def group_by(self, *keys: str) -> dict:
         groups: dict[tuple, list] = {}
-        for r in self.rows:
+        for i in range(self._n):
+            r = self._row(i)
             groups.setdefault(tuple(r.get(k) for k in keys), []).append(r)
         return groups
 
@@ -115,34 +343,52 @@ class Frame:
         return Frame(out)
 
     def pivot(self, index: str, column: str, value: str) -> "Frame":
-        """Rows keyed by `index`, one output column per distinct `column`."""
+        """Rows keyed by `index`, one output column per distinct `column`.
+
+        Sparse (index, column) combinations simply leave the cell absent —
+        ``to_markdown``/``to_csv`` render them empty and row dicts omit the
+        key, so disjoint region sets across profiles pivot cleanly.
+        """
         idx: dict[object, dict] = {}
-        for r in self.rows:
+        for i in range(self._n):
+            r = self._row(i)
             row = idx.setdefault(r.get(index), {index: r.get(index)})
             row[str(r.get(column))] = r.get(value)
         return Frame(idx[k] for k in sorted(idx, key=lambda x: (str(type(x)), x)))
 
     # -- access -----------------------------------------------------------
     def column(self, name: str) -> list:
-        return [r.get(name) for r in self.rows]
+        """Column values as a Python list (absent cells -> None)."""
+        if name not in self._cols:
+            return [None] * self._n
+        col, m = self._cols[name], self._mask[name]
+        return [_pyval(col[i]) if m[i] else None for i in range(self._n)]
+
+    def column_array(self, name: str) -> tuple:
+        """NumPy view of a column: ``(values, presence_mask)``."""
+        if name not in self._cols:
+            return np.full(self._n, None, object), np.zeros(self._n, bool)
+        return self._cols[name], self._mask[name]
 
     def columns(self) -> list:
-        cols: list[str] = []
-        for r in self.rows:
-            for c in r:
-                if c not in cols:
-                    cols.append(c)
-        return cols
+        return list(self._cols)
 
     def __len__(self) -> int:
-        return len(self.rows)
+        return self._n
 
     def __iter__(self):
-        return iter(self.rows)
+        return (self._row(i) for i in range(self._n))
 
     # -- output -----------------------------------------------------------
-    def to_markdown(self, cols: Optional[list] = None,
-                    floatfmt: str = "{:.4g}") -> str:
+    def _cell(self, i: int, c: str):
+        """Cell value with ``r.get(c, "")`` semantics ("" when absent)."""
+        if c not in self._cols or not self._mask[c][i]:
+            return ""
+        return _pyval(self._cols[c][i])
+
+    def to_markdown(
+        self, cols: Optional[list] = None, floatfmt: str = "{:.4g}"
+    ) -> str:
         cols = cols or self.columns()
 
         def fmt(v):
@@ -150,18 +396,19 @@ class Frame:
                 return floatfmt.format(v)
             return str(v)
 
-        lines = ["| " + " | ".join(cols) + " |",
-                 "|" + "|".join("---" for _ in cols) + "|"]
-        for r in self.rows:
-            lines.append("| " + " | ".join(fmt(r.get(c, "")) for c in cols)
-                         + " |")
+        lines = [
+            "| " + " | ".join(cols) + " |",
+            "|" + "|".join("---" for _ in cols) + "|",
+        ]
+        for i in range(self._n):
+            lines.append("| " + " | ".join(fmt(self._cell(i, c)) for c in cols) + " |")
         return "\n".join(lines)
 
     def to_csv(self, cols: Optional[list] = None) -> str:
         cols = cols or self.columns()
         lines = [",".join(cols)]
-        for r in self.rows:
-            lines.append(",".join(str(r.get(c, "")) for c in cols))
+        for i in range(self._n):
+            lines.append(",".join(str(self._cell(i, c)) for c in cols))
         return "\n".join(lines)
 
     def to_json(self) -> str:
@@ -172,12 +419,14 @@ class Frame:
 # Paper-style derived metrics (§V bandwidth / message-rate analysis)
 # ---------------------------------------------------------------------------
 
+
 def add_rate_metrics(frame: Frame, seconds_col: str = "meta_seconds") -> Frame:
     """Add per-process bandwidth (B/s) and message rate (msgs/s).
 
     ``seconds_col`` must hold the per-step time estimate (roofline seconds
     from the dry-run, or measured seconds where available).
     """
+
     def bw(r):
         s, n = r.get(seconds_col) or 0.0, max(1, r.get("n_ranks", 1))
         return (r.get("total_bytes_sent", 0) / n / s) if s else 0.0
@@ -186,13 +435,10 @@ def add_rate_metrics(frame: Frame, seconds_col: str = "meta_seconds") -> Frame:
         s, n = r.get(seconds_col) or 0.0, max(1, r.get("n_ranks", 1))
         return (r.get("total_sends", 0) / n / s) if s else 0.0
 
-    return frame.with_column("bandwidth_Bps", bw) \
-                .with_column("msg_rate_per_s", rate)
+    frame = frame.with_column("bandwidth_Bps", bw)
+    return frame.with_column("msg_rate_per_s", rate)
 
 
-def scaling_table(frame: Frame, region: str,
-                  value: str = "total_bytes_sent") -> Frame:
+def scaling_table(frame: Frame, region: str, value: str = "total_bytes_sent") -> Frame:
     """Paper Fig-style table: value vs n_ranks for one region."""
-    return frame.where(region=region) \
-                .select("n_ranks", value) \
-                .sort("n_ranks")
+    return frame.where(region=region).select("n_ranks", value).sort("n_ranks")

@@ -1,0 +1,115 @@
+"""Shared cache manifest: exact per-directory accounting across processes."""
+
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.benchpark.runner import CacheManifest, ProfileCache, run_experiment
+from repro.benchpark.spec import ExperimentSpec, ScalePoint
+from repro.core.profiler import CommProfile
+
+
+def _spec():
+    return ExperimentSpec(
+        name="kripke-manifest-test",
+        app="kripke",
+        scaling="weak",
+        points=(
+            ScalePoint((1, 1, 2)),
+            ScalePoint((1, 2, 2)),
+            ScalePoint((2, 2, 2)),
+        ),
+        app_params=dict(nx=4, ny=4, nz=4, n_octants=1),
+    )
+
+
+def _mini_profile(name):
+    return CommProfile(name=name, n_ranks=2, meta={"pad": "x" * 512})
+
+
+def test_manifest_reads_zero_when_absent(tmp_path):
+    m = CacheManifest(str(tmp_path / "nonexistent"))
+    assert m.read() == {"hits": 0, "misses": 0, "puts": 0, "evictions": 0}
+
+
+def test_manifest_bump_accumulates_across_handles(tmp_path):
+    root = str(tmp_path / "cache")
+    CacheManifest(root).bump(hits=2, misses=1)
+    CacheManifest(root).bump(hits=1, puts=4)
+    assert CacheManifest(root).read() == {
+        "hits": 3,
+        "misses": 1,
+        "puts": 4,
+        "evictions": 0,
+    }
+
+
+def test_manifest_concurrent_bumps_are_exact(tmp_path):
+    """No lost updates: 64 concurrent handles each add exactly one hit."""
+    root = str(tmp_path / "cache")
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        list(ex.map(lambda _: CacheManifest(root).bump(hits=1), range(64)))
+    assert CacheManifest(root).read()["hits"] == 64
+
+
+def test_stale_lock_is_broken_and_bump_proceeds(tmp_path):
+    """A lock abandoned by a crashed holder must not deadlock bump()."""
+    root = str(tmp_path / "cache")
+    m = CacheManifest(root)
+    os.makedirs(root, exist_ok=True)
+    with open(m._lock_path, "w"):
+        pass
+    old = time.time() - 60
+    os.utime(m._lock_path, (old, old))
+    m.bump(hits=1)
+    assert m.read()["hits"] == 1
+    assert not os.path.exists(m._lock_path)
+
+
+def test_cache_ops_update_manifest(tmp_path):
+    cache = ProfileCache(str(tmp_path / "cache"))
+    assert cache.get("absent") is None
+    cache.put("k", _mini_profile("p"))
+    assert cache.get("k") is not None
+    m = cache.manifest.read()
+    assert m == {"hits": 1, "misses": 1, "puts": 1, "evictions": 0}
+
+
+def test_manifest_file_never_evicted(tmp_path):
+    root = str(tmp_path / "cache")
+    entry = len(_mini_profile("p").to_json())
+    cache = ProfileCache(root, max_bytes=int(entry * 1.5))
+    cache.put("k0", _mini_profile("p0"))
+    cache.put("k1", _mini_profile("p1"))
+    cache._evict()
+    m = cache.manifest.read()
+    assert m["puts"] == 2 and m["evictions"] >= 1
+    assert cache.get("k1") is not None  # newest entry survives
+
+
+def test_process_sweep_twice_reports_exact_accounting(tmp_path):
+    """A process-pool sweep run twice: the shared manifest must account for
+    every worker's traffic exactly — 3 misses + 3 puts cold, 3 hits warm."""
+    root = str(tmp_path / "cache")
+    cache = ProfileCache(root)
+    run_experiment(
+        _spec(), verbose=False, cache=cache, executor="process", max_workers=3
+    )
+    m1 = cache.manifest.read()
+    assert m1 == {"hits": 0, "misses": 3, "puts": 3, "evictions": 0}
+
+    cache2 = ProfileCache(root)
+    run_experiment(
+        _spec(), verbose=False, cache=cache2, executor="process", max_workers=3
+    )
+    m2 = cache2.manifest.read()
+    assert m2 == {"hits": 3, "misses": 3, "puts": 3, "evictions": 0}
+
+
+def test_run_experiment_emits_aggregated_frame_csv(tmp_path):
+    path = tmp_path / "sweep" / "frame.csv"
+    profs = run_experiment(_spec(), verbose=False, frame_csv=str(path))
+    lines = path.read_text().splitlines()
+    header = lines[0].split(",")
+    assert "region" in header and "total_bytes_sent" in header
+    assert len(lines) == 1 + sum(len(p.regions) for p in profs)

@@ -1,15 +1,18 @@
-"""Vectorized vs reference profiler accounting must be bit-identical.
+"""Segment-reduced vs reference profiler accounting must be bit-identical.
 
-Events are array-native (dense per-rank vectors + CSR peer sets, see
-``repro.core.regions``).  The NumPy aggregation path (``impl="numpy"``, the
-default) is parity-tested against the original dict-of-dicts accounting
-(``impl="reference"``, consuming the same events through
-``RegionEvent.to_dicts()``): full RegionStats equality — sends/recvs/
-dest_ranks/src_ranks, bytes min/max, coll, coll_bytes, totals,
-largest_send, kinds, n_ranks — on randomized event streams (built from
-legacy dicts via ``RegionEvent.from_dicts``) and on the real
-kripke/amg/laghos profile paths.  ``from_dicts``/``to_dicts`` round-trips
-are asserted on all three app paths as well.
+Events live in the recorder's columnar ``TraceBuffer`` (interned region
+ids + dense per-rank slabs + CSR peer-pair columns, see
+``repro.core.regions``).  The grouped-segment-reduction path
+(``impl="numpy"``, the default — zero per-event Python) is parity-tested
+against the original dict-of-dicts accounting (``impl="reference"``,
+consuming RegionEvent views through ``RegionEvent.to_dicts()``): full
+RegionStats equality — sends/recvs/dest_ranks/src_ranks, bytes min/max,
+coll, coll_bytes, totals, largest_send, kinds, n_ranks — on randomized
+event streams (built from legacy dicts via ``RegionEvent.from_dicts``;
+their per-event rank extents vary, so the ragged buffer layout is
+exercised alongside the apps' uniform one) and on the real
+kripke/amg/laghos profile paths.  ``from_dicts``/``to_dicts`` round-trips,
+buffer column/view consistency, and buffer pickling are asserted as well.
 """
 
 import random
@@ -210,3 +213,87 @@ def test_parity_laghos_profile_path():
     from repro.apps.laghos import LaghosConfig, profile
     _check_app(profile, LaghosConfig(decomp=Decomp3D(2, 2, 1),
                                      nx=32, ny=32, n_steps=1))
+
+
+# ---------------------------------------------------------------------------
+# Columnar TraceBuffer path (the default from_recorder input)
+# ---------------------------------------------------------------------------
+
+def test_trace_buffer_columns_consistent():
+    rec = _random_recorder(20260729)
+    buf = rec.buffer
+    assert buf.n_events == len(rec.events) > 0
+    assert len(buf.region_ids) == len(buf.kind_ids) == buf.n_events
+    assert len(buf.sends) == int(buf.rank_lens.sum())
+    assert len(buf.dest_rows) == int(buf.dest_lens.sum())
+    assert len(buf.src_peers) == int(buf.src_lens.sum())
+    # interning: one table entry per distinct name, ids in range
+    assert len(set(buf.region_names)) == len(buf.region_names)
+    assert len(set(buf.kind_names)) == len(buf.kind_names)
+    assert int(buf.region_ids.max()) < len(buf.region_names)
+    # event views slice the columns back exactly
+    for i, ev in enumerate(rec.events):
+        assert ev.n_ranks == int(buf.rank_lens[i])
+        assert int(ev.dest_indptr[-1]) == int(buf.dest_lens[i])
+        assert int(ev.src_indptr[-1]) == int(buf.src_lens[i])
+
+
+def test_columnar_append_matches_materialized_events():
+    """record_p2p/record_collective (the no-object hot path) must yield the
+    same buffer state and profile as recording equivalent RegionEvents."""
+    from repro.core import collectives as coll
+
+    pairs = [(0, 1), (1, 2), (0, 1), (2, 0)]
+    groups = np.arange(4, dtype=np.int64)[None, :]
+    rec_cols = RegionRecorder()
+    rec_cols.enter("r")
+    rec_cols.buffer.append_p2p(region="r", region_path=("r",),
+                               kind="ppermute", axis_name="x",
+                               pairs=pairs, n=4, nbytes=64)
+    rec_cols.buffer.append_collective(region="r", region_path=("r",),
+                                     kind="psum", axis_name="x",
+                                     groups=groups, n=4, per_rank_bytes=96)
+    rec_evts = RegionRecorder()
+    rec_evts.enter("r")
+    for ev in (coll.build_p2p_event("ppermute", "x", pairs, 4, 64),
+               coll.build_collective_event("psum", "x", groups, 4, 96)):
+        ev.region, ev.region_path = "r", ("r",)   # built outside comm_region
+        rec_evts.record(ev)
+    a = CommPatternProfiler.from_recorder(rec_cols, name="p")
+    b = CommPatternProfiler.from_recorder(rec_evts, name="p")
+    _assert_profiles_equal(a, b)
+    ref = CommPatternProfiler.from_recorder(rec_cols, name="p",
+                                            impl="reference")
+    _assert_profiles_equal(a, ref)
+    for ea, eb in zip(rec_cols.events, rec_evts.events):
+        np.testing.assert_array_equal(ea.sends, eb.sends)
+        np.testing.assert_array_equal(ea.bytes_recv, eb.bytes_recv)
+        np.testing.assert_array_equal(ea.dest_indptr, eb.dest_indptr)
+        np.testing.assert_array_equal(ea.dest_indices, eb.dest_indices)
+        np.testing.assert_array_equal(ea.participants, eb.participants)
+        assert ea.region == eb.region and ea.kind == eb.kind
+
+
+def test_duck_typed_recorder_without_buffer():
+    """from_recorder accepts a bare .events/.instances carrier (it builds a
+    TraceBuffer on the fly) and matches the native columnar recorder."""
+    rec = _random_recorder(77)
+
+    class Duck:
+        def __init__(self, events, instances):
+            self.events = events
+            self.instances = instances
+
+    duck = Duck(rec.events, dict(rec.instances))
+    a = CommPatternProfiler.from_recorder(rec, name="p")
+    b = CommPatternProfiler.from_recorder(duck, name="p")
+    _assert_profiles_equal(a, b)
+
+
+def test_buffer_pickles_between_processes():
+    import pickle
+    rec = _random_recorder(11)
+    clone = pickle.loads(pickle.dumps(rec))
+    a = CommPatternProfiler.from_recorder(rec, name="p")
+    b = CommPatternProfiler.from_recorder(clone, name="p")
+    _assert_profiles_equal(a, b)

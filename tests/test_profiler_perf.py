@@ -1,0 +1,205 @@
+"""Profiling-time micro-benchmark: grouped segment reductions must beat the
+per-event aggregation loop at paper-scale trace sizes (512 ranks, thousands
+of events per region).
+
+``_per_event_profile`` is the pre-columnar ``impl="numpy"`` implementation
+(one Python iteration per RegionEvent, accumulating into per-region dense
+vectors), preserved here as the timing baseline and as an extra output
+cross-check — the segment-reduced profiler must match it bit-identically.
+
+Marked ``perf`` and skipped unless ``REPRO_PERF_TESTS`` is set — timing
+assertions are environment-sensitive and must not gate the tier-1 suite.
+The CI benchmark-smoke job runs them with the flag enabled.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.profiler import CommPatternProfiler, CommProfile, RegionStats
+from repro.core.regions import RegionRecorder
+from repro.core.topology import Topology
+
+pytestmark = [
+    pytest.mark.perf,
+    pytest.mark.skipif(
+        not os.environ.get("REPRO_PERF_TESTS"),
+        reason="perf micro-benchmarks run only with REPRO_PERF_TESTS=1",
+    ),
+]
+
+N_RANKS = 512
+EVENTS_PER_REGION = 2048
+REGIONS = ("sweep_comm", "halo_exchange")
+
+
+def _recorder() -> RegionRecorder:
+    """512-rank trace, 2 regions x 2048 events (1/8 collectives)."""
+    topo = Topology((("x", 8), ("y", 8), ("z", 8)))
+    perm = [(i, i + 1) for i in range(7)]
+    pairs = topo.expand_pairs("x", perm)  # 448 global pairs
+    groups = topo.groups(("x", "y", "z"))
+    rec = RegionRecorder()
+    for region in REGIONS:
+        rec.enter(region)
+        for i in range(EVENTS_PER_REGION):
+            if i % 8 == 7:
+                rec.buffer.append_collective(
+                    region=region,
+                    region_path=(region,),
+                    kind="psum",
+                    axis_name="xyz",
+                    groups=groups,
+                    n=N_RANKS,
+                    per_rank_bytes=8192,
+                )
+            else:
+                rec.buffer.append_p2p(
+                    region=region,
+                    region_path=(region,),
+                    kind="ppermute",
+                    axis_name="x",
+                    pairs=pairs,
+                    n=N_RANKS,
+                    nbytes=4096,
+                )
+    return rec
+
+
+def _per_event_profile(events, instances, *, name="p") -> CommProfile:
+    """The pre-columnar aggregation: one Python loop iteration per event."""
+    by_region: dict = {}
+    for ev in events:
+        by_region.setdefault(ev.region, []).append(ev)
+    for rname in instances:
+        by_region.setdefault(rname, [])
+
+    reduced: dict = {}
+    n_ranks = 0
+    for region, evs in by_region.items():
+        kinds: dict = {}
+        p2p = []
+        colls = []
+        R = 0
+        for ev in evs:
+            kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
+            R = max(R, ev.rank_extent())
+            (colls if ev.is_collective else p2p).append(ev)
+        n_ranks = max(n_ranks, R)
+
+        sends = np.zeros(R, np.int64)
+        recvs = np.zeros(R, np.int64)
+        bsent = np.zeros(R, np.int64)
+        brecv = np.zeros(R, np.int64)
+        cbytes = np.zeros(R, np.int64)
+        part = np.zeros(R, bool)
+        cpart = np.zeros(R, bool)
+        largest = 0
+        dest_rows, dest_peers, src_rows, src_peers = [], [], [], []
+        for ev in p2p:
+            k = min(ev.n_ranks, R)
+            sends[:k] += ev.sends[:k]
+            recvs[:k] += ev.recvs[:k]
+            bsent[:k] += ev.bytes_sent[:k]
+            brecv[:k] += ev.bytes_recv[:k]
+            part[:k] |= ev.participants[:k]
+            ranks = np.arange(ev.n_ranks, dtype=np.int64)
+            dest_rows.append(np.repeat(ranks, np.diff(ev.dest_indptr)))
+            dest_peers.append(ev.dest_indices)
+            src_rows.append(np.repeat(ranks, np.diff(ev.src_indptr)))
+            src_peers.append(ev.src_indices)
+            if ev.participants.any():
+                pv = ev.sends[ev.participants]
+                pb = ev.bytes_sent[ev.participants]
+                largest = max(largest, int(pb.max()) // max(1, int(pv.max())))
+        for ev in colls:
+            k = min(ev.n_ranks, R)
+            cbytes[:k] += ev.bytes_sent[:k]
+            cpart[:k] |= ev.participants[:k]
+
+        def distinct_counts(rows_list, peers_list):
+            rows = np.concatenate(rows_list) if rows_list else np.zeros(0, np.int64)
+            peers = np.concatenate(peers_list) if peers_list else np.zeros(0, np.int64)
+            if not len(rows):
+                return np.zeros(R, np.int64)
+            pstride = int(peers.max()) + 1
+            uniq = np.unique(rows * pstride + peers)
+            return np.bincount(uniq // pstride, minlength=R)
+
+        reduced[region] = dict(
+            sends=sends,
+            recvs=recvs,
+            bsent=bsent,
+            brecv=brecv,
+            cbytes=cbytes,
+            dests=distinct_counts(dest_rows, dest_peers),
+            srcs=distinct_counts(src_rows, src_peers),
+            part=part,
+            cpart=cpart,
+            coll=len(colls),
+            largest=largest,
+            kinds=kinds,
+        )
+
+    def mm(arr, mask):
+        if not mask.any():
+            return (0, 0)
+        v = arr[mask]
+        return (int(v.min()), int(v.max()))
+
+    prof = CommProfile(name=name, n_ranks=n_ranks)
+    for region, a in reduced.items():
+        part, cpart = a["part"], a["cpart"]
+        prof.regions[region] = RegionStats(
+            region=region,
+            instances=instances.get(region, 1),
+            sends=mm(a["sends"], part),
+            recvs=mm(a["recvs"], part),
+            dest_ranks=mm(a["dests"], part),
+            src_ranks=mm(a["srcs"], part),
+            bytes_sent=mm(a["bsent"], part),
+            bytes_recv=mm(a["brecv"], part),
+            coll=a["coll"],
+            coll_bytes=mm(a["cbytes"], cpart),
+            total_bytes_sent=int(a["bsent"].sum()),
+            total_sends=int(a["sends"].sum()),
+            largest_send=a["largest"],
+            n_ranks=n_ranks,
+            kinds=dict(a["kinds"]),
+        )
+    return prof
+
+
+def _best_of(fn, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def test_segment_reduction_beats_per_event_loop_at_512_ranks():
+    rec = _recorder()
+    n_events = rec.buffer.n_events
+    assert n_events == len(REGIONS) * EVENTS_PER_REGION
+    # materialize the RegionEvent views once, outside the timed region, so
+    # the baseline times pure aggregation (its input was a list of events)
+    events = rec.events
+
+    seg_t = _best_of(lambda: CommPatternProfiler.from_recorder(rec, name="p"))
+    old_t = _best_of(lambda: _per_event_profile(events, rec.instances))
+    print(
+        f"\n  {n_events} events @ {N_RANKS} ranks "
+        f"({EVENTS_PER_REGION} per region): "
+        f"segment-reduced {seg_t * 1e3:.1f} ms vs per-event loop "
+        f"{old_t * 1e3:.1f} ms ({old_t / seg_t:.1f}x)"
+    )
+    assert seg_t < old_t, (seg_t, old_t)
+
+    # and the outputs are bit-identical
+    a = CommPatternProfiler.from_recorder(rec, name="p")
+    b = _per_event_profile(events, rec.instances, name="p")
+    assert a.to_json() == b.to_json()

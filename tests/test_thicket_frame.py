@@ -1,0 +1,199 @@
+"""NumPy-backed thicket.Frame: columnar storage + sparse-sweep robustness.
+
+Covers the column-dict backend (dtypes, presence masks, Python-scalar row
+views, cross-run ``concat``) and the regression fixes for empty profile
+sets and profiles with disjoint region name sets (previously easy to hit
+KeyError / wrong-fallback behavior when pivoting sparse scaling sweeps).
+"""
+
+import json
+
+import numpy as np
+
+from repro.core.profiler import CommProfile, RegionStats
+from repro.core.reports import (
+    bandwidth_msgrate_report,
+    per_level_report,
+    scaling_report,
+    table4_metrics,
+)
+from repro.core.thicket import Frame, add_rate_metrics, scaling_table
+
+
+def _profile(name, n_ranks, regions, seconds=0.5, meta=None):
+    m = {"app": "toy", "seconds": seconds}
+    m.update(meta or {})
+    prof = CommProfile(name=name, n_ranks=n_ranks, meta=m)
+    for rname, tb, ts in regions:
+        prof.regions[rname] = RegionStats(
+            region=rname,
+            instances=1,
+            sends=(1, 2),
+            recvs=(1, 2),
+            bytes_sent=(tb // 2, tb),
+            bytes_recv=(tb // 2, tb),
+            total_bytes_sent=tb,
+            total_sends=ts,
+            largest_send=tb,
+            n_ranks=n_ranks,
+        )
+    return prof
+
+
+# ---------------------------------------------------------------------------
+# Columnar backend semantics
+# ---------------------------------------------------------------------------
+
+
+def test_columns_are_numpy_backed_with_dtypes():
+    frame = Frame.from_profiles(
+        [_profile("a", 4, [("r", 100, 10)]), _profile("b", 8, [("r", 200, 20)])]
+    )
+    ranks, mask = frame.column_array("n_ranks")
+    assert isinstance(ranks, np.ndarray) and ranks.dtype == np.int64
+    assert mask.all() and ranks.tolist() == [4, 8]
+    avg, _ = frame.column_array("avg_send_size")
+    assert avg.dtype == np.float64
+    region, _ = frame.column_array("region")
+    assert region.dtype == object
+
+
+def test_rows_and_json_are_python_scalars():
+    frame = Frame.from_profiles([_profile("a", 4, [("r", 100, 10)])])
+    row = frame.rows[0]
+    assert type(row["n_ranks"]) is int
+    assert type(row["avg_send_size"]) is float
+    decoded = json.loads(frame.to_json())
+    assert decoded[0]["n_ranks"] == 4  # ints stay ints through json
+
+
+def test_missing_cells_masked_not_fabricated():
+    frame = Frame([{"a": 1, "b": "x"}, {"a": 2}])
+    assert frame.column("b") == ["x", None]
+    assert "b" not in frame.rows[1]  # absent key omitted from row dicts
+    _, mask = frame.column_array("b")
+    assert mask.tolist() == [True, False]
+    # to_markdown/to_csv render absent cells empty, like the legacy r.get
+    assert frame.to_csv().splitlines()[2] == "2,"
+
+
+def test_where_select_sort_on_sparse_columns():
+    frame = Frame([{"a": 1, "b": "x"}, {"a": 2}, {"a": 3, "b": "y"}])
+    assert len(frame.where(b="x")) == 1
+    assert len(frame.where(b=None)) == 1  # missing key reads as None
+    assert len(frame.where(nope=7)) == 0  # unknown column matches nothing
+    sel = frame.select("a", "b")
+    assert sel.rows[1] == {"a": 2, "b": None}
+    # sort over a column with None/str mix must not raise (type-grouped key)
+    ordered = frame.sort("b")
+    assert len(ordered) == 3
+
+
+def test_sort_numeric_fast_path_stable():
+    frame = Frame(
+        [{"k": 2, "t": "b"}, {"k": 1, "t": "a"}, {"k": 2, "t": "a"}, {"k": 1, "t": "b"}]
+    )
+    assert [r["t"] for r in frame.sort("k")] == ["a", "b", "b", "a"]
+    assert [r["k"] for r in frame.sort("k", reverse=True)] == [2, 2, 1, 1]
+
+
+def test_with_column_filter_group_by_agg_pivot_compat():
+    rows = [
+        {"a": 1, "b": "x", "v": 10},
+        {"a": 2, "b": "x", "v": 20},
+        {"a": 1, "b": "y", "v": 30},
+    ]
+    f = Frame(rows)
+    doubled = f.with_column("w", lambda r: r["v"] * 2)
+    assert doubled.column("w") == [20, 40, 60]
+    assert len(f.filter(lambda r: r["v"] > 15)) == 2
+    groups = f.group_by("b")
+    assert set(groups) == {("x",), ("y",)}
+    agg = f.agg(("b",), {"total": ("v", sum)})
+    assert agg.where(b="x").rows[0]["total"] == 30
+    piv = f.pivot("a", "b", "v")
+    assert piv.rows[0]["x"] == 10 and piv.rows[0]["y"] == 30
+    assert "y" not in piv.rows[1]  # sparse combination stays absent
+
+
+def test_concat_unions_columns_across_runs():
+    run1 = Frame.from_profiles([_profile("a", 4, [("r", 100, 10)])])
+    run2 = Frame.from_profiles(
+        [_profile("b", 8, [("r", 200, 20)], meta={"system": "dane"})]
+    )
+    both = Frame.concat([run1, run2])
+    assert len(both) == 2
+    assert both.column("meta_system") == [None, "dane"]
+    assert both.column("n_ranks") == [4, 8]
+    ranks, _ = both.column_array("n_ranks")
+    assert ranks.dtype == np.int64  # matching dtypes survive concat
+    assert len(Frame.concat([])) == 0
+
+
+# ---------------------------------------------------------------------------
+# Empty profile sets (regression: every emitter tolerates zero rows)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_profile_set_frame_and_reports():
+    frame = Frame.from_profiles([])
+    assert len(frame) == 0 and frame.columns() == []
+    assert len(add_rate_metrics(frame)) == 0
+    assert len(scaling_table(frame, "r")) == 0
+    assert table4_metrics([]).count("\n") == 1  # header + separator only
+    assert "vs processes" in scaling_report([], "r")
+    assert "multigrid" in per_level_report([])
+    assert "bandwidth" in bandwidth_msgrate_report([]).lower()
+
+
+def test_empty_frame_ops_do_not_raise():
+    f = Frame()
+    assert f.rows == [] and list(f) == []
+    assert len(f.where(x=1)) == 0
+    assert len(f.sort("x")) == 0
+    assert len(f.pivot("a", "b", "c")) == 0
+    assert f.agg(("a",), {"n": ("b", len)}).rows == []
+
+
+# ---------------------------------------------------------------------------
+# Disjoint region name sets (regression: sparse scaling sweeps)
+# ---------------------------------------------------------------------------
+
+
+def _disjoint_profiles():
+    return [
+        _profile("small", 4, [("halo", 100, 10), ("mg_level_0", 50, 5)]),
+        _profile("big", 8, [("halo", 400, 40), ("mg_level_1", 80, 8)]),
+    ]
+
+
+def test_pivot_disjoint_regions_leaves_cells_absent():
+    frame = Frame.from_profiles(_disjoint_profiles())
+    piv = frame.pivot("n_ranks", "region", "total_bytes_sent")
+    by_ranks = {r["n_ranks"]: r for r in piv}
+    assert by_ranks[4]["mg_level_0"] == 50 and "mg_level_1" not in by_ranks[4]
+    assert by_ranks[8]["mg_level_1"] == 80 and "mg_level_0" not in by_ranks[8]
+    md = piv.to_markdown()
+    assert md.count("\n") == 3  # header + separator + 2 rows, no KeyError
+
+
+def test_table4_region_filter_zero_row_for_missing_region():
+    md = table4_metrics(_disjoint_profiles(), region="mg_level_0")
+    lines = md.splitlines()
+    assert len(lines) == 4  # header, separator, one row per profile
+    assert lines[2].startswith("| small - 4 | 5.000e+01")
+    assert lines[3].startswith("| big - 8 | 0.000e+00 | 0.000e+00 | 0 |")
+
+
+def test_per_level_report_disjoint_levels():
+    rpt = per_level_report(_disjoint_profiles())
+    assert "mg_level" not in rpt  # level numbers become columns
+    assert "| 4 |" in rpt and "| 8 |" in rpt
+
+
+def test_rate_report_with_partial_meta_does_not_raise():
+    prof = _profile("nosec", 2, [("halo", 10, 1)])
+    del prof.meta["seconds"]
+    del prof.meta["app"]
+    md = bandwidth_msgrate_report([prof, _profile("ok", 4, [("halo", 20, 2)])])
+    assert "bandwidth" in md.lower()
