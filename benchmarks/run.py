@@ -18,6 +18,7 @@ def run_figures() -> None:
     import fig3_amg_ranks
     import fig4_laghos_strong
     import fig56_bw_msgrate
+    import fig7_hlo_vs_traced
     import roofline
     import table4_metrics
 
@@ -28,6 +29,7 @@ def run_figures() -> None:
         ("fig3", fig3_amg_ranks),
         ("fig4", fig4_laghos_strong),
         ("fig56", fig56_bw_msgrate),
+        ("fig7", fig7_hlo_vs_traced),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

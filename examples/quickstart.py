@@ -44,7 +44,7 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import sys; sys.path.insert(0, %r)
 import jax
 from repro.configs import registry
-from repro.core.hlo import parse_hlo_collectives_with_loops, summarize_collectives
+from repro.core.hlo import scan_hlo_collectives
 from repro.launch.mesh import make_debug_mesh, mesh_shape_dict
 from repro.parallel.context import parallel_context
 from repro.parallel.sharding import default_plan
@@ -62,8 +62,7 @@ with parallel_context(mesh, plan):
         S.abstract_opt_state(cfg, mesh, plan),
         S.batch_specs(cfg, ShapeConfig('t', 'train', 32, 8), mesh, plan),
     ).compile()
-s = summarize_collectives(
-    parse_hlo_collectives_with_loops(compiled.as_text(), 8))
+s = scan_hlo_collectives(compiled.as_text(), 8, with_loops=True).summarize()
 print('collectives by model region (count, wire bytes/device):')
 for region, (n, b) in sorted(s.by_region.items()):
     print(f'  {region:12s} n={n:3d}  {b:12d} B')

@@ -8,8 +8,11 @@ Public API:
   recording()                — install a profiling recorder for a trace
   profile_traced(fn, *args)  — abstract-trace fn and return its CommProfile
   collectives                — instrumented shard_map collectives
-  parse_hlo_collectives*     — compiled-HLO communication extraction
+  scan_hlo_collectives       — compiled-HLO communication extraction into a
+                               columnar HloCollectiveBuffer (CollectiveOp /
+                               parse_hlo_collectives* are its view adapters)
   Frame / reports            — Thicket-style analysis & paper-table emitters
+                               (two-layer: traced + hlo rows per region)
 """
 
 from repro.core import compat  # noqa: F401
@@ -17,11 +20,13 @@ from repro.core.regions import (  # noqa: F401
     comm_region, recording, current_region, COMM_REGION_SCOPE_PREFIX,
 )
 from repro.core.profiler import (  # noqa: F401
-    CommPatternProfiler, CommProfile, RegionStats, profile_traced,
+    CommPatternProfiler, CommProfile, HloCollectiveProfiler, RegionStats,
+    profile_traced,
 )
 from repro.core.hlo import (  # noqa: F401
-    CollectiveOp, CollectiveSummary, parse_hlo_collectives,
-    parse_hlo_collectives_with_loops, summarize_collectives,
+    CollectiveOp, CollectiveSummary, HloCollectiveBuffer,
+    parse_hlo_collectives, parse_hlo_collectives_with_loops,
+    scan_hlo_collectives, summarize_collectives,
 )
 from repro.core import collectives  # noqa: F401
 from repro.core.thicket import Frame, add_rate_metrics  # noqa: F401

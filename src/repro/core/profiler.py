@@ -21,6 +21,14 @@ Extensions over the paper (TPU-native):
   coll_bytes   total collective bytes moved per rank (min/max) — on TPU most
                traffic is collectives, so pattern analysis needs it;
   totals      totals across ranks (paper Table IV columns).
+
+Both profilers in this module run on the same grouped segment-reduction
+kernels (``segment_spans`` / ``block_reduce`` / ``segment_reduce``):
+:class:`CommPatternProfiler` reduces the traced-layer ``TraceBuffer``, and
+:class:`HloCollectiveProfiler` reduces the compiled-layer
+``repro.core.hlo.HloCollectiveBuffer`` into per-region ``layer="hlo"``
+rows for ``thicket.Frame`` — one ordering pass, one block reduction per
+statistic, no per-event/per-op Python in either.
 """
 
 from __future__ import annotations
@@ -126,6 +134,65 @@ class CommProfile:
 
 _I64_MAX = np.iinfo(np.int64).max
 _I64_MIN = np.iinfo(np.int64).min
+
+
+# ---------------------------------------------------------------------------
+# Grouped segment-reduction kernels
+# ---------------------------------------------------------------------------
+# Shared by the traced-layer CommPatternProfiler and the compiled-layer
+# HloCollectiveProfiler: order events/ops by a composite group code once,
+# then run ONE block reduction per statistic across all groups at once.
+
+
+def segment_spans(key: np.ndarray) -> tuple:
+    """Ordering + contiguous block boundaries for segment reductions.
+
+    ``key`` holds one composite int group code per element.  Returns
+    ``(order, sorted_key, starts, ends)``: ``order`` is None when the input
+    is already non-decreasing (the common, pre-grouped trace shape — the
+    permutation is skipped entirely), otherwise a stable argsort; block
+    ``i`` of the sorted data spans ``starts[i]:ends[i]`` and carries key
+    ``sorted_key[starts[i]]``.
+    """
+    n = len(key)
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return None, np.asarray(key), z, z
+    if np.any(np.diff(key) < 0):
+        order = np.argsort(key, kind="stable")
+        sorted_key = key[order]
+    else:
+        order = None
+        sorted_key = key
+    starts = np.concatenate(([0], np.flatnonzero(np.diff(sorted_key)) + 1))
+    ends = np.append(starts[1:], n)
+    return order, sorted_key, starts, ends
+
+
+def block_reduce(
+    grid: np.ndarray, starts: np.ndarray, ends: np.ndarray, ufunc: np.ufunc
+) -> np.ndarray:
+    """One contiguous block reduction per segment over a 2-D grid's rows.
+
+    ``ufunc.reduce`` over a contiguous block vectorizes along the inner
+    axis where generic ``reduceat`` falls back to a scalar inner loop; the
+    block count is O(groups), not O(rows).
+    """
+    return np.stack([ufunc.reduce(grid[s:e], axis=0) for s, e in zip(starts, ends)])
+
+
+def segment_reduce(
+    col: np.ndarray, order, starts: np.ndarray, ufunc: np.ufunc = np.add
+) -> np.ndarray:
+    """Per-segment reduction of a 1-D column in one ``reduceat`` pass.
+
+    ``order`` / ``starts`` come from :func:`segment_spans` over the
+    column's group codes.
+    """
+    if not len(starts):
+        return np.zeros(0, col.dtype)
+    vals = col if order is None else col[order]
+    return ufunc.reduceat(vals, starts)
 
 
 class CommPatternProfiler:
@@ -234,13 +301,7 @@ class CommPatternProfiler:
         cpart_g = np.zeros((G, Rmax), bool)
         if E and Rmax:
             key = g_of_event * 2 + is_coll
-            if np.any(np.diff(key) < 0):
-                order = np.argsort(key, kind="stable")
-                key_sorted = key[order]
-            else:
-                order = None
-                key_sorted = key
-            starts = np.concatenate(([0], np.flatnonzero(np.diff(key_sorted)) + 1))
+            order, key_sorted, starts, ends = segment_spans(key)
             seg_g = key_sorted[starts] // 2
             seg_coll = (key_sorted[starts] % 2).astype(bool)
 
@@ -265,17 +326,10 @@ class CommPatternProfiler:
                 grid.reshape(-1)[flat_pos] = col[src_idx]
                 return grid
 
-            ends = np.append(starts[1:], E)
-
             def reduce_split(col, ufunc, p2p_out, coll_out) -> None:
                 # One contiguous block reduction per (region, kind) segment
-                # — the block count is O(regions); ``ufunc.reduce`` over a
-                # contiguous block vectorizes where generic ``reduceat``
-                # falls back to a scalar inner loop.
-                grid = layout(col)
-                red = np.stack(
-                    [ufunc.reduce(grid[s:e], axis=0) for s, e in zip(starts, ends)]
-                )
+                # — shared kernel with the HLO-layer profiler.
+                red = block_reduce(layout(col), starts, ends, ufunc)
                 if p2p_out is not None:
                     p2p_out[seg_g[~seg_coll]] = red[~seg_coll]
                 if coll_out is not None:
@@ -481,6 +535,84 @@ class CommPatternProfiler:
             )
             prof.regions[region] = stats
         return prof
+
+
+class HloCollectiveProfiler:
+    """Compiled-layer sibling of :class:`CommPatternProfiler`.
+
+    Reduces a columnar ``repro.core.hlo.HloCollectiveBuffer`` (interned
+    region/kind ids plus wire/operand/result byte columns) into per-region
+    rows with the same grouped segment-reduction kernels the traced-layer
+    profiler uses: one composite region ordering
+    (:func:`segment_spans`), then one :func:`segment_reduce` /
+    ``bincount`` pass per statistic across all regions at once — no per-op
+    Python.
+
+    The rows are plain dicts tagged ``layer="hlo"`` and keyed like
+    ``thicket.Frame.from_profiles`` rows (``profile`` / ``n_ranks`` /
+    ``region``), so ``thicket.Frame.from_hlo`` can land compiled-layer
+    traffic in the same frames as traced-layer traffic and reports can
+    join the two layers per region (``reports.hlo_vs_traced``).
+    """
+
+    @staticmethod
+    def region_rows(
+        buf,
+        *,
+        name: str = "hlo",
+        n_ranks: int = 0,
+        meta: Optional[dict] = None,
+    ) -> list:
+        """One row dict per region, in first-appearance order."""
+        N = buf.n_ops
+        rids = buf.region_ids
+        if N:
+            uniq, first = np.unique(rids, return_index=True)
+            ordered = uniq[np.argsort(first, kind="stable")]
+        else:
+            ordered = np.zeros(0, np.int64)
+        G = len(ordered)
+        gid_of_rid = np.zeros(max(len(buf.region_names), 1), np.int64)
+        gid_of_rid[ordered] = np.arange(G)
+        g_of_op = gid_of_rid[rids]
+
+        # Group codes are assigned in first-appearance order, so the sorted
+        # segments come out in exactly the output row order.
+        order, _, starts, _ = segment_spans(g_of_op)
+        wire = segment_reduce(buf.wire_bytes, order, starts)
+        operand = segment_reduce(buf.operand_bytes, order, starts)
+        result = segment_reduce(buf.result_bytes, order, starts)
+        largest = segment_reduce(buf.wire_bytes, order, starts, np.maximum)
+        counts = np.bincount(g_of_op, minlength=G)
+        K = len(buf.kind_names)
+        kind_counts = np.zeros((G, K), np.int64)
+        if N and K:
+            kc = np.bincount(g_of_op * K + buf.kind_ids, minlength=G * K)
+            kind_counts = kc.reshape(G, K)
+
+        rows = []
+        for g, rid in enumerate(ordered):
+            # compact "kind=count;..." string: dict cells would break the
+            # naive (unquoted) Frame.to_csv on multi-kind regions
+            kinds = ";".join(
+                f"{buf.kind_names[int(k)]}={int(kind_counts[g, k])}"
+                for k in np.flatnonzero(kind_counts[g])
+            )
+            row = {
+                "profile": name,
+                "n_ranks": n_ranks,
+                "region": buf.region_names[int(rid)],
+                "layer": "hlo",
+                "hlo_ops": int(counts[g]),
+                "hlo_wire_bytes": int(wire[g]),
+                "hlo_operand_bytes": int(operand[g]),
+                "hlo_result_bytes": int(result[g]),
+                "hlo_largest_wire": int(largest[g]),
+                "hlo_kinds": kinds,
+            }
+            row.update({f"meta_{k}": v for k, v in (meta or {}).items()})
+            rows.append(row)
+        return rows
 
 
 def profile_traced(

@@ -166,8 +166,14 @@ def p2p_structure(pairs, n: int) -> tuple:
     return sends, recvs, empty, empty, empty.copy(), empty.copy()
 
 
-class _Column:
-    """Append-only 1-D array with amortized-growth (capacity-doubling) backing."""
+class Column:
+    """Append-only 1-D array with amortized-growth (capacity-doubling) backing.
+
+    Shared building block of the columnar stores: the traced-layer
+    :class:`TraceBuffer` below and the compiled-layer
+    ``repro.core.hlo.HloCollectiveBuffer`` both lay their per-event /
+    per-op columns out of these.
+    """
 
     __slots__ = ("_data", "_n")
 
@@ -210,6 +216,53 @@ class _Column:
         self._n = data.size
 
 
+#: Backwards-compatible private alias (pre-PR-4 name).
+_Column = Column
+
+
+class Interner:
+    """Hashable value <-> dense int id table.
+
+    Both columnar stores intern their repeated string/tuple fields through
+    this (region names, nesting paths, collective kinds, axis names), so
+    events/ops carry 4-byte ids and each distinct value is stored once.
+    ``values`` is the id-ordered table; ``intern`` returns the existing id
+    or assigns the next one.
+    """
+
+    __slots__ = ("values", "_ids")
+
+    def __init__(self, values=()) -> None:
+        self.values = list(values)
+        self._ids = {v: i for i, v in enumerate(self.values)}
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def __getitem__(self, code: int):
+        return self.values[code]
+
+    def intern(self, value) -> int:
+        code = self._ids.get(value)
+        if code is None:
+            code = len(self.values)
+            self.values.append(value)
+            self._ids[value] = code
+        return code
+
+    # compact pickles: the id dict rebuilds from the table.  The value
+    # list is adopted as-is (not copied) so owners that alias it — the
+    # buffers' ``region_names`` etc. — keep seeing appends after a
+    # pickle round-trip.
+    def __getstate__(self) -> tuple:
+        return (self.values,)
+
+    def __setstate__(self, state) -> None:
+        (values,) = state
+        self.values = values
+        self._ids = {v: i for i, v in enumerate(values)}
+
+
 class TraceBuffer:
     """Columnar (structure-of-arrays) store of recorded collective calls.
 
@@ -221,50 +274,43 @@ class TraceBuffer:
     """
 
     def __init__(self) -> None:
-        # Interning tables: value <-> small int id.
-        self.region_names: list[str] = []
-        self.region_paths: list[tuple] = []
-        self.kind_names: list[str] = []
-        self.axis_names: list[str] = []
-        self._region_ids: dict[str, int] = {}
-        self._path_ids: dict[tuple, int] = {}
-        self._kind_ids: dict[str, int] = {}
-        self._axis_ids: dict[str, int] = {}
+        # Interning tables (shared Interner); the *_names attributes alias
+        # the interners' id-ordered value tables, so existing consumers
+        # keep indexing plain lists.
+        self._regions = Interner()
+        self._paths = Interner()
+        self._kinds = Interner()
+        self._axes = Interner()
+        self.region_names: list = self._regions.values
+        self.region_paths: list = self._paths.values
+        self.kind_names: list = self._kinds.values
+        self.axis_names: list = self._axes.values
         # Per-event scalar columns.
-        self._region = _Column(np.int32)
-        self._path = _Column(np.int32)
-        self._kind = _Column(np.int32)
-        self._axis = _Column(np.int32)
-        self._is_coll = _Column(np.uint8)
-        self._largest = _Column(np.int64)
-        self._rank_len = _Column(np.int64)
-        self._dest_len = _Column(np.int64)
-        self._src_len = _Column(np.int64)
+        self._region = Column(np.int32)
+        self._path = Column(np.int32)
+        self._kind = Column(np.int32)
+        self._axis = Column(np.int32)
+        self._is_coll = Column(np.uint8)
+        self._largest = Column(np.int64)
+        self._rank_len = Column(np.int64)
+        self._dest_len = Column(np.int64)
+        self._src_len = Column(np.int64)
         # Dense per-rank columns (event-major slabs of rank_lens[e] entries).
-        self._sends = _Column(np.int64)
-        self._recvs = _Column(np.int64)
-        self._bytes_sent = _Column(np.int64)
-        self._bytes_recv = _Column(np.int64)
-        self._participants = _Column(bool)
+        self._sends = Column(np.int64)
+        self._recvs = Column(np.int64)
+        self._bytes_sent = Column(np.int64)
+        self._bytes_recv = Column(np.int64)
+        self._participants = Column(bool)
         # CSR peer-set pair columns (runs of dest_lens[e] / src_lens[e]).
-        self._dest_rows = _Column(np.int64)
-        self._dest_peers = _Column(np.int64)
-        self._src_rows = _Column(np.int64)
-        self._src_peers = _Column(np.int64)
+        self._dest_rows = Column(np.int64)
+        self._dest_peers = Column(np.int64)
+        self._src_rows = Column(np.int64)
+        self._src_peers = Column(np.int64)
 
     # -- interning ----------------------------------------------------------
 
-    @staticmethod
-    def _intern(value, table: list, ids: dict) -> int:
-        code = ids.get(value)
-        if code is None:
-            code = len(table)
-            table.append(value)
-            ids[value] = code
-        return code
-
     def region_id(self, name: str) -> int:
-        return self._intern(name, self.region_names, self._region_ids)
+        return self._regions.intern(name)
 
     # -- column views (live prefixes, read-only) ----------------------------
 
@@ -381,12 +427,10 @@ class TraceBuffer:
         src_rows: np.ndarray,
         src_peers: np.ndarray,
     ) -> None:
-        self._region.push(self.region_id(region))
-        self._path.push(
-            self._intern(tuple(region_path), self.region_paths, self._path_ids)
-        )
-        self._kind.push(self._intern(kind, self.kind_names, self._kind_ids))
-        self._axis.push(self._intern(str(axis_name), self.axis_names, self._axis_ids))
+        self._region.push(self._regions.intern(region))
+        self._path.push(self._paths.intern(tuple(region_path)))
+        self._kind.push(self._kinds.intern(kind))
+        self._axis.push(self._axes.intern(str(axis_name)))
         self._is_coll.push(1 if is_collective else 0)
         self._largest.push(largest)
         self._rank_len.push(len(sends))

@@ -103,6 +103,51 @@ def region_stats_table(profile: CommProfile) -> str:
     return "\n".join(out)
 
 
+def hlo_vs_traced(profiles: Iterable[CommProfile], hlo_entries) -> str:
+    """Two-layer per-region comparison (no paper analog — TPU extension).
+
+    Joins application-layer traffic (instrumented collectives, recorded at
+    trace time) with compiled-layer traffic (GSPMD collectives extracted
+    from post-SPMD HLO by the columnar analyzer) on (profile, region) —
+    the ``commr::`` named scopes give both layers the same region
+    namespace.  ``hlo_entries`` is an iterable of
+    ``(profile_name, n_ranks, HloCollectiveBuffer)`` tuples; regions
+    present in only one layer get zero cells for the other.
+    """
+    both = Frame.concat([Frame.from_profiles(profiles), Frame.from_hlo(hlo_entries)])
+
+    def total(values):
+        return sum(v for v in values if v)
+
+    out = [
+        "| Profile | Region | Traced bytes | Traced sends | Traced coll | "
+        "HLO ops | HLO wire bytes | hlo/traced bytes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    if len(both):
+        agg = both.agg(
+            ("profile", "region"),
+            {
+                "traced_bytes": ("total_bytes_sent", total),
+                "traced_sends": ("total_sends", total),
+                "traced_coll": ("coll", total),
+                "hlo_ops": ("hlo_ops", total),
+                "hlo_wire": ("hlo_wire_bytes", total),
+            },
+        )
+        for r in agg.sort("profile", "region"):
+            if r["traced_bytes"]:
+                ratio = f"{r['hlo_wire'] / r['traced_bytes']:.3f}"
+            else:
+                ratio = "-"
+            out.append(
+                f"| {r['profile']} | {r['region']} | {r['traced_bytes']} | "
+                f"{r['traced_sends']} | {r['traced_coll']} | {r['hlo_ops']} | "
+                f"{r['hlo_wire']} | {ratio} |"
+            )
+    return "\n".join(out)
+
+
 def scaling_report(
     profiles: Iterable[CommProfile],
     region: str,

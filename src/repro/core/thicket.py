@@ -32,6 +32,15 @@ Column order is first-appearance order, matching the legacy behavior.
 cross-run scaling studies; columns are unioned and dtypes re-unified, so
 sweeps with disjoint meta/region columns concatenate without loss.
 
+Frames are **two-layer**: :meth:`Frame.from_profiles` rows carry
+``layer="traced"`` (application-layer traffic from the instrumented
+collectives) and :meth:`Frame.from_hlo` rows carry ``layer="hlo"``
+(compiler-inserted GSPMD traffic from the columnar HLO analyzer), joined
+per (profile, n_ranks, region) — the ``commr::`` scopes give both layers
+one region namespace (``reports.hlo_vs_traced``).  ``group_by`` / ``agg``
+run vectorized: one ``np.unique`` pass over composite key codes, no
+per-row dict materialization.
+
 Derived metrics mirror the paper's §V analysis:
   bandwidth   bytes sent per second per process (Fig. 5/6 left axes)
   msg_rate    messages sent per second per process (Fig. 5/6 right axes)
@@ -48,7 +57,7 @@ from typing import Callable, Iterable, Optional
 
 import numpy as np
 
-from repro.core.profiler import CommProfile
+from repro.core.profiler import CommProfile, HloCollectiveProfiler
 
 
 def _infer_column(values: list, present: np.ndarray) -> np.ndarray:
@@ -121,7 +130,12 @@ class Frame:
     # -- construction -----------------------------------------------------
     @staticmethod
     def from_profiles(profiles: Iterable[CommProfile]) -> "Frame":
-        """One row per (profile, region)."""
+        """One row per (profile, region), tagged ``layer="traced"``.
+
+        The layer tag distinguishes these application-layer rows from the
+        compiled-layer rows of :meth:`from_hlo` when both land in one frame
+        (two-layer per-region joins — ``reports.hlo_vs_traced``).
+        """
         rows = []
         for p in profiles:
             for rname, st in p.regions.items():
@@ -129,6 +143,7 @@ class Frame:
                     "profile": p.name,
                     "n_ranks": p.n_ranks,
                     "region": rname,
+                    "layer": "traced",
                     "instances": st.instances,
                     "sends_min": st.sends[0],
                     "sends_max": st.sends[1],
@@ -160,6 +175,30 @@ class Frame:
             for p in sorted(glob.glob(os.path.join(path, pattern)))
         ]
         return Frame.from_profiles(profs)
+
+    @staticmethod
+    def from_hlo(entries) -> "Frame":
+        """Compiled-layer rows: one per (module, region), ``layer="hlo"``.
+
+        ``entries`` is an iterable of ``(profile_name, n_ranks, buffer)``
+        or ``(profile_name, n_ranks, buffer, meta)`` tuples, where
+        ``buffer`` is a ``repro.core.hlo.HloCollectiveBuffer``.  Rows share
+        the join keys of :meth:`from_profiles` (profile / n_ranks /
+        region), so ``Frame.concat`` stitches the two layers into one
+        per-region table.
+        """
+        rows = []
+        for entry in entries:
+            name, n_ranks, buf, *rest = entry
+            rows.extend(
+                HloCollectiveProfiler.region_rows(
+                    buf,
+                    name=name,
+                    n_ranks=n_ranks,
+                    meta=rest[0] if rest else None,
+                )
+            )
+        return Frame(rows)
 
     @staticmethod
     def from_records(path: str) -> "Frame":
@@ -325,20 +364,81 @@ class Frame:
             )
         return self._take(np.asarray(idx))
 
+    def _key_codes(self, keys: tuple) -> np.ndarray:
+        """Dense int64 group code per row for the key-column tuple.
+
+        Numeric fully-present key columns factorize with one ``np.unique``;
+        object/masked columns fall back to a dict factorization (absent
+        cells read as None, matching ``r.get``).  Codes are re-compacted
+        after every key, so composites never overflow (each stage's code
+        is < n_rows).
+        """
+        n = self._n
+        codes = np.zeros(n, np.int64)
+        if n == 0:
+            return codes
+        for k in keys:
+            col = self._cols.get(k)
+            if col is None:
+                continue  # missing column: single None value, code 0
+            m = self._mask[k]
+            if col.dtype.kind in "biuf" and m.all():
+                kc = np.unique(col, return_inverse=True)[1].astype(np.int64)
+            else:
+                ids: dict = {}
+                kc = np.empty(n, np.int64)
+                for i in range(n):
+                    v = _pyval(col[i]) if m[i] else None
+                    code = ids.get(v)
+                    if code is None:
+                        code = len(ids)
+                        ids[v] = code
+                    kc[i] = code
+            combined = codes * (int(kc.max()) + 1) + kc
+            codes = np.unique(combined, return_inverse=True)[1].astype(np.int64)
+        return codes
+
     def group_by(self, *keys: str) -> dict:
-        groups: dict[tuple, list] = {}
-        for i in range(self._n):
-            r = self._row(i)
-            groups.setdefault(tuple(r.get(k) for k in keys), []).append(r)
+        """Group rows by key columns: {key_tuple: sub-Frame}.
+
+        Vectorized: one ``np.unique`` pass over composite key codes (see
+        ``_key_codes``) — no per-row dict is materialized.  Groups keep
+        first-appearance order and sub-frames preserve row order; iterate
+        a sub-frame (or take ``.rows``) for the row dicts the legacy
+        list-valued ``group_by`` returned.
+        """
+        if self._n == 0:
+            return {}
+        codes = self._key_codes(keys)
+        uniq, first, inv = np.unique(codes, return_index=True, return_inverse=True)
+        by_code = np.argsort(inv, kind="stable")  # ascending rows per group
+        bounds = np.concatenate(
+            ([0], np.flatnonzero(np.diff(inv[by_code])) + 1, [self._n])
+        )
+        groups = {}
+        for rank in np.argsort(first, kind="stable"):  # first-appearance order
+            i0 = int(first[rank])
+            key = []
+            for k in keys:  # r.get semantics: absent cells read as None
+                if k in self._cols and self._mask[k][i0]:
+                    key.append(_pyval(self._cols[k][i0]))
+                else:
+                    key.append(None)
+            sub = self._take(by_code[bounds[rank] : bounds[rank + 1]])
+            groups[tuple(key)] = sub
         return groups
 
     def agg(self, keys: tuple, aggs: dict) -> "Frame":
-        """aggs: out_col -> (in_col, fn) where fn maps list->scalar."""
+        """aggs: out_col -> (in_col, fn) where fn maps list->scalar.
+
+        Runs on the vectorized group path: each fn receives the group's
+        column values as a list (absent cells -> None, like ``r.get``).
+        """
         out = []
-        for kv, rows in self.group_by(*keys).items():
+        for kv, sub in self.group_by(*keys).items():
             row = dict(zip(keys, kv))
             for out_col, (in_col, fn) in aggs.items():
-                row[out_col] = fn([r.get(in_col) for r in rows])
+                row[out_col] = fn(sub.column(in_col))
             out.append(row)
         return Frame(out)
 

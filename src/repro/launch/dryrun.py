@@ -15,8 +15,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import registry            # noqa: E402
 from repro.core import compat                 # noqa: E402
 from repro.configs.base import SHAPES, model_flops  # noqa: E402
-from repro.core.hlo import (parse_hlo_collectives_with_loops,  # noqa: E402
-                            summarize_collectives)
+from repro.core.hlo import scan_hlo_collectives  # noqa: E402
 from repro.core.hlo_cost import analyze_cost  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_shape_dict  # noqa: E402
 from repro.parallel.context import parallel_context  # noqa: E402
@@ -103,8 +102,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     mem = compiled.memory_analysis()
     xla_cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
-    ops = parse_hlo_collectives_with_loops(hlo, total_devices=n_dev)
-    summ = summarize_collectives(ops)
+    # Columnar HLO scan: one buffer per compiled module, summarized with
+    # one vectorized pass (no per-op CollectiveOp objects).
+    hlo_buf = scan_hlo_collectives(hlo, total_devices=n_dev, with_loops=True)
+    summ = hlo_buf.summarize()
     # Trip-count-correct per-device cost (XLA's cost_analysis counts scan
     # bodies once — see repro.core.hlo_cost).
     cost = analyze_cost(hlo)

@@ -1,0 +1,145 @@
+"""Synthetic post-SPMD-HLO text generator for the analyzer tests.
+
+Builds well-formed module text from plain data (no randomness here — the
+property tests draw the structure through the ``proptest`` shim and the
+perf test sizes it explicitly), covering the constructs the columnar
+analyzer must parse: iota and explicit replica groups (with and without
+``use_global_device_ids``), ``-start``/``-done`` pairs, collective-permute
+source/target pair lists, while bodies with ``known_trip_count``,
+tuple-typed results, and nested ``commr::`` scopes in op metadata.
+"""
+
+from __future__ import annotations
+
+DTYPES = ("f32", "bf16", "f16", "s32", "s8", "s4", "u4")
+KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+
+def type_str(dtype: str, dims, layout: bool = False) -> str:
+    t = f"{dtype}[{','.join(str(d) for d in dims)}]"
+    if layout and dims:
+        t += "{" + ",".join(str(i) for i in reversed(range(len(dims)))) + "}"
+    return t
+
+
+def _groups_attr(groups) -> str:
+    """groups: ("iota", n_groups, group_size) | ("expl", [[ids]...])
+    | ("expl_spaced", [[ids]...]) — the nonstandard spaced spelling."""
+    mode = groups[0]
+    if mode == "iota":
+        _, ng, gs = groups
+        return f"replica_groups=[{ng},{gs}]<=[{ng * gs}]"
+    body = ",".join("{" + ",".join(str(i) for i in g) + "}" for g in groups[1])
+    if mode == "expl_spaced":
+        body = ", ".join("{ " + ", ".join(map(str, g)) + " }" for g in groups[1])
+        return "replica_groups={ " + body + " }"
+    return "replica_groups={" + body + "}"
+
+
+def op_name(kind: str, region_path=()) -> str:
+    scopes = "".join(f"commr::{r}/" for r in region_path)
+    return f"jit(f)/jit(main)/{scopes}{kind}"
+
+
+def collective_lines(
+    name: str,
+    kind: str,
+    result_type: str,
+    operands,
+    *,
+    groups=None,
+    pairs=None,
+    channel=None,
+    use_global_ids: bool = False,
+    region_path=(),
+    start_done: bool = False,
+    to_apply: str = "",
+) -> list:
+    """One collective instruction (or a -start/-done pair) as HLO lines.
+
+    ``operands`` is a list of (name, type_str) of already-defined
+    instructions; ``pairs`` a list of (src, dst) for collective-permute.
+    """
+    attrs = []
+    if channel is not None:
+        attrs.append(f"channel_id={channel}")
+    if pairs is not None:
+        attrs.append(
+            "source_target_pairs={"
+            + ",".join("{%d,%d}" % (s, d) for s, d in pairs)
+            + "}"
+        )
+    if groups is not None:
+        attrs.append(_groups_attr(groups))
+    if use_global_ids:
+        attrs.append("use_global_device_ids=true")
+    if to_apply:
+        attrs.append(f"to_apply=%{to_apply}")
+    attrs.append(
+        f'metadata={{op_name="{op_name(kind, region_path)}"'
+        ' source_file="synthetic.py" source_line=1}'
+    )
+    args = ", ".join(f"{t} %{n}" for n, t in operands)
+    attr_str = ", ".join(attrs)
+    if not start_done:
+        return [f"  %{name} = {result_type} {kind}({args}), {attr_str}"]
+    tup = f"({operands[0][1]}, {result_type})"
+    return [
+        f"  %{name} = {tup} {kind}-start({args}), {attr_str}",
+        f"  %{name}.done = {result_type} {kind}-done({tup} %{name})",
+    ]
+
+
+def elementwise_line(name: str, result_type: str, operands) -> str:
+    op = "add" if len(operands) > 1 else "negate"
+    args = ", ".join(f"{t} %{n}" for n, t in operands)
+    return f"  %{name} = {result_type} {op}({args})"
+
+
+def while_line(
+    name: str, state_type: str, operand: str, cond: str, body: str, trip=None
+) -> str:
+    line = (
+        f"  %{name} = {state_type} while({state_type} %{operand}), "
+        f"condition=%{cond}, body=%{body}"
+    )
+    if trip is not None:
+        line += f', backend_config={{"known_trip_count":{{"n":"{trip}"}}}}'
+    return line
+
+
+def computation(
+    name: str,
+    param_type: str,
+    body_lines,
+    root_name: str,
+    root_type: str,
+    entry: bool = False,
+) -> list:
+    """A full computation block; ``body_lines`` reference ``%param.0``."""
+    head = f"%{name} (param.0: {param_type}) -> {root_type} {{"
+    if entry:
+        head = "ENTRY " + head
+    root = f"  ROOT %root.{name} = {root_type} copy({root_type} %{root_name})"
+    return (
+        [head, f"  %param.0 = {param_type} parameter(0)"]
+        + list(body_lines)
+        + [root, "}"]
+    )
+
+
+def module(comp_blocks, name: str = "synthetic") -> str:
+    """Assemble computation blocks (lists of lines) into module text."""
+    lines = [f"HloModule {name}", ""]
+    for block in comp_blocks:
+        lines.extend(block)
+        lines.append("")
+    return "\n".join(lines)

@@ -164,3 +164,18 @@ def test_profile_json_roundtrip(tmp_path):
     loaded = CommProfile.load(path)
     assert loaded.regions["r"].total_sends == 2
     assert loaded.regions["r"].bytes_sent == prof.regions["r"].bytes_sent
+
+
+def test_trace_buffer_pickle_keeps_interner_aliasing():
+    """Regression: unpickled buffers must keep region_names live when more
+    events are appended (the Interner adopts, not copies, its table)."""
+    import pickle
+    rec = RegionRecorder()
+    rec.enter("r0")
+    rec.record(event_from_pairs("r0", 4, [(0, 1), (1, 2)], 64))
+    buf = pickle.loads(pickle.dumps(rec.buffer))
+    assert buf.region_names == rec.buffer.region_names
+    buf.append_p2p(region="r1", region_path=("r1",), kind="ppermute",
+                   axis_name="x", pairs=[(2, 3)], n=4, nbytes=32)
+    assert buf.region_names[buf.region_ids[-1]] == "r1"
+    assert buf.n_events == rec.buffer.n_events + 1

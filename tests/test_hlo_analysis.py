@@ -8,8 +8,11 @@ def test_collectives_attribution_and_loop_scaling():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core import compat
-        from repro.core.hlo import (parse_hlo_collectives_with_loops,
-                                    summarize_collectives)
+        from repro.core.hlo import (
+            parse_hlo_collectives, parse_hlo_collectives_reference,
+            parse_hlo_collectives_with_loops,
+            parse_hlo_collectives_with_loops_reference,
+            scan_hlo_collectives, summarize_collectives)
 
         mesh = compat.make_mesh((2, 4), ("data", "model"))
         xs = NamedSharding(mesh, P("data", "model"))
@@ -32,6 +35,20 @@ def test_collectives_attribution_and_loop_scaling():
         n, b = s.by_region["mlp"]
         per_iter = int(2 * 3 / 4 * 256 // 2 * 512 * 4)  # f32 partial (128,512)
         assert b == 6 * per_iter, (b, per_iter)
+        # columnar scan must be bit-identical to the dict reference on the
+        # real compiled module (plain and loop-scaled), and the buffer's
+        # vectorized summary must match the per-op summarizer
+        text = c.as_text()
+        for col_fn, ref_fn, loops in (
+                (parse_hlo_collectives,
+                 parse_hlo_collectives_reference, False),
+                (parse_hlo_collectives_with_loops,
+                 parse_hlo_collectives_with_loops_reference, True)):
+            col, ref = col_fn(text, 8), ref_fn(text, 8)
+            assert [o.to_dict() for o in col] == [o.to_dict() for o in ref]
+            buf = scan_hlo_collectives(text, 8, with_loops=loops)
+            assert buf.summarize().to_dict() == \
+                summarize_collectives(ref).to_dict()
         print("OK", s.total_wire_bytes)
     """)
     assert "OK" in out

@@ -1,0 +1,184 @@
+"""Golden-HLO corpus: the columnar analyzer against the dict reference.
+
+Every fixture in ``tests/fixtures/hlo/*.txt`` is a realistic post-SPMD HLO
+snippet exercising one parser hazard (iota + explicit replica groups,
+``-start``/``-done`` pairs, collective-permute pair lists, while bodies
+with ``known_trip_count``, tuple-typed results, ``commr::`` nesting, s4
+sub-byte shapes).  For each one the columnar scanner must be bit-identical
+to the retained per-op dict reference — and both must match the
+checked-in ``*.expected.json``, so any byte-accounting change is a
+reviewed diff, not a silent drift.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.core.hlo import (
+    CollectiveSummary,
+    computation_factors,
+    parse_hlo_collectives,
+    parse_hlo_collectives_reference,
+    parse_hlo_collectives_with_loops,
+    parse_hlo_collectives_with_loops_reference,
+    scan_hlo_collectives,
+    summarize_collectives,
+    _parse_groups,
+    _shape_bytes,
+)
+from repro.core.profiler import HloCollectiveProfiler
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+FIXTURES = sorted(glob.glob(os.path.join(FIXTURE_DIR, "*.txt")))
+
+
+def _load(path):
+    with open(path) as f:
+        text = f.read()
+    with open(path[: -len(".txt")] + ".expected.json") as f:
+        expected = json.load(f)
+    return text, expected
+
+
+@pytest.mark.parametrize(
+    "path", FIXTURES, ids=[os.path.basename(p)[: -len(".txt")] for p in FIXTURES]
+)
+def test_columnar_bit_identical_to_reference(path):
+    text, expected = _load(path)
+    td = expected["total_devices"]
+    for with_loops, ref_fn, col_fn in (
+        (False, parse_hlo_collectives_reference, parse_hlo_collectives),
+        (
+            True,
+            parse_hlo_collectives_with_loops_reference,
+            parse_hlo_collectives_with_loops,
+        ),
+    ):
+        ref = ref_fn(text, td)
+        col = col_fn(text, td)
+        assert [o.to_dict() for o in col] == [o.to_dict() for o in ref]
+        buf = scan_hlo_collectives(text, td, with_loops=with_loops)
+        assert buf.summarize().to_dict() == summarize_collectives(ref).to_dict()
+    # total_devices=None exercises the fallback group paths
+    ref = parse_hlo_collectives_reference(text, None)
+    col = parse_hlo_collectives(text, None)
+    assert [o.to_dict() for o in col] == [o.to_dict() for o in ref]
+
+
+@pytest.mark.parametrize(
+    "path", FIXTURES, ids=[os.path.basename(p)[: -len(".txt")] for p in FIXTURES]
+)
+def test_matches_checked_in_golden(path):
+    text, expected = _load(path)
+    td = expected["total_devices"]
+    buf = scan_hlo_collectives(text, td, with_loops=True)
+    got_ops = json.loads(json.dumps([o.to_dict() for o in buf.to_ops()]))
+    got_summary = json.loads(json.dumps(buf.summarize().to_dict()))
+    assert got_ops == expected["ops"]
+    assert got_summary == expected["summary"]
+    assert computation_factors(text) == expected["factors"]
+
+
+@pytest.mark.parametrize(
+    "path", FIXTURES, ids=[os.path.basename(p)[: -len(".txt")] for p in FIXTURES]
+)
+def test_region_rows_match_summary(path):
+    """The segment-reduced per-region rows agree with the summary view."""
+    text, expected = _load(path)
+    buf = scan_hlo_collectives(text, expected["total_devices"], with_loops=True)
+    rows = HloCollectiveProfiler.region_rows(buf, name="g", n_ranks=8)
+    summ = buf.summarize()
+    assert [r["region"] for r in rows] == list(summ.by_region)
+    for r in rows:
+        count, wire = summ.by_region[r["region"]]
+        assert r["hlo_ops"] == count
+        assert r["hlo_wire_bytes"] == wire
+        assert r["layer"] == "hlo" and r["profile"] == "g"
+        # "kind=count;..." string (CSV-safe, no commas)
+        kind_counts = [int(p.split("=")[1]) for p in r["hlo_kinds"].split(";")]
+        assert sum(kind_counts) == count
+        assert "," not in r["hlo_kinds"]
+    assert sum(r["hlo_wire_bytes"] for r in rows) == summ.total_wire_bytes
+
+
+# ---------------------------------------------------------------------------
+# Regression units called out by the golden corpus
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_groups_not_flattened_by_trailing_attrs():
+    """replica_groups={{0,1},{2,3}} + use_global_device_ids must give the
+    2x2 geometry, never fall through to one flat 8-wide group."""
+    rest = (
+        "param), channel_id=1, replica_groups={{0,1},{2,3}}, "
+        "use_global_device_ids=true, to_apply=%add"
+    )
+    assert _parse_groups(rest, 8) == (2, 2)
+    # nonstandard spacing silently mis-parsed with the old regex
+    spaced = "param), replica_groups={ {0,1}, {2,3} }, use_global_device_ids=true"
+    assert _parse_groups(spaced, 8) == (2, 2)
+    # unrelated brace attrs must not leak into the group list
+    with_dims = "param), replica_groups={{0,2},{1,3}}, dimensions={1}"
+    assert _parse_groups(with_dims, 8) == (2, 2)
+
+
+def test_shape_bytes_sub_byte_dtypes_round_up_once():
+    """s4/u4 accumulate in bits: odd-element tensors no longer truncate."""
+    assert _shape_bytes("s4[3]") == 2          # 12 bits (old code: 1)
+    assert _shape_bytes("s4[7,3]{1,0}") == 11  # 84 bits (old code: 10)
+    assert _shape_bytes("u4[5]") == 3          # 20 bits
+    assert _shape_bytes("(s4[1], s4[1])") == 1  # 8 bits total, one rounding
+    assert _shape_bytes("(s4[1], u4[2], s4[1])") == 2  # 16 bits
+    # integer-byte dtypes are unchanged
+    assert _shape_bytes("f32[128,512]{1,0}") == 128 * 512 * 4
+    assert _shape_bytes("(f32[4], s8[8])") == 24
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("token[]") == 0
+
+
+def test_buffer_pickles_and_stays_appendable():
+    """Pickle round-trip keeps the name-table aliasing live: ops recorded
+    after unpickling must show up in region_names / summaries."""
+    import pickle
+
+    text, expected = _load(FIXTURES[0])
+    buf = scan_hlo_collectives(text, expected["total_devices"])
+    clone = pickle.loads(pickle.dumps(buf))
+    assert [o.to_dict() for o in clone.to_ops()] == [
+        o.to_dict() for o in buf.to_ops()
+    ]
+    clone.append_op(
+        name="extra",
+        kind="all-reduce",
+        result_bytes=64,
+        operand_bytes=64,
+        group_size=2,
+        n_groups=1,
+        region="fresh_region",
+        op_name="jit(f)/commr::fresh_region/psum",
+    )
+    assert clone.n_ops == buf.n_ops + 1
+    assert clone.region_names[clone.region_ids[-1]] == "fresh_region"
+    assert "fresh_region" in clone.summarize().by_region
+    # scalar append matches the batched wire model (2 * 1/2 * 64)
+    assert int(clone.wire_bytes[-1]) == 64
+
+
+def test_golden_corpus_covers_all_kinds():
+    """The fixture set must keep exercising every collective kind."""
+    seen = CollectiveSummary()
+    for path in FIXTURES:
+        text, expected = _load(path)
+        for op in parse_hlo_collectives(text, expected["total_devices"]):
+            seen.by_kind.setdefault(op.kind, (0, 0))
+    required = {
+        "all-reduce",
+        "all-gather",
+        "reduce-scatter",
+        "all-to-all",
+        "collective-permute",
+        "collective-broadcast",
+    }
+    assert required <= set(seen.by_kind)

@@ -1,0 +1,164 @@
+"""HLO parse+reduce micro-benchmark: columnar scan vs the per-op loop.
+
+The columnar path (single-pass tokenizer -> batched NumPy columns ->
+vectorized wire model + summarize) must beat the retained per-op
+reference (one CollectiveOp dataclass + dict accounting per op) by >= 2x
+on a paper-scale generated module (>= 5k instructions), while staying
+bit-identical.
+
+Marked ``perf`` and skipped unless ``REPRO_PERF_TESTS`` is set — timing
+assertions are environment-sensitive and must not gate the tier-1 suite.
+The CI benchmark-smoke job runs them with the flag enabled.
+"""
+
+import os
+import time
+
+import pytest
+
+import hlo_gen
+from repro.core.hlo import (
+    parse_hlo_collectives_with_loops_reference,
+    scan_hlo_collectives,
+    summarize_collectives,
+)
+
+pytestmark = [
+    pytest.mark.perf,
+    pytest.mark.skipif(
+        not os.environ.get("REPRO_PERF_TESTS"),
+        reason="perf micro-benchmarks run only with REPRO_PERF_TESTS=1",
+    ),
+]
+
+N_COLLECTIVES = 2600  # several instruction lines each -> ~10k-line module
+KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+REGIONS = ("mlp", "attn", "grad", "halo", "moe")
+
+
+def _big_module() -> str:
+    """Deterministic ~10k-instruction module, one while body, mixed attrs."""
+
+    def ops(tag, n):
+        lines = []
+        for i in range(n):
+            kind = KINDS[i % len(KINDS)]
+            dtype = hlo_gen.DTYPES[i % len(hlo_gen.DTYPES)]
+            ptype = hlo_gen.type_str(dtype, (64 + i % 64, 32), layout=True)
+            producer = f"e.{tag}.{i}"
+            lines.append(
+                hlo_gen.elementwise_line(producer, ptype, [("param.0", "f32[64,32]")])
+            )
+            # realistic modules are mostly non-collective kernels: pad with
+            # plain elementwise traffic between collectives
+            for j in range(2):
+                lines.append(
+                    hlo_gen.elementwise_line(
+                        f"pad.{tag}.{i}.{j}", ptype, [(producer, ptype)]
+                    )
+                )
+            groups = pairs = None
+            if kind == "collective-permute":
+                pairs = [(r, (r + 1) % 8) for r in range(8)]
+            elif i % 3 == 0:
+                groups = ("iota", 2, 4)
+            elif i % 3 == 1:
+                groups = ("expl", [[0, 1, 2, 3], [4, 5, 6, 7]])
+            lines += hlo_gen.collective_lines(
+                f"coll.{tag}.{i}",
+                kind,
+                hlo_gen.type_str(dtype, (64, 32), layout=True),
+                [(producer, ptype)],
+                groups=groups,
+                pairs=pairs,
+                channel=i + 1,
+                use_global_ids=groups is not None and i % 2 == 0,
+                region_path=("main", REGIONS[i % len(REGIONS)]),
+                start_done=i % 7 == 0,
+                to_apply="red.0" if kind == "all-reduce" else "",
+            )
+        return lines
+
+    loop = hlo_gen.while_line(
+        "w.0", "f32[64,32]", "param.0", cond="cond.1", body="body.1", trip=6
+    )
+    blocks = [
+        hlo_gen.computation(
+            "red.0",
+            "f32[]",
+            ["  %t.red = f32[] add(f32[] %param.0, f32[] %param.0)"],
+            "t.red",
+            "f32[]",
+        ),
+        hlo_gen.computation(
+            "body.1",
+            "f32[64,32]",
+            ops("b1", N_COLLECTIVES // 2),
+            "param.0",
+            "f32[64,32]",
+        ),
+        hlo_gen.computation(
+            "cond.1",
+            "f32[64,32]",
+            ["  %p.1 = pred[] constant(true)"],
+            "param.0",
+            "f32[64,32]",
+        ),
+        hlo_gen.computation(
+            "main.0",
+            "f32[64,32]",
+            ops("m", N_COLLECTIVES - N_COLLECTIVES // 2) + [loop],
+            "param.0",
+            "f32[64,32]",
+            entry=True,
+        ),
+    ]
+    return hlo_gen.module(blocks)
+
+
+def _interleaved_best(fn_a, fn_b, rounds=7):
+    """Best-of timing with the two candidates alternating each round, so
+    background load spikes (shared CI runners) hit both evenly instead of
+    landing on one candidate's whole measurement window."""
+    best_a = best_b = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def test_columnar_parse_reduce_2x_over_per_op_loop():
+    text = _big_module()
+    n_lines = len(text.splitlines())
+    assert n_lines >= 5000, n_lines
+
+    def columnar():
+        return scan_hlo_collectives(text, 8, with_loops=True).summarize()
+
+    def per_op():
+        return summarize_collectives(
+            parse_hlo_collectives_with_loops_reference(text, 8)
+        )
+
+    col_t, ref_t = _interleaved_best(columnar, per_op)
+    buf = scan_hlo_collectives(text, 8, with_loops=True)
+    assert buf.n_ops == N_COLLECTIVES
+    print(
+        f"\n  {n_lines} HLO lines / {buf.n_ops} collectives: "
+        f"columnar {col_t * 1e3:.1f} ms vs per-op loop {ref_t * 1e3:.1f} ms "
+        f"({ref_t / col_t:.1f}x)"
+    )
+    assert col_t * 2 <= ref_t, (col_t, ref_t)
+
+    # and the outputs stay bit-identical
+    assert columnar().to_dict() == per_op().to_dict()

@@ -1,0 +1,190 @@
+"""Property tests: columnar HLO analyzer vs the dict reference.
+
+Random synthetic modules (random collective kinds, group geometries,
+dtypes incl. sub-byte, commr:: nesting, while chains with known trip
+counts, unreachable computations) generated through the ``proptest`` shim
+(real hypothesis when installed).  Asserts
+
+* ``scan_hlo_collectives`` / ``to_ops`` bit-identical to the reference
+  parse, plain and loop-scaled, across total_devices settings;
+* ``HloCollectiveBuffer.summarize`` identical to the dict summarizer;
+* ``computation_factors`` invariants: the entry factor is 1, factors
+  multiply along while edges, unreachable computations get 0.
+"""
+
+import hlo_gen
+from proptest import given, settings, st
+
+from repro.core.hlo import (
+    computation_factors,
+    parse_hlo_collectives,
+    parse_hlo_collectives_reference,
+    parse_hlo_collectives_with_loops,
+    parse_hlo_collectives_with_loops_reference,
+    scan_hlo_collectives,
+    summarize_collectives,
+)
+
+STATE_T = "f32[8,4]"
+REDUCE_KINDS = {"all-reduce", "reduce-scatter"}
+
+
+@st.composite
+def module_spec(draw):
+    """(module_text, total_devices, n_levels, trips) for one random module."""
+    n_levels = draw(st.integers(0, 3))
+    trips = []
+    for _ in range(n_levels):
+        trips.append(draw(st.integers(1, 5)) if draw(st.booleans()) else None)
+    total_devices = (4, 8, None)[draw(st.integers(0, 2))]
+
+    def draw_collective(tag, i):
+        kind = draw(st.sampled_from(hlo_gen.KINDS))
+        dtype = draw(st.sampled_from(hlo_gen.DTYPES))
+        dims = [draw(st.integers(1, 16)) for _ in range(draw(st.integers(0, 3)))]
+        result_type = hlo_gen.type_str(dtype, dims, layout=draw(st.booleans()))
+        depth = draw(st.integers(0, 3))
+        region_path = [f"r{draw(st.integers(0, 4))}" for _ in range(depth)]
+        channel = draw(st.integers(1, 99)) if draw(st.booleans()) else None
+        reducer = ""
+        if kind in REDUCE_KINDS and draw(st.booleans()):
+            reducer = "red.0"
+        groups = None
+        pairs = None
+        if kind == "collective-permute" and draw(st.booleans()):
+            n_pairs = draw(st.integers(1, 6))
+            pairs = [
+                (draw(st.integers(0, 7)), draw(st.integers(0, 7)))
+                for _ in range(n_pairs)
+            ]
+        elif draw(st.booleans()):
+            ng = draw(st.integers(1, 4))
+            gs = draw(st.integers(1, 4))
+            if draw(st.booleans()):
+                groups = ("iota", ng, gs)
+            else:
+                ids = iter(range(ng * gs))
+                mode = "expl_spaced" if draw(st.booleans()) else "expl"
+                members = [[next(ids) for _ in range(gs)] for _ in range(ng)]
+                groups = (mode, members)
+        producer = f"e.{tag}.{i}"
+        pdims = [draw(st.integers(1, 16)) for _ in range(draw(st.integers(0, 2)))]
+        ptype = hlo_gen.type_str(draw(st.sampled_from(hlo_gen.DTYPES)), pdims)
+        lines = [hlo_gen.elementwise_line(producer, ptype, [("param.0", STATE_T)])]
+        operands = [(producer, ptype)]
+        if draw(st.booleans()):
+            operands.append(("param.0", STATE_T))
+        lines += hlo_gen.collective_lines(
+            f"coll.{tag}.{i}",
+            kind,
+            result_type,
+            operands,
+            groups=groups,
+            pairs=pairs,
+            channel=channel,
+            use_global_ids=bool(groups) and draw(st.booleans()),
+            region_path=region_path,
+            start_done=draw(st.booleans()),
+            to_apply=reducer,
+        )
+        return lines
+
+    def comp_body(tag, with_while_to=None):
+        lines = []
+        for i in range(draw(st.integers(1, 3))):
+            lines.extend(draw_collective(tag, i))
+        if with_while_to is not None:
+            level, trip = with_while_to
+            lines.append(
+                hlo_gen.while_line(
+                    f"w.{tag}",
+                    STATE_T,
+                    "param.0",
+                    cond=f"cond.{level}",
+                    body=f"body.{level}",
+                    trip=trip,
+                )
+            )
+        return lines
+
+    blocks = [
+        hlo_gen.computation(
+            "red.0",
+            "f32[]",
+            ["  %t.red = f32[] add(f32[] %param.0, f32[] %param.0)"],
+            "t.red",
+            "f32[]",
+        ),
+    ]
+    # innermost body first, as XLA prints called computations
+    for level in range(n_levels, 0, -1):
+        inner = (level + 1, trips[level]) if level < n_levels else None
+        blocks.append(
+            hlo_gen.computation(
+                f"body.{level}",
+                STATE_T,
+                comp_body(f"b{level}", inner),
+                "param.0",
+                STATE_T,
+            )
+        )
+        blocks.append(
+            hlo_gen.computation(
+                f"cond.{level}",
+                STATE_T,
+                [f"  %p.{level} = pred[] constant(true)"],
+                "param.0",
+                STATE_T,
+            )
+        )
+    blocks.append(
+        hlo_gen.computation("dead.0", STATE_T, comp_body("dead"), "param.0", STATE_T)
+    )
+    entry_while = (1, trips[0]) if n_levels else None
+    blocks.append(
+        hlo_gen.computation(
+            "main.0",
+            STATE_T,
+            comp_body("main", entry_while),
+            "param.0",
+            STATE_T,
+            entry=True,
+        )
+    )
+    return hlo_gen.module(blocks), total_devices, n_levels, trips
+
+
+@settings(max_examples=25, deadline=None)
+@given(module_spec())
+def test_columnar_parity_on_random_modules(spec):
+    text, td, _, _ = spec
+    for ref_fn, col_fn, with_loops in (
+        (parse_hlo_collectives_reference, parse_hlo_collectives, False),
+        (
+            parse_hlo_collectives_with_loops_reference,
+            parse_hlo_collectives_with_loops,
+            True,
+        ),
+    ):
+        ref = ref_fn(text, td)
+        col = col_fn(text, td)
+        assert [o.to_dict() for o in col] == [o.to_dict() for o in ref]
+        assert ref  # the generator always emits at least one collective
+        buf = scan_hlo_collectives(text, td, with_loops=with_loops)
+        assert buf.summarize().to_dict() == summarize_collectives(ref).to_dict()
+
+
+@settings(max_examples=25, deadline=None)
+@given(module_spec())
+def test_computation_factor_invariants(spec):
+    text, _, n_levels, trips = spec
+    factors = computation_factors(text)
+    assert factors["main.0"] == 1
+    assert factors["dead.0"] == 0
+    expected = 1
+    for level in range(1, n_levels + 1):
+        expected *= trips[level - 1] or 1
+        assert factors[f"body.{level}"] == expected, (level, trips, factors)
+        # the loop condition runs with the parent's factor, unmultiplied
+        parent = expected // (trips[level - 1] or 1)
+        assert factors[f"cond.{level}"] == max(parent, 1)

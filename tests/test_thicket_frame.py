@@ -10,9 +10,11 @@ import json
 
 import numpy as np
 
+from repro.core.hlo import scan_hlo_collectives
 from repro.core.profiler import CommProfile, RegionStats
 from repro.core.reports import (
     bandwidth_msgrate_report,
+    hlo_vs_traced,
     per_level_report,
     scaling_report,
     table4_metrics,
@@ -128,6 +130,98 @@ def test_concat_unions_columns_across_runs():
     ranks, _ = both.column_array("n_ranks")
     assert ranks.dtype == np.int64  # matching dtypes survive concat
     assert len(Frame.concat([])) == 0
+
+
+# ---------------------------------------------------------------------------
+# Vectorized group path (np.unique over key codes; no per-row dicts)
+# ---------------------------------------------------------------------------
+
+
+def _grouping_rows(n=400):
+    rows = []
+    for i in range(n):
+        row = {"a": i % 7, "v": i}
+        if i % 3:  # sparse key column: absent cells group under None
+            row["b"] = "x" if i % 2 else "y"
+        rows.append(row)
+    return rows
+
+
+def test_group_by_materializes_no_row_dicts():
+    f = Frame(_grouping_rows())
+
+    def boom(self, i):
+        raise AssertionError("group_by materialized a row dict")
+
+    original = Frame._row
+    Frame._row = boom
+    try:
+        groups = f.group_by("a", "b")
+    finally:
+        Frame._row = original
+    assert len(groups) == 7 * 3  # 7 a-values x {"x", "y", None}
+
+
+def test_group_by_matches_legacy_row_dict_semantics():
+    f = Frame(_grouping_rows())
+    legacy: dict = {}
+    for r in f.rows:
+        legacy.setdefault((r.get("a"), r.get("b")), []).append(r)
+    groups = f.group_by("a", "b")
+    assert list(groups) == list(legacy)  # first-appearance key order
+    for key, sub in groups.items():
+        assert sub.rows == legacy[key]  # row order preserved per group
+    agg = f.agg(("a",), {"total": ("v", sum), "n": ("v", len)})
+    assert sum(r["total"] for r in agg) == sum(range(400))
+    assert sum(r["n"] for r in agg) == 400
+
+
+# ---------------------------------------------------------------------------
+# Two-layer frames (traced + compiled-HLO rows per region)
+# ---------------------------------------------------------------------------
+
+_HLO_SNIPPET = """\
+HloModule two_layer
+
+%add.r (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main.1 (p0: f32[64,4]) -> f32[64,4] {
+  %p0 = f32[64,4]{1,0} parameter(0)
+  ROOT %ar = f32[64,4]{1,0} all-reduce(f32[64,4]{1,0} %p0), channel_id=1, \
+replica_groups=[1,4]<=[4], to_apply=%add.r, \
+metadata={op_name="jit(f)/commr::halo/psum"}
+}
+"""
+
+
+def test_two_layer_frame_and_hlo_vs_traced():
+    prof = _profile("toy", 4, [("halo", 100, 10), ("solve", 40, 4)])
+    traced = Frame.from_profiles([prof])
+    assert set(traced.column("layer")) == {"traced"}
+
+    buf = scan_hlo_collectives(_HLO_SNIPPET, 4, with_loops=True)
+    hlo = Frame.from_hlo([("toy", 4, buf, {"app": "toy"})])
+    assert hlo.column("layer") == ["hlo"]
+    assert hlo.column("region") == ["halo"]
+    assert hlo.rows[0]["hlo_ops"] == 1
+    assert hlo.rows[0]["hlo_wire_bytes"] == buf.summarize().total_wire_bytes
+
+    both = Frame.concat([traced, hlo])
+    per_region = both.group_by("region")
+    assert len(per_region[("halo",)]) == 2  # one row per layer
+
+    md = hlo_vs_traced([prof], [("toy", 4, buf)])
+    lines = md.splitlines()
+    assert len(lines) == 4  # header + separator + halo + solve
+    halo_row = next(ln for ln in lines if "| halo |" in ln)
+    assert f"| {buf.summarize().total_wire_bytes} |" in halo_row
+    solve_row = next(ln for ln in lines if "| solve |" in ln)
+    assert "| 0 |" in solve_row  # no compiled-layer traffic for solve
+    assert hlo_vs_traced([], []).count("\n") == 1  # empty input: header only
 
 
 # ---------------------------------------------------------------------------
