@@ -44,23 +44,28 @@ def run_figures() -> None:
 
 
 def run_smoke(out_dir: str) -> None:
-    """CI smoke: sweep the paper's 64..512-rank kripke experiment twice.
+    """CI smoke: paper-scale cache sweep + a 4096-rank three-app sweep.
 
-    The first pass traces under the process-pool executor and populates the
+    First, the paper's 64..512-rank kripke experiment runs twice: the
+    first pass traces under the process-pool executor and populates the
     shared profile cache (the directory manifest must account for every
     worker's hits/misses exactly); the second (serial) pass must be served
-    entirely from the cache and produce byte-identical profiles.  Profile
-    JSONs plus one aggregated Thicket-frame CSV built from them land in
-    ``out_dir`` for the workflow to upload as an artifact.
+    entirely from the cache and produce byte-identical profiles.  Then the
+    structure-interned trace store's regime is exercised: every
+    ``SCALE_EXPERIMENTS`` app sweeps its 2048- and 4096-rank points and
+    the aggregated frame lands in ``scale_frame.csv``.  Profile JSONs plus
+    the Thicket-frame CSVs land in ``out_dir`` for the workflow to upload
+    as artifacts.
     """
     import time
+    from dataclasses import replace
 
     from repro.benchpark.runner import (
         ProfileCache,
         default_cache_dir,
         run_experiment,
     )
-    from repro.benchpark.spec import PAPER_EXPERIMENTS
+    from repro.benchpark.spec import PAPER_EXPERIMENTS, SCALE_EXPERIMENTS
     from repro.core.thicket import Frame
 
     spec = PAPER_EXPERIMENTS["kripke-weak-dane"]  # 64..512 ranks
@@ -95,13 +100,38 @@ def run_smoke(out_dir: str) -> None:
     frame_path = os.path.join(out_dir, "thicket_frame.csv")
     with open(frame_path, "w") as f:
         f.write(frame.to_csv())
+
+    # 4096-rank three-app sweep: the structure-interned buffer keeps
+    # trace memory O(unique_structs x n_ranks + events), so rank counts
+    # 4-8x past the paper's tables complete inside the CI budget.
+    t3 = time.perf_counter()
+    scale_profiles = []
+    for sname, sspec in SCALE_EXPERIMENTS.items():
+        pts = tuple(p for p in sspec.points if p.n_ranks <= 4096)
+        assert any(p.n_ranks == 4096 for p in pts), sname
+        scale_profiles += run_experiment(
+            replace(sspec, points=pts),
+            out_dir=out_dir,
+            cache=cache,
+            executor="process",
+        )
+    t4 = time.perf_counter()
+    scale_frame = Frame.from_profiles(scale_profiles)
+    assert len(scale_frame) >= len(scale_profiles)
+    assert any(prof.n_ranks == 4096 for prof in scale_profiles)
+    scale_path = os.path.join(out_dir, "scale_frame.csv")
+    with open(scale_path, "w") as f:
+        f.write(scale_frame.to_csv())
+
     print(
         f"smoke OK: {n} points in {out_dir}; "
         f"first pass {t1 - t0:.1f}s (executor=process, manifest "
         f"hits={served} misses={traced}), "
         f"second pass {t2 - t1:.1f}s (serial, served from cache); "
         f"aggregated frame {len(frame)} rows x {len(frame.columns())} cols "
-        f"-> {frame_path}"
+        f"-> {frame_path}; "
+        f"scale sweep ({len(scale_profiles)} points up to 4096 ranks) "
+        f"{t4 - t3:.1f}s -> {scale_path}"
     )
 
 

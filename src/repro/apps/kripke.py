@@ -24,6 +24,7 @@ bit-comparable to the single-domain reference.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -116,6 +117,7 @@ def _local_sweep(q, in_x, in_y, in_z, cfg: KripkeConfig, signs=(1, 1, 1)):
             out_face(psi, 4, sz))
 
 
+@lru_cache(maxsize=None)
 def _active_pairs(dc: Decomp3D, stage: int, axis: int, signs):
     """Global-rank (src, dst) pairs logically active at one pass stage,
     as an ``(P, 2)`` int64 array.
@@ -126,6 +128,11 @@ def _active_pairs(dc: Decomp3D, stage: int, axis: int, signs):
     slab along ``axis``, so the pair set is the row-major enumeration of
     the other two axes broadcast against the slab/neighbor offsets — no
     Python loop over ranks.
+
+    Memoized: every (dirset x groupset) message of a phase and every
+    octant revisiting the stage reuses the cached array (the recording
+    path fingerprints it without mutating), so the pair set is built once
+    per unique (decomp, stage, axis, signs).
     """
     sizes = dc.shape
     step = 1 if signs[axis] > 0 else -1

@@ -20,12 +20,16 @@ Sweep-scalability features on top of the plain loop:
   scripts.  The cache is size-capped (LRU by file mtime, refreshed on every
   hit) — see :attr:`ProfileCache.max_bytes`.
 * **Shared cache manifest** (:class:`CacheManifest`): one ``manifest.json``
-  per cache directory accumulates exact hit/miss/put/eviction totals across
-  every handle — including process-pool workers — so concurrent sweeps can
-  report per-directory accounting instead of mirroring process-local
-  counters.  Updates publish via write-temp + atomic rename, serialized by
-  an ``O_CREAT|O_EXCL`` sidecar lock (stale locks from crashed holders are
-  broken after a timeout), so no increment is ever lost.
+  per cache directory accumulates exact hit/miss/put/eviction totals (and
+  put/evicted byte counters) across every handle — including process-pool
+  workers — so concurrent sweeps can report per-directory accounting
+  instead of mirroring process-local counters.  Updates publish via
+  write-temp + atomic rename, serialized by an ``O_CREAT|O_EXCL`` sidecar
+  lock (stale locks from crashed holders are broken after a timeout), so
+  no increment is ever lost.  The byte counters also *coordinate
+  eviction*: only the handle whose put crossed
+  ``REPRO_PROFILE_CACHE_MAX_BYTES`` pays the directory scan (see
+  :meth:`ProfileCache.put`); every other concurrent writer skips it.
 * **Concurrent scaling points**: independent points of a sweep trace under
   ``executor="thread"`` (recorder/topology state is thread-local, see
   ``repro.core.regions`` / ``repro.core.topology``) or ``"process"`` — a
@@ -147,9 +151,14 @@ def _config_payload(cfg) -> dict:
 class CacheManifest:
     """Exact shared accounting for one cache directory (single JSON file).
 
-    ``manifest.json`` holds monotonic counters
-    ``{"hits", "misses", "puts", "evictions"}`` covering *every* handle that
-    ever touched the directory — threads and process-pool workers alike.
+    ``manifest.json`` holds counters
+    ``{"hits", "misses", "puts", "evictions", "put_bytes", "evicted_bytes"}``
+    covering *every* handle that ever touched the directory — threads and
+    process-pool workers alike.  All are monotonic except
+    ``evicted_bytes``, which an eviction scan adjusts by the *signed*
+    drift between the counter estimate and the listed directory size, so
+    ``put_bytes - evicted_bytes`` re-anchors to reality (never below it)
+    after every scan (see :meth:`ProfileCache._evict`).
     :meth:`bump` serializes writers on an ``O_CREAT|O_EXCL`` sidecar lock
     and publishes the updated file via write-temp + atomic ``os.replace``,
     so concurrent increments are never lost and readers always see a
@@ -162,7 +171,7 @@ class CacheManifest:
     """
 
     FILENAME = "manifest.json"
-    FIELDS = ("hits", "misses", "puts", "evictions")
+    FIELDS = ("hits", "misses", "puts", "evictions", "put_bytes", "evicted_bytes")
     STALE_LOCK_SECONDS = 10.0
 
     def __init__(self, root: str):
@@ -219,8 +228,14 @@ class CacheManifest:
         finally:
             os.close(fd)
 
-    def bump(self, **deltas: int) -> None:
-        """Atomically add ``deltas`` to the shared counters."""
+    def bump(self, **deltas: int) -> dict:
+        """Atomically add ``deltas`` to the shared counters.
+
+        Returns the post-update totals snapshot — callers coordinating on
+        a counter crossing (see :meth:`ProfileCache.put`) decide from this
+        atomically-published value, so exactly one handle observes any
+        given crossing.
+        """
         os.makedirs(self.root, exist_ok=True)
         fd = self._acquire_lock()
         try:
@@ -233,6 +248,7 @@ class CacheManifest:
             os.replace(tmp, self.path)  # atomic publish
         finally:
             self._release_lock(fd)
+        return data
 
 
 class ProfileCache:
@@ -246,9 +262,11 @@ class ProfileCache:
 
     Entries publish via write-temp + atomic rename, so a directory can be
     shared by concurrent threads and worker processes.  ``max_bytes`` caps
-    the directory size: after every put, least-recently-used entries (by
-    mtime; hits refresh it) are evicted until under the cap.  Default from
-    ``REPRO_PROFILE_CACHE_MAX_BYTES`` (<= 0 disables the cap).
+    the directory size: least-recently-used entries (by mtime; hits
+    refresh it) are evicted until under the cap, and the scan is
+    manifest-coordinated — only the handle whose put crossed the cap runs
+    it (see :meth:`put`).  Default from ``REPRO_PROFILE_CACHE_MAX_BYTES``
+    (<= 0 disables the cap).
 
     ``hits`` / ``misses`` count this handle's traffic only; the directory's
     exact cross-handle totals live in :attr:`manifest` (see
@@ -266,10 +284,10 @@ class ProfileCache:
         self.misses = 0
         self.manifest = CacheManifest(self.root)
         self._lock = threading.Lock()
-        # Amortized eviction state: directory bytes as of the last scan
-        # (None = never scanned) + bytes written by this handle since.
-        self._scanned_total: Optional[int] = None
-        self._written_since_scan = 0
+        # First cap check of this handle: a pre-existing directory may
+        # already sit above a (new or lowered) cap without any put ever
+        # "crossing" it — the first over-cap observation scans once.
+        self._synced = False
 
     def key(self, app: str, cfg, decomp) -> str:
         payload = {
@@ -304,6 +322,24 @@ class ProfileCache:
         return prof
 
     def put(self, key: str, profile: CommProfile) -> None:
+        """Publish a profile; manifest-coordinated cap enforcement.
+
+        Every put bumps the shared ``puts`` / ``put_bytes`` counters and
+        reads back the atomically-published totals.  The directory size
+        estimate is ``put_bytes - evicted_bytes`` (overwrites overcount —
+        which only makes a scan fire early), and **only the handle whose
+        put crossed a ``max_bytes`` boundary scans the directory**: the
+        crossing is observed from the snapshot ``bump`` returns under the
+        manifest lock, so among any number of threads and worker
+        processes exactly one put sees the estimate pass any given cap
+        multiple, and everyone else skips the O(entries) listdir
+        entirely.  The winning scan re-anchors the estimate to the real
+        directory size (see :meth:`_evict`), arming the next crossing.
+        One exception keeps pre-existing oversized directories bounded:
+        a handle's first put while the estimate already sits past its cap
+        (cap lowered between runs, or differing caps across handles)
+        scans once even though no crossing was observed.
+        """
         os.makedirs(self.root, exist_ok=True)
         path = self._path(key)
         data = profile.to_json()
@@ -311,23 +347,49 @@ class ProfileCache:
         with open(tmp, "w") as f:
             f.write(data)
         os.replace(tmp, path)  # atomic publish
-        self.manifest.bump(puts=1)
+        fresh_manifest = not os.path.exists(self.manifest.path)
+        totals = self.manifest.bump(puts=1, put_bytes=len(data))
         if self.max_bytes is None or self.max_bytes <= 0:
             return
-        # Amortized cap check: only pay the full directory scan when the
-        # last-known total plus bytes written since could exceed the cap
-        # (overwrites overcount, which just triggers a rescan early).
-        with self._lock:
-            self._written_since_scan += len(data)
-            known = self._scanned_total
-            pending = self._written_since_scan
-        if known is None or known + pending > self.max_bytes:
+        est_post = totals.get("put_bytes", 0) - totals.get("evicted_bytes", 0)
+        est_pre = est_post - len(data)
+        first_check = not self._synced
+        self._synced = True
+        # The put whose bytes crossed a cap *boundary* (any multiple of
+        # max_bytes) scans: the first boundary is the cap itself, and the
+        # multiples guarantee that even an estimate parked above the cap
+        # (re-put overcounting, concurrent-scan races) arms exactly one
+        # new scan per further cap-worth of put bytes — the estimate
+        # never undercounts reality, so the directory is bounded by one
+        # cap of transient overshoot.  Two safety valves on a handle's
+        # first capped put cover counter drift a boundary can't: an
+        # estimate already past the cap scans once (cap lowered between
+        # runs, mixed-cap handles), and the writer that found no manifest
+        # at all scans once (reset/removed manifest over a directory that
+        # may still hold entries — the scan re-anchors the estimate to
+        # the real size, in either direction).
+        if est_pre // self.max_bytes < est_post // self.max_bytes or (
+            first_check and (est_post > self.max_bytes or fresh_manifest)
+        ):
             self._evict()
 
     def _evict(self) -> None:
-        """Drop least-recently-used entries until under ``max_bytes``."""
+        """Drop least-recently-used entries until under ``max_bytes``.
+
+        Also re-anchors the shared size estimate: after the scan the real
+        directory total is known, so any drift accumulated by monotonic
+        ``put_bytes`` over-counting (overwrites) is folded into
+        ``evicted_bytes`` — the estimate tracks reality and the next cap
+        crossing is again observed by exactly one handle.
+        """
         if self.max_bytes is None or self.max_bytes <= 0:
             return
+        # Snapshot the counters BEFORE listing: the fold below then makes
+        # the post-scan estimate exactly (listed total + bytes put since
+        # the snapshot) — greater than or equal to the real directory
+        # size, so estimate error is always on the safe (early-rescan)
+        # side and never disables future crossings.
+        snapshot = self.manifest.read()
         entries = []
         try:
             names = os.listdir(self.root)
@@ -354,11 +416,15 @@ class ProfileCache:
                 total -= size
                 if total <= self.max_bytes:
                     break
-        if evicted:
-            self.manifest.bump(evictions=evicted)
-        with self._lock:
-            self._scanned_total = total
-            self._written_since_scan = 0
+        # Exact re-anchor: fold the *signed* difference between the
+        # snapshot estimate and the listed post-eviction total.  Positive
+        # fold credits our removals plus any overcount; a negative fold
+        # (manifest undercounting reality, e.g. after a reset) raises the
+        # estimate back up to the real size.  Clamping here would leave
+        # evicted bytes uncredited and latch the crossing trigger off.
+        fold = snapshot.get("put_bytes", 0) - snapshot.get("evicted_bytes", 0) - total
+        if evicted or fold:
+            self.manifest.bump(evictions=evicted, evicted_bytes=fold)
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,13 @@ declarative description of a scaling study over one of the three apps; the
 runner materializes each point as a config, profiles it (trace-only — no
 devices needed thanks to AbstractMesh), and stores CommProfile JSONs.
 
-The paper's own experiments (Table III) ship as ``PAPER_EXPERIMENTS``.
+The paper's own experiments (Table III) ship as ``PAPER_EXPERIMENTS``
+(64..512 ranks, the published Dane/Tioga rows).  ``SCALE_EXPERIMENTS``
+extends each app into the structure-interned trace store's regime —
+2048 / 4096 / 8192 ranks — now that buffer memory is
+O(unique_structs x n_ranks + events) rather than O(events x n_ranks)
+(see ``repro.core.regions``); the CI benchmark smoke runs the three apps
+at up to 4096 ranks from these specs.
 """
 
 from __future__ import annotations
@@ -18,7 +24,7 @@ from repro.apps.stencil import Decomp3D
 
 @dataclass(frozen=True)
 class ScalePoint:
-    decomp: tuple                  # (px, py, pz)
+    decomp: tuple  # (px, py, pz)
     label: str = ""
 
     @property
@@ -30,9 +36,9 @@ class ScalePoint:
 @dataclass(frozen=True)
 class ExperimentSpec:
     name: str
-    app: str                       # kripke | amg | laghos
-    scaling: str                   # weak | strong
-    points: tuple                  # ScalePoints
+    app: str  # kripke | amg | laghos
+    scaling: str  # weak | strong
+    points: tuple  # ScalePoints
     app_params: dict = field(default_factory=dict)
     system: str = "tpu-v5e-pod"
     # roofline seconds per step are attached by the runner so bandwidth /
@@ -42,6 +48,7 @@ class ExperimentSpec:
         from repro.apps.amg import AMGConfig
         from repro.apps.kripke import KripkeConfig
         from repro.apps.laghos import LaghosConfig
+
         out = []
         for pt in self.points:
             dc = Decomp3D(*pt.decomp)
@@ -52,7 +59,7 @@ class ExperimentSpec:
             elif self.app == "laghos":
                 params = dict(self.app_params)
                 if self.scaling == "strong":
-                    pass   # global size fixed in app_params
+                    pass  # global size fixed in app_params
                 cfg = LaghosConfig(decomp=dc, **params)
             else:
                 raise ValueError(self.app)
@@ -67,34 +74,100 @@ class ExperimentSpec:
 # ---------------------------------------------------------------------------
 
 _DANE_POINTS = (
-    ScalePoint((4, 4, 4)), ScalePoint((8, 4, 4)),
-    ScalePoint((8, 8, 4)), ScalePoint((8, 8, 8)),
+    ScalePoint((4, 4, 4)),
+    ScalePoint((8, 4, 4)),
+    ScalePoint((8, 8, 4)),
+    ScalePoint((8, 8, 8)),
 )
 _TIOGA_POINTS = (
-    ScalePoint((2, 2, 2)), ScalePoint((4, 2, 2)),
-    ScalePoint((4, 4, 2)), ScalePoint((4, 4, 4)),
+    ScalePoint((2, 2, 2)),
+    ScalePoint((4, 2, 2)),
+    ScalePoint((4, 4, 2)),
+    ScalePoint((4, 4, 4)),
 )
 
 PAPER_EXPERIMENTS = {
     "kripke-weak-dane": ExperimentSpec(
-        name="kripke-weak-dane", app="kripke", scaling="weak",
+        name="kripke-weak-dane",
+        app="kripke",
+        scaling="weak",
         points=_DANE_POINTS,
-        app_params=dict(nx=16, ny=32, nz=32, n_octants=2,
-                        fuse_messages=False)),
+        app_params=dict(nx=16, ny=32, nz=32, n_octants=2, fuse_messages=False),
+    ),
     "kripke-weak-tioga": ExperimentSpec(
-        name="kripke-weak-tioga", app="kripke", scaling="weak",
+        name="kripke-weak-tioga",
+        app="kripke",
+        scaling="weak",
         points=_TIOGA_POINTS,
-        app_params=dict(nx=16, ny=32, nz=32, n_octants=2,
-                        fuse_messages=False)),
+        app_params=dict(nx=16, ny=32, nz=32, n_octants=2, fuse_messages=False),
+    ),
     "amg-weak-dane": ExperimentSpec(
-        name="amg-weak-dane", app="amg", scaling="weak",
-        points=_DANE_POINTS, app_params=dict(nx=32, ny=32, nz=16)),
+        name="amg-weak-dane",
+        app="amg",
+        scaling="weak",
+        points=_DANE_POINTS,
+        app_params=dict(nx=32, ny=32, nz=16),
+    ),
     "amg-weak-tioga": ExperimentSpec(
-        name="amg-weak-tioga", app="amg", scaling="weak",
-        points=_TIOGA_POINTS, app_params=dict(nx=32, ny=32, nz=16)),
+        name="amg-weak-tioga",
+        app="amg",
+        scaling="weak",
+        points=_TIOGA_POINTS,
+        app_params=dict(nx=32, ny=32, nz=16),
+    ),
     "laghos-strong": ExperimentSpec(
-        name="laghos-strong", app="laghos", scaling="strong",
-        points=(ScalePoint((4, 4, 1)), ScalePoint((8, 4, 1)),
-                ScalePoint((8, 8, 1)), ScalePoint((16, 8, 1))),
-        app_params=dict(nx=512, ny=512, n_steps=2)),
+        name="laghos-strong",
+        app="laghos",
+        scaling="strong",
+        points=(
+            ScalePoint((4, 4, 1)),
+            ScalePoint((8, 4, 1)),
+            ScalePoint((8, 8, 1)),
+            ScalePoint((16, 8, 1)),
+        ),
+        app_params=dict(nx=512, ny=512, n_steps=2),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper scale: 2048 / 4096 / 8192 ranks.  z stays <= 8 wide so the
+# AMG hierarchy bottoms out exactly like the published Dane rows (the
+# gathered coarse level is reached at global z = 8); kripke traces the
+# TPU-native fused message path, one octant, so the traced graph grows
+# with stage count, not message count.
+# ---------------------------------------------------------------------------
+
+_SCALE_POINTS_3D = (
+    ScalePoint((16, 16, 8)),  # 2048
+    ScalePoint((32, 16, 8)),  # 4096
+    ScalePoint((32, 32, 8)),  # 8192
+)
+
+SCALE_EXPERIMENTS = {
+    "kripke-weak-scale": ExperimentSpec(
+        name="kripke-weak-scale",
+        app="kripke",
+        scaling="weak",
+        points=_SCALE_POINTS_3D,
+        app_params=dict(nx=16, ny=32, nz=32, n_octants=1, fuse_messages=True),
+    ),
+    "amg-weak-scale": ExperimentSpec(
+        name="amg-weak-scale",
+        app="amg",
+        scaling="weak",
+        points=_SCALE_POINTS_3D,
+        app_params=dict(nx=32, ny=32, nz=16),
+    ),
+    "laghos-strong-scale": ExperimentSpec(
+        name="laghos-strong-scale",
+        app="laghos",
+        scaling="strong",
+        points=(
+            ScalePoint((64, 32, 1)),  # 2048
+            ScalePoint((64, 64, 1)),  # 4096
+            ScalePoint((128, 64, 1)),  # 8192
+        ),
+        app_params=dict(nx=512, ny=512, n_steps=2),
+    ),
 }

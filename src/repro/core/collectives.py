@@ -27,29 +27,36 @@ Following Caliper's schema (paper Table I), point-to-point-like patterns
 increment the region's collective-call count ("Coll") and a collective-bytes
 extension field.
 
-Profiling data model
---------------------
+Profiling data model (memoized recording)
+-----------------------------------------
 
-Event capture is **columnar** (see :mod:`repro.core.regions` for the
-:class:`TraceBuffer` schema): when a recorder is active, each wrapper calls
-``regions.record_p2p`` / ``regions.record_collective``, which append the
-call's dense per-rank count/byte vectors and CSR peer-set pairs straight
-into the recorder's structure-of-arrays buffer.  No per-event Python object
-and no Python loop over ranks exist anywhere on the recording path — the
-per-event cost is O(pairs) vector work rather than O(n_ranks) interpreter
-work, and the profiler later reduces whole columns at once.
+Event capture is **columnar and structure-interned** (see
+:mod:`repro.core.regions` for the :class:`TraceBuffer` / ``StructTable``
+schema): when a recorder is active, each wrapper calls
+``regions.record_p2p`` / ``regions.record_collective``, which fingerprint
+the call's pair/group arrays and append one scalar row into the recorder's
+buffer.  No per-event Python object exists anywhere on the recording path,
+and the whole chain is memoized end to end:
 
-* Point-to-point capture turns a ``(P, 2)`` array of global ``(src, dst)``
-  pairs into dense send/recv count and byte vectors with one ``np.add.at``
-  scatter each, and into the destination/source peer-*set* pair columns by
-  uniquing ``src * n + dst`` pair codes (row-sorted by construction).  The
-  byte vectors preserve the ppermute convention above: every pair moves the
-  full ``nbytes`` of the permuted operand.
-* Collective capture broadcasts the per-rank ring-equivalent byte cost (the
-  ``bytes_factor`` column of the table above, evaluated at the
-  communicator-group size) over the flattened group arrays returned by
-  ``topology.groups`` — collective peer sets are implicit (complete graph
-  within each group) and never materialized.
+* ``topology.expand_pairs`` / ``topology.groups`` cache their global-rank
+  broadcasts per (axis, permutation) / axis-set key — apps re-issue the
+  same patterns every stage, step, and cycle, so each distinct expansion
+  is built once per topology;
+* the buffer's struct table fingerprints the expanded arrays and stores
+  the O(n_ranks) structure — dense send/recv count and byte-unit vectors
+  from one ``np.add.at`` scatter each, destination/source peer-*set* pair
+  columns from uniquing ``src * n + dst`` pair codes — **once per unique
+  structure**, so a repeat call costs O(pairs) fingerprint bytes instead
+  of O(n_ranks) recompute and storage;
+* identical consecutive calls (kripke's 36 per-(dirset, groupset) messages
+  of one phase) collapse into a single row with a multiplicity count.
+
+Byte vectors preserve the conventions above: every ppermute pair moves the
+full ``nbytes`` of the permuted operand, and collective capture broadcasts
+the per-rank ring-equivalent cost (the ``bytes_factor`` column of the
+table, evaluated at the communicator-group size) over the group members —
+collective peer sets are implicit (complete graph within each group) and
+never materialized.
 
 :func:`build_p2p_event` / :func:`build_collective_event` remain as
 compatibility constructors that materialize a single :class:`RegionEvent`
@@ -93,11 +100,13 @@ def _flatten(tree):
 
 # ---------------------------------------------------------------------------
 # RegionEvent view constructors (compatibility/adapters; the recording path
-# appends into the recorder's columnar TraceBuffer without building these)
+# appends into the recorder's interned TraceBuffer without building these)
 # ---------------------------------------------------------------------------
 
-def build_p2p_event(kind: str, axis_name, pairs, n: int,
-                    nbytes: int) -> _regions.RegionEvent:
+
+def build_p2p_event(
+    kind: str, axis_name, pairs, n: int, nbytes: int
+) -> _regions.RegionEvent:
     """Array-native point-to-point RegionEvent from global (src, dst) pairs.
 
     ``pairs`` is any ``(P, 2)``-shaped sequence/array of global rank pairs;
@@ -111,17 +120,25 @@ def build_p2p_event(kind: str, axis_name, pairs, n: int,
     return _regions.RegionEvent(
         region=_regions.current_region() or _regions.UNANNOTATED_REGION,
         region_path=_regions.current_region_path(),
-        kind=kind, n_ranks=n,
-        sends=sends, recvs=recvs,
-        bytes_sent=sends * nbytes, bytes_recv=recvs * nbytes,
-        dest_indptr=dptr, dest_indices=dind,
-        src_indptr=sptr, src_indices=sind,
+        kind=kind,
+        n_ranks=n,
+        sends=sends,
+        recvs=recvs,
+        bytes_sent=sends * nbytes,
+        bytes_recv=recvs * nbytes,
+        dest_indptr=dptr,
+        dest_indices=dind,
+        src_indptr=sptr,
+        src_indices=sind,
         participants=np.ones(n, bool),
-        is_collective=0, axis_name=str(axis_name))
+        is_collective=0,
+        axis_name=str(axis_name),
+    )
 
 
-def build_collective_event(kind: str, axis_name, groups: np.ndarray, n: int,
-                           per_rank_bytes: int) -> _regions.RegionEvent:
+def build_collective_event(
+    kind: str, axis_name, groups: np.ndarray, n: int, per_rank_bytes: int
+) -> _regions.RegionEvent:
     """Array-native collective RegionEvent.
 
     ``groups`` is the ``(n_groups, group_size)`` global-rank array from
@@ -139,21 +156,30 @@ def build_collective_event(kind: str, axis_name, groups: np.ndarray, n: int,
     return _regions.RegionEvent(
         region=_regions.current_region() or _regions.UNANNOTATED_REGION,
         region_path=_regions.current_region_path(),
-        kind=kind, n_ranks=n,
-        sends=zero, recvs=zero.copy(),
-        bytes_sent=bytes_vec, bytes_recv=bytes_vec.copy(),
-        dest_indptr=dptr, dest_indices=dind,
-        src_indptr=sptr, src_indices=sind,
+        kind=kind,
+        n_ranks=n,
+        sends=zero,
+        recvs=zero.copy(),
+        bytes_sent=bytes_vec,
+        bytes_recv=bytes_vec.copy(),
+        dest_indptr=dptr,
+        dest_indices=dind,
+        src_indptr=sptr,
+        src_indices=sind,
         participants=participants,
-        is_collective=1, axis_name=str(axis_name))
+        is_collective=1,
+        axis_name=str(axis_name),
+    )
 
 
 # ---------------------------------------------------------------------------
 # Point-to-point-like pattern: ppermute (TPU-native halo exchange primitive)
 # ---------------------------------------------------------------------------
 
-def ppermute(x, axis_name, perm: Sequence[tuple],
-             record_pairs: Sequence[tuple] | None = None):
+
+def ppermute(
+    x, axis_name, perm: Sequence[tuple], record_pairs: Sequence[tuple] | None = None
+):
     """Instrumented ``lax.ppermute``.
 
     ``perm`` is a sequence of ``(src, dst)`` index pairs along ``axis_name``.
@@ -174,21 +200,24 @@ def ppermute(x, axis_name, perm: Sequence[tuple],
         if record_pairs is not None:
             pairs = record_pairs
             n = topo.n_ranks if topo is not None else _axis_size(axis_name)
-        elif topo is not None and isinstance(axis_name, str) \
-                and axis_name in topo.names:
-            pairs = topo.expand_pairs(axis_name, perm)
+        elif (
+            topo is not None
+            and isinstance(axis_name, str)
+            and axis_name in topo.names
+        ):
+            pairs = topo.expand_pairs(axis_name, perm)  # memoized per topology
             n = topo.n_ranks
         else:
             pairs = perm
             n = _axis_size(axis_name)
         _regions.record_p2p("ppermute", axis_name, pairs, n, total)
-    return jax.tree.map(
-        lambda leaf: lax.ppermute(leaf, axis_name, perm=list(perm)), x)
+    return jax.tree.map(lambda leaf: lax.ppermute(leaf, axis_name, perm=list(perm)), x)
 
 
 # ---------------------------------------------------------------------------
 # Collectives
 # ---------------------------------------------------------------------------
+
 
 def _record_collective(kind, x, axis_name, bytes_factor) -> None:
     if _regions.active_recorder() is None:
@@ -196,10 +225,11 @@ def _record_collective(kind, x, axis_name, bytes_factor) -> None:
     topo = active_topology()
     total = sum(_nbytes(leaf) for leaf in _flatten(x))
     names_ok = topo is not None and all(
-        n in topo.names for n in ([axis_name] if isinstance(axis_name, str)
-                                  else list(axis_name)))
+        n in topo.names
+        for n in ([axis_name] if isinstance(axis_name, str) else list(axis_name))
+    )
     if names_ok:
-        groups = topo.groups(axis_name)
+        groups = topo.groups(axis_name)  # memoized per topology
         n_total = topo.n_ranks
         gsize = int(groups.shape[1]) if groups.size else 1
         per_rank = int(total * bytes_factor(max(1, gsize)))
@@ -235,19 +265,18 @@ def all_gather(x, axis_name, *, axis: int = 0, tiled: bool = False):
     return lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
 
 
-def psum_scatter(x, axis_name, *, scatter_dimension: int = 0,
-                 tiled: bool = False):
-    _record_collective("reduce_scatter", x, axis_name,
-                       lambda n: (n - 1) / n)
-    return lax.psum_scatter(x, axis_name,
-                            scatter_dimension=scatter_dimension, tiled=tiled)
+def psum_scatter(x, axis_name, *, scatter_dimension: int = 0, tiled: bool = False):
+    _record_collective("reduce_scatter", x, axis_name, lambda n: (n - 1) / n)
+    return lax.psum_scatter(
+        x, axis_name, scatter_dimension=scatter_dimension, tiled=tiled
+    )
 
 
-def all_to_all(x, axis_name, split_axis: int, concat_axis: int, *,
-               tiled: bool = False):
+def all_to_all(x, axis_name, split_axis: int, concat_axis: int, *, tiled: bool = False):
     _record_collective("all_to_all", x, axis_name, lambda n: (n - 1) / n)
-    return lax.all_to_all(x, axis_name, split_axis=split_axis,
-                          concat_axis=concat_axis, tiled=tiled)
+    return lax.all_to_all(
+        x, axis_name, split_axis=split_axis, concat_axis=concat_axis, tiled=tiled
+    )
 
 
 def pbroadcast(x, axis_name, root: int = 0):
@@ -258,7 +287,11 @@ def pbroadcast(x, axis_name, root: int = 0):
     """
     _record_collective("broadcast", x, axis_name, lambda n: (n - 1) / n)
     idx = lax.axis_index(axis_name)
-    mask = (idx == root).astype(jnp.result_type(x) if jnp.issubdtype(
-        jnp.result_type(x), jnp.floating) else jnp.float32)
+    mask = (idx == root).astype(
+        jnp.result_type(x)
+        if jnp.issubdtype(jnp.result_type(x), jnp.floating)
+        else jnp.float32
+    )
     return jax.tree.map(
-        lambda leaf: lax.psum(leaf * mask.astype(leaf.dtype), axis_name), x)
+        lambda leaf: lax.psum(leaf * mask.astype(leaf.dtype), axis_name), x
+    )

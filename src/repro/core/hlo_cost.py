@@ -15,6 +15,17 @@ Bytes: every top-level instruction that represents a real kernel (fusion,
 dot, reduce, data movement, collectives) contributes operand + result bytes
 — the same convention cost_analysis uses for "bytes accessed" on fused
 post-optimization HLO.
+
+:func:`analyze_cost` runs on the collective analyzer's **single-pass
+tokenizer**: one ``_SCAN_M_RE`` finditer over the whole module text yields
+computation headers and instructions in order (no per-computation
+re-split and no per-line regex dispatch), shape-byte and dimension parsing
+are memoized per distinct type string, and the call-graph factors relax
+from the same pass's keyword-prefiltered edge candidates
+(``repro.core.hlo._edge_lines`` / ``_relax_factors``).  The original
+two-pass implementation is retained as :func:`analyze_cost_reference` —
+the executable specification the tokenizer path is parity-tested against
+(``tests/test_hlo_golden.py``).
 """
 
 from __future__ import annotations
@@ -23,13 +34,25 @@ import math
 import re
 from dataclasses import dataclass
 
-from repro.core.hlo import (_INSTR_RE, _OPERANDS_RE, _shape_bytes,
-                            computation_factors, split_computations)
+from repro.core.hlo import (
+    _INSTR_RE,
+    _OPERANDS_RE,
+    _SCAN_M_RE,
+    _edge_lines,
+    _relax_factors,
+    _shape_bytes,
+    _shape_bytes_cached,
+    computation_factors,
+    split_computations,
+)
 
 _SHAPE_DIMS_RE = re.compile(r"[a-z0-9]+\[([0-9,]*)\]")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLEE_RE = re.compile(r"calls=%?([\w.\-$]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-$]+)")
 
 # ops that move memory (post-fusion top-level kernels)
+# fmt: off
 _MEM_OPS = {
     "fusion", "dot", "convolution", "reduce", "copy", "transpose",
     "broadcast", "concatenate", "pad", "slice", "reverse", "convert",
@@ -43,6 +66,7 @@ _MEM_OPS = {
     "ceil", "round-nearest-afz", "cbrt", "logistic", "sine", "cosine",
     "atan2", "rem", "shift-left", "shift-right-logical", "xor",
 }
+# fmt: on
 
 
 def _dims(type_str: str) -> list:
@@ -52,22 +76,128 @@ def _dims(type_str: str) -> list:
     return [int(d) for d in m.group(1).split(",") if d]
 
 
+#: type-string -> dims memo (shapes repeat heavily within a module; the
+#: tokenizer path resolves each distinct type string once).
+_DIMS_MEMO: dict = {}
+
+
+def _dims_cached(type_str: str) -> list:
+    d = _DIMS_MEMO.get(type_str)
+    if d is None:
+        d = _dims(type_str)
+        if len(_DIMS_MEMO) < 65536:
+            _DIMS_MEMO[type_str] = d
+    return d
+
+
 @dataclass
 class CostSummary:
-    flops: float = 0.0           # per-device, trip-count-scaled
+    flops: float = 0.0  # per-device, trip-count-scaled
     bytes_accessed: float = 0.0  # per-device, trip-count-scaled
     dot_flops_unscaled: float = 0.0
 
 
+def _accumulate(parsed, result_types, factors, shape_bytes, dims) -> CostSummary:
+    """Shared accounting core over pre-tokenized instruction rows.
+
+    ``parsed`` maps computation name -> [(name, type_str, opkind, rest)]
+    in appearance order; ``factors`` maps names to execution counts.
+    ``shape_bytes`` / ``dims`` let the tokenizer path plug in the memoized
+    parsers while the reference keeps the plain ones — the arithmetic and
+    accumulation order are identical either way (bit-identical floats).
+    """
+    # Fusion bodies and reduction combiners are *inlined* kernels: their
+    # traffic is the fusion op's operand/result bytes at the call site.
+    inlined: set = set()
+    for rows in parsed.values():
+        for _name, _type_str, opkind, rest in rows:
+            if opkind == "fusion":
+                for m in _CALLEE_RE.finditer(rest):
+                    inlined.add(m.group(1))
+            if "to_apply=" in rest:
+                for m in _TO_APPLY_RE.finditer(rest):
+                    inlined.add(m.group(1))
+
+    out = CostSummary()
+    for cname, rows in parsed.items():
+        factor = factors.get(cname, 1)
+        if factor == 0 or cname in inlined:
+            continue
+        for _name, type_str, opkind, rest in rows:
+            base = opkind[:-6] if opkind.endswith("-start") else opkind
+            if base.endswith("-done"):
+                continue
+            if base == "dot":
+                res = dims(type_str)
+                lhs_m = _OPERANDS_RE.search(rest)
+                k = 1
+                cm = _LHS_C_RE.search(rest)
+                if lhs_m and cm and lhs_m.group(1) in result_types:
+                    lhs_dims = dims(result_types[lhs_m.group(1)])
+                    for ci in (int(c) for c in cm.group(1).split(",") if c):
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                fl = 2.0 * math.prod(res) * k if res else 0.0
+                out.flops += factor * fl
+                out.dot_flops_unscaled += fl
+            if base in _MEM_OPS:
+                b = shape_bytes(type_str)
+                arg_str = rest.split("),", 1)[0]
+                for op in _OPERANDS_RE.findall(arg_str):
+                    if op in result_types:
+                        b += shape_bytes(result_types[op])
+                out.bytes_accessed += factor * b
+    return out
+
+
 def analyze_cost(hlo_text: str) -> CostSummary:
+    """Trip-count-scaled FLOP/byte totals via the single-pass tokenizer."""
+    comp_names = ["<preamble>"]
+    header_offsets: list = []
+    entry = None
+    result_types: dict = {}
+    parsed: dict = {"<preamble>": []}
+    rows = parsed["<preamble>"]
+    for m in _SCAN_M_RE.finditer(hlo_text):
+        name, type_str, opkind = m.group(3, 4, 5)
+        if name is None:  # "[ENTRY ]%name (args) -> type {" header
+            cname = m.group(2)
+            comp_names.append(cname)
+            header_offsets.append(m.start())
+            # duplicate names replace earlier content, like the
+            # reference's split_computations
+            parsed[cname] = []
+            rows = parsed[cname]
+            if m.group(1):
+                entry = cname
+            continue
+        result_types[name] = type_str
+        rows.append((name, type_str, opkind, m.group(6)))
+
+    if entry is not None:
+        edge_lines = _edge_lines(hlo_text, header_offsets)
+        factors = dict(zip(comp_names, _relax_factors(comp_names, edge_lines, entry)))
+    else:
+        factors = {c: 1 for c in comp_names}
+    return _accumulate(
+        parsed, result_types, factors, _shape_bytes_cached, _dims_cached
+    )
+
+
+def analyze_cost_reference(hlo_text: str) -> CostSummary:
+    """The original two-pass accounting (per-computation re-parse).
+
+    Retained as the executable specification :func:`analyze_cost` is
+    parity-tested against on the golden HLO corpus and on real compiled
+    modules.
+    """
     comps, entry = split_computations(hlo_text)
-    factors = computation_factors(hlo_text) if entry else \
-        {c: 1 for c in comps}
+    factors = computation_factors(hlo_text) if entry else {c: 1 for c in comps}
 
     # result types for operand lookup (global namespace is fine: names are
     # unique across computations in post-optimization HLO)
-    result_types: dict[str, str] = {}
-    parsed: dict[str, list] = {}
+    result_types: dict = {}
+    parsed: dict = {}
     for cname, lines in comps.items():
         rows = []
         for line in lines:
@@ -79,44 +209,4 @@ def analyze_cost(hlo_text: str) -> CostSummary:
             rows.append((name, type_str, opkind, rest))
         parsed[cname] = rows
 
-    # Fusion bodies and reduction combiners are *inlined* kernels: their
-    # traffic is the fusion op's operand/result bytes at the call site.
-    inlined: set = set()
-    for cname, rows in parsed.items():
-        for name, type_str, opkind, rest in rows:
-            if opkind == "fusion":
-                for m in re.finditer(r"calls=%?([\w.\-$]+)", rest):
-                    inlined.add(m.group(1))
-            for m in re.finditer(r"to_apply=%?([\w.\-$]+)", rest):
-                inlined.add(m.group(1))
-
-    out = CostSummary()
-    for cname, rows in parsed.items():
-        factor = factors.get(cname, 1)
-        if factor == 0 or cname in inlined:
-            continue
-        for name, type_str, opkind, rest in rows:
-            base = opkind[:-6] if opkind.endswith("-start") else opkind
-            if base.endswith("-done"):
-                continue
-            if base == "dot":
-                res = _dims(type_str)
-                lhs_m = _OPERANDS_RE.search(rest)
-                k = 1
-                cm = _LHS_C_RE.search(rest)
-                if lhs_m and cm and lhs_m.group(1) in result_types:
-                    lhs_dims = _dims(result_types[lhs_m.group(1)])
-                    for ci in (int(c) for c in cm.group(1).split(",") if c):
-                        if ci < len(lhs_dims):
-                            k *= lhs_dims[ci]
-                fl = 2.0 * math.prod(res) * k if res else 0.0
-                out.flops += factor * fl
-                out.dot_flops_unscaled += fl
-            if base in _MEM_OPS:
-                b = _shape_bytes(type_str)
-                arg_str = rest.split("),", 1)[0]
-                for op in _OPERANDS_RE.findall(arg_str):
-                    if op in result_types:
-                        b += _shape_bytes(result_types[op])
-                out.bytes_accessed += factor * b
-    return out
+    return _accumulate(parsed, result_types, factors, _shape_bytes, _dims)

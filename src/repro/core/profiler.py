@@ -198,26 +198,33 @@ def segment_reduce(
 class CommPatternProfiler:
     """Reduces a RegionRecorder's columnar trace into RegionStats.
 
-    Events live in the recorder's structure-of-arrays
-    :class:`~repro.core.regions.TraceBuffer` (dense per-rank count/byte
-    slabs plus CSR peer-set pair columns — see the data-model section of
-    :mod:`repro.core.regions`).  Two implementations with bit-identical
-    output:
+    Events live in the recorder's structure-interned
+    :class:`~repro.core.regions.TraceBuffer`: scalar rows ``(region, path,
+    kind, axis, struct_id, nbytes, multiplicity)`` referencing unique
+    communication structures in a :class:`~repro.core.regions.StructTable`
+    (dense per-rank count/byte-unit slabs plus CSR peer-set pair columns —
+    see the data-model section of :mod:`repro.core.regions`).  Two
+    implementations with bit-identical output:
 
-    * ``impl="numpy"`` (default) — the hot path.  Grouped segment
-      reductions over the whole buffer: events are ordered by region once,
-      dense slabs are laid into an (events x max-extent) grid, and every
-      statistic is computed with a single ``np.add.reduceat`` /
-      ``np.logical_or.reduceat``-style pass across *all* regions at once
-      (distinct source/destination ranks via one ``np.unique`` over encoded
-      (region, rank, peer) codes; per-rank min/max via masked axis
-      reductions).  There is no per-event or per-rank Python anywhere —
-      cost is O(total trace entries) vector work regardless of event count.
+    * ``impl="numpy"`` (default) — the hot path.  Multiplicity-weighted
+      reductions over ``(struct_id, weight)``: rows accumulate into
+      (region x struct) weight matrices — event counts scale by
+      ``multiplicity``, bytes by ``multiplicity * nbytes`` — and every
+      per-rank grid is one exact int64 matmul of a weight matrix against
+      the struct table's dense slabs, laid out once as (struct x
+      max-extent) grids.  Distinct source/destination ranks deduplicate
+      over *unique* (region, struct) combinations only (multiplicity
+      cannot change a set union), via one bitmap scatter / ``np.unique``
+      over encoded (region, rank, peer) codes; per-rank min/max are masked
+      axis reductions.  There is no per-event or per-rank Python anywhere —
+      cost is O(unique structs x max extent + rows) vector work regardless
+      of the logical event count.
     * ``impl="reference"`` — the original dict-of-dicts accounting, kept
-      as the executable specification; it consumes RegionEvent views
-      through ``RegionEvent.to_dicts()``.  The parity tests in
-      ``tests/test_profiler_parity.py`` assert equality on randomized
-      event streams and on the real kripke/amg/laghos profile paths.
+      as the executable specification; it consumes multiplicity-expanded
+      RegionEvent views through ``RegionEvent.to_dicts()``.  The parity
+      tests in ``tests/test_profiler_parity.py`` assert equality on
+      randomized event streams and on the real kripke/amg/laghos profile
+      paths, with interning on and off.
     """
 
     @staticmethod
@@ -256,13 +263,14 @@ class CommPatternProfiler:
             for ev in rec.events:
                 buf.append_event(ev)
 
-        E = buf.n_events
+        R = buf.n_rows
         rids = buf.region_ids
-        # Output region order matches the reference: first-event appearance,
-        # then regions that were entered but recorded no communication
-        # (pure-compute phases like Kripke's "solve" still get a row — the
-        # paper's Fig. 1 compares compute vs communication regions).
-        if E:
+        # Output region order matches the reference: first-event appearance
+        # (multiplicity collapse preserves first-row order), then regions
+        # that were entered but recorded no communication (pure-compute
+        # phases like Kripke's "solve" still get a row — the paper's Fig. 1
+        # compares compute vs communication regions).
+        if R:
             uniq, first = np.unique(rids, return_index=True)
             ordered = uniq[np.argsort(first, kind="stable")]
         else:
@@ -274,24 +282,25 @@ class CommPatternProfiler:
 
         gid_of_rid = np.zeros(max(len(buf.region_names), 1), np.int64)
         gid_of_rid[ordered] = np.arange(G)
-        g_of_event = gid_of_rid[rids]
+        g_of_row = gid_of_rid[rids]
 
-        lens = buf.rank_lens
-        indptr = buf.rank_indptr()
-        Rmax = int(lens.max()) if E else 0
-        # Uniform traces (every event spans the same rank extent — the shape
-        # every real app trace has) reduce by pure reshape, no scatter.
-        uniform = E > 0 and Rmax > 0 and int(lens.min()) == Rmax
+        tab = buf.structs
+        S = tab.n_structs
+        lens = tab.rank_lens
+        indptr = tab.rank_indptr()
+        Rmax = int(lens.max()) if S else 0
+        sid = buf.struct_ids
+        mult = buf.multiplicity
+        scale = buf.nbytes
         is_coll = buf.is_collective.astype(bool)
-        p2p_ids = np.flatnonzero(~is_coll)
-        coll_ids = np.flatnonzero(is_coll)
+        p2p = ~is_coll
 
-        # Per-region per-rank grids, (G, Rmax).  Events order once by the
-        # composite (region, is_collective) key; each flat dense column then
-        # reduces with a single ``reduceat`` pass across all regions at
-        # once, and the segment key routes each reduced row to the
-        # point-to-point or the collective accumulator.  Traces that are
-        # already region-contiguous skip the permutation entirely.
+        # Per-region per-rank grids, (G, Rmax), via multiplicity-weighted
+        # reductions over the unique structures: rows accumulate into
+        # (G, S) weight matrices (counts weighted by multiplicity, bytes
+        # by multiplicity * nbytes), and each grid is one exact int64
+        # matmul of a weight matrix against the struct table's dense
+        # slabs laid out once as (S, Rmax) matrices.
         sends_g = np.zeros((G, Rmax), np.int64)
         recvs_g = np.zeros((G, Rmax), np.int64)
         bsent_g = np.zeros((G, Rmax), np.int64)
@@ -299,71 +308,83 @@ class CommPatternProfiler:
         cbytes_g = np.zeros((G, Rmax), np.int64)
         part_g = np.zeros((G, Rmax), bool)
         cpart_g = np.zeros((G, Rmax), bool)
-        if E and Rmax:
-            key = g_of_event * 2 + is_coll
-            order, key_sorted, starts, ends = segment_spans(key)
-            seg_g = key_sorted[starts] // 2
-            seg_coll = (key_sorted[starts] % 2).astype(bool)
-
+        if R and Rmax:
+            # Uniform struct tables (every structure spans the same rank
+            # extent — the shape every real app trace has) lay out by pure
+            # reshape; ragged tables scatter into a rectangular grid via
+            # one precomputed (source, destination) index pair.
+            uniform = int(lens.min()) == Rmax
             if not uniform:
-                # Ragged slabs scatter into a rectangular grid via one
-                # precomputed (source, destination) index pair.
-                ev = order if order is not None else np.arange(E)
-                lens_e = lens[ev]
-                m = int(lens_e.sum())
-                rows = np.repeat(np.arange(E), lens_e)
-                offs = np.zeros(E, np.int64)
-                np.cumsum(lens_e[:-1], out=offs[1:])
-                within = np.arange(m) - np.repeat(offs, lens_e)
-                src_idx = np.repeat(indptr[ev], lens_e) + within
-                flat_pos = rows * Rmax + within
+                m = int(lens.sum())
+                srows = np.repeat(np.arange(S), lens)
+                offs = np.zeros(S, np.int64)
+                np.cumsum(lens[:-1], out=offs[1:])
+                within = np.arange(m) - np.repeat(offs, lens)
+                src_idx = np.repeat(indptr[:-1], lens) + within
+                flat_pos = srows * Rmax + within
 
             def layout(col: np.ndarray) -> np.ndarray:
                 if uniform:
-                    grid = col.reshape(E, Rmax)
-                    return grid[order] if order is not None else grid
-                grid = np.zeros((E, Rmax), col.dtype)
+                    return col.reshape(S, Rmax)
+                grid = np.zeros((S, Rmax), col.dtype)
                 grid.reshape(-1)[flat_pos] = col[src_idx]
                 return grid
 
-            def reduce_split(col, ufunc, p2p_out, coll_out) -> None:
-                # One contiguous block reduction per (region, kind) segment
-                # — shared kernel with the HLO-layer profiler.
-                red = block_reduce(layout(col), starts, ends, ufunc)
-                if p2p_out is not None:
-                    p2p_out[seg_g[~seg_coll]] = red[~seg_coll]
-                if coll_out is not None:
-                    coll_out[seg_g[seg_coll]] = red[seg_coll]
+            part_i = layout(tab.participants).astype(np.int64)
+            wc = np.zeros((G, S), np.int64)
+            wb = np.zeros((G, S), np.int64)
+            wcm = np.zeros((G, S), np.int64)
+            wcb = np.zeros((G, S), np.int64)
+            np.add.at(wc, (g_of_row[p2p], sid[p2p]), mult[p2p])
+            np.add.at(wb, (g_of_row[p2p], sid[p2p]), mult[p2p] * scale[p2p])
+            np.add.at(wcm, (g_of_row[is_coll], sid[is_coll]), mult[is_coll])
+            np.add.at(
+                wcb, (g_of_row[is_coll], sid[is_coll]), mult[is_coll] * scale[is_coll]
+            )
 
-            reduce_split(buf.sends, np.add, sends_g, None)
-            reduce_split(buf.recvs, np.add, recvs_g, None)
-            reduce_split(buf.bytes_sent, np.add, bsent_g, cbytes_g)
-            reduce_split(buf.bytes_recv, np.add, brecv_g, None)
-            reduce_split(buf.participants, np.logical_or, part_g, cpart_g)
+            sends_g = wc @ layout(tab.sends)
+            recvs_g = wc @ layout(tab.recvs)
+            bsent_g = wb @ layout(tab.bsent_units)
+            brecv_g = wb @ layout(tab.brecv_units)
+            cbytes_g = wcb @ layout(tab.bsent_units)
+            part_g = ((wc > 0).astype(np.int64) @ part_i) > 0
+            cpart_g = ((wcm > 0).astype(np.int64) @ part_i) > 0
+
+        # Unique (region, struct) combinations of point-to-point rows —
+        # shared by both peer-set sides (repetition cannot change a union).
+        if R and S:
+            combos = np.unique(g_of_row[p2p] * S + sid[p2p])
+            gu, su = combos // S, combos % S
+        else:
+            gu = su = np.zeros(0, np.int64)
 
         def distinct_grid(
-            rows_col: np.ndarray, peers_col: np.ndarray, lens_col: np.ndarray
+            rows_col: np.ndarray,
+            peers_col: np.ndarray,
+            lens_col: np.ndarray,
+            tab_indptr: np.ndarray,
         ) -> np.ndarray:
             """|union of peer sets| per (region, rank), deduplicated.
 
-            Cross-event duplicates collapse via a boolean presence bitmap
+            Only the unique (region, struct) combinations contribute.
+            Cross-struct duplicates collapse via a boolean presence bitmap
             over the (region, rank, peer) code space when it is small (one
             vector scatter + a row sum — no sort), falling back to
             ``np.unique`` over the encoded pair codes otherwise.
             """
-            if not E or Rmax == 0 or not len(rows_col):
+            if not R or Rmax == 0 or not len(rows_col):
                 return np.zeros((G, Rmax), np.int64)
-            if len(coll_ids) and int(lens_col[coll_ids].sum()):
-                keep = np.repeat(~is_coll, lens_col)
-                rows = rows_col[keep]
-                peers = peers_col[keep]
-                gp = np.repeat(g_of_event, lens_col)[keep]
-            else:  # canonical traces: collectives contribute no peer pairs
-                rows = rows_col
-                peers = peers_col
-                gp = np.repeat(g_of_event, lens_col)
-            if not len(rows):
+            ln = lens_col[su]
+            m = int(ln.sum())
+            if m == 0:
                 return np.zeros((G, Rmax), np.int64)
+            offs = np.zeros(len(su), np.int64)
+            np.cumsum(ln[:-1], out=offs[1:])
+            within = np.arange(m) - np.repeat(offs, ln)
+            src_idx = np.repeat(tab_indptr[su], ln) + within
+            rows = rows_col[src_idx]
+            peers = peers_col[src_idx]
+            gp = np.repeat(gu, ln)
             stride = np.int64(int(peers.max()) + 1)
             codes = (gp * Rmax + rows) * stride + peers
             cells = G * Rmax * int(stride)
@@ -372,26 +393,28 @@ class CommPatternProfiler:
                 bitmap[codes] = True
                 counts = bitmap.reshape(G * Rmax, int(stride)).sum(axis=1)
             else:
-                uniq = np.unique(codes)
-                counts = np.bincount(uniq // stride, minlength=G * Rmax)
+                uniq2 = np.unique(codes)
+                counts = np.bincount(uniq2 // stride, minlength=G * Rmax)
             return counts.reshape(G, Rmax).astype(np.int64, copy=False)
 
-        dests_g = distinct_grid(buf.dest_rows, buf.dest_peers, buf.dest_lens)
-        srcs_g = distinct_grid(buf.src_rows, buf.src_peers, buf.src_lens)
+        dests_g = distinct_grid(
+            tab.dest_rows, tab.dest_peers, tab.dest_lens, tab.dest_indptr()
+        )
+        srcs_g = distinct_grid(
+            tab.src_rows, tab.src_peers, tab.src_lens, tab.src_indptr()
+        )
 
-        # Per-event scalar columns reduce to per-region scalars directly.
-        if len(coll_ids):
-            coll_counts = np.bincount(g_of_event[coll_ids], minlength=G)
-        else:
-            coll_counts = np.zeros(G, np.int64)
+        # Per-row scalar columns reduce to per-region scalars directly
+        # (counts weighted by multiplicity; largest is a max, unweighted).
+        coll_counts = np.zeros(G, np.int64)
         largest_r = np.zeros(G, np.int64)
-        if len(p2p_ids):
-            np.maximum.at(largest_r, g_of_event[p2p_ids], buf.largest[p2p_ids])
+        if R:
+            np.add.at(coll_counts, g_of_row[is_coll], mult[is_coll])
+            np.maximum.at(largest_r, g_of_row[p2p], buf.largest[p2p])
         K = len(buf.kind_names)
         kind_counts = np.zeros((G, K), np.int64)
-        if E and K:
-            kc = np.bincount(g_of_event * K + buf.kind_ids, minlength=G * K)
-            kind_counts = kc.reshape(G, K)
+        if R and K:
+            np.add.at(kind_counts, (g_of_row, buf.kind_ids), mult)
 
         def mm(grid: np.ndarray, mask: np.ndarray) -> tuple:
             """(min, max) per region over the participant-masked rank axis."""

@@ -36,63 +36,89 @@ under is provided by :mod:`repro.core.compat`, which keeps this layer
 working across JAX API churn (0.4.x through >= 0.5) — see compat's module
 docstring for the supported versions and contract.
 
-Columnar trace store (profiling data model)
--------------------------------------------
+Structure-interned columnar trace store (profiling data model)
+--------------------------------------------------------------
 
-Event capture is **structure-of-arrays**: the recorder owns a
-:class:`TraceBuffer` and the instrumented collectives append straight into
-its columns — no per-event Python object is built on the hot recording
-path.  :class:`RegionEvent` survives as a *view/adapter*: ``buffer.event(i)``
-materializes the i-th event on demand (array slices of the columns), and
-``RegionEvent.from_dicts`` / ``to_dicts`` adapt the legacy dict-of-dicts
-form for the reference profiler and for parity tests.
+Event capture is **structure-of-arrays** and **structure-interned**: the
+recorder owns a :class:`TraceBuffer` and the instrumented collectives
+append straight into its columns — no per-event Python object is built on
+the hot recording path, and no per-event O(n_ranks) state is stored.
 
-Column schema (all appended with amortized O(1) growth, capacity-doubling
-backing arrays; ``E`` events recorded so far):
+Applications replay a tiny set of unique communication structures (kripke
+emits the same wavefront-diagonal pairs for all 36 dirset x groupset
+messages of a phase and revisits stages across octants; laghos repeats
+identical halo/CG structures every step; amg repeats per-level structures
+every cycle), so the O(n_ranks) payload of an event — dense per-rank
+count/byte vectors, participant mask, CSR peer-set pairs — is stored
+**once per unique structure** in a content-fingerprinted
+:class:`StructTable`, and events shrink to scalar rows that reference a
+``struct_id``.  Memory is O(unique_structs x n_ranks + events) instead of
+O(events x n_ranks), and recording skips :func:`p2p_structure` entirely on
+a fingerprint hit.
 
-* Per-event scalar columns, ``[E]``:
+Row schema (per-event scalar columns; consecutive identical events
+collapse into one row at record time, so ``n_rows <= n_events``):
 
-  - ``region_ids`` / ``path_ids`` / ``kind_ids`` / ``axis_ids`` — **interned**
-    int32 codes into the buffer's ``region_names`` / ``region_paths`` /
-    ``kind_names`` / ``axis_names`` tables (each distinct string/tuple is
-    stored once, events carry 4-byte ids);
-  - ``is_collective`` — uint8 flag (1 = all-reduce-like, 0 = point-to-point);
-  - ``largest`` — int64 largest single message of the event (bytes), computed
-    from the dense vectors at append time so region-level "largest send" is a
-    pure segment ``max`` later;
-  - ``rank_lens`` — int64 extent of the event's dense per-rank slab;
-  - ``dest_lens`` / ``src_lens`` — int64 number of (rank, peer) pairs the
-    event contributed to the CSR peer-set columns.
+* ``region_ids`` / ``path_ids`` / ``kind_ids`` / ``axis_ids`` — **interned**
+  int32 codes into ``region_names`` / ``region_paths`` / ``kind_names`` /
+  ``axis_names`` (each distinct string/tuple stored once);
+* ``is_collective`` — uint8 flag (1 = all-reduce-like, 0 = point-to-point);
+* ``struct_ids`` — int64 id into the buffer's :class:`StructTable`;
+* ``nbytes`` — int64 byte scale of the event (per-message bytes for
+  point-to-point events, per-rank ring-equivalent bytes for collectives,
+  1 for adapter-appended raw events whose byte vectors are stored
+  explicitly in the struct);
+* ``multiplicity`` — int64 number of identical consecutive events this
+  row stands for (>= 1; the profiler weights its reductions by it);
+* ``largest`` — int64 largest single message of the event (bytes); for
+  point-to-point appends this is simply ``nbytes`` when the event has any
+  pair and 0 otherwise.
 
-* Dense per-rank columns, one slab of ``rank_lens[e]`` entries per event
-  (event-major; slab ``e`` spans ``rank_indptr[e]:rank_indptr[e + 1]``):
+Struct-table schema (``S`` unique structures; struct ``s`` spans
+``rank_indptr()[s]:rank_indptr()[s + 1]`` of the dense slabs and
+``dest_indptr()`` / ``src_indptr()`` runs of the CSR pair columns):
 
-  - ``sends`` / ``recvs`` — int64 message counts per rank;
-  - ``bytes_sent`` / ``bytes_recv`` — int64 bytes per rank;
-  - ``participants`` — bool mask of ranks taking part in the call.  Dense
-    values are zero and peer rows empty outside the mask (the *canonical
-    form*; :meth:`RegionEvent.from_dicts` canonicalizes legacy dicts).
-
-* CSR peer-set columns (destination and source sides), one run of
-  ``dest_lens[e]`` / ``src_lens[e]`` pairs per event: ``dest_rows`` holds the
-  owning rank of each pair and ``dest_peers`` the distinct peer, row-major
-  with sorted unique peers per row (ditto ``src_rows`` / ``src_peers``).
-  This is the classic CSR (indptr, indices) encoding with the indptr stored
-  implicitly as per-event pair counts; ``RegionEvent`` views rebuild the
-  explicit ``indptr`` on demand.
+* ``rank_lens`` — int64 extent of the dense per-rank slab (the event's
+  ``n_ranks``);
+* ``sends`` / ``recvs`` — int64 message counts per rank (zero slabs for
+  collective structures);
+* ``bsent_units`` / ``brecv_units`` — int64 **unit** byte vectors; an
+  event's per-rank bytes are ``unit * nbytes``.  For point-to-point
+  structures the units equal the count vectors, for collective structures
+  they are the 0/1 participant indicator, and for raw adapter events they
+  hold the explicit byte vectors (scale 1);
+* ``participants`` — bool mask of ranks taking part in the call (dense
+  values are zero and peer rows empty outside the mask — the *canonical
+  form*; :meth:`RegionEvent.from_dicts` canonicalizes legacy dicts);
+* ``dest_rows`` / ``dest_peers`` and ``src_rows`` / ``src_peers`` —
+  duplicate-free (rank, peer) pair columns of the destination/source peer
+  sets, row-major with sorted unique peers per row, with per-struct pair
+  counts in ``dest_lens`` / ``src_lens``.
 
 For point-to-point events the participants are the ranks of the permutation's
 axis groups; for collective events they are the communicator-group members,
-and only ``bytes_sent``/``bytes_recv`` carry information — the peer structure
-of a collective is implicit (complete graph within each group) and is not
+and only the byte units carry information — the peer structure of a
+collective is implicit (complete graph within each group) and is not
 materialized.  Byte accounting follows the conventions documented in
 :mod:`repro.core.collectives` (ring-equivalent traffic per rank).
 
-The buffer is plain ``str``/``int``/ndarray state, so it pickles cheaply —
-this is what allows the benchpark runner to trace scaling points in a
-*process* pool and ship profiles between workers.  The profiler
-(:mod:`repro.core.profiler`) consumes the columns directly with grouped
-segment reductions; it never materializes per-event objects.
+:class:`RegionEvent` survives as a *view/adapter*: ``buffer.event(i)``
+materializes the i-th **logical** event on demand (multiplicity-expanded
+indexing; array slices of the struct slabs scaled by the row's ``nbytes``),
+and ``RegionEvent.from_dicts`` / ``to_dicts`` adapt the legacy
+dict-of-dicts form for the reference profiler and for parity tests.
+``TraceBuffer(intern=False)`` disables fingerprinting and multiplicity
+collapse (one struct row per event) — the pre-interning reference layout
+the perf suite compares against; both modes produce identical logical
+event streams and bit-identical profiles.
+
+The buffer is plain ``str``/``int``/ndarray state (the fingerprint table
+pickles alongside it), so it pickles cheaply — this is what allows the
+benchpark runner to trace scaling points in a *process* pool and ship
+profiles between workers.  The profiler (:mod:`repro.core.profiler`)
+consumes the columns directly with multiplicity-weighted segment
+reductions over the unique structures; it never materializes per-event
+objects.
 """
 
 from __future__ import annotations
@@ -132,6 +158,13 @@ def _rows_to_csr(rows: np.ndarray, indices: np.ndarray, n: int) -> tuple:
     return indptr, np.asarray(indices, np.int64)
 
 
+def _as_pair_array(pairs) -> np.ndarray:
+    """Canonical contiguous (P, 2) int64 pair array (fingerprintable)."""
+    if not isinstance(pairs, np.ndarray):
+        pairs = np.asarray(list(pairs), np.int64)
+    return np.ascontiguousarray(pairs.astype(np.int64, copy=False)).reshape(-1, 2)
+
+
 def p2p_structure(pairs, n: int) -> tuple:
     """Dense count vectors + distinct peer-pair columns from (src, dst) pairs.
 
@@ -142,9 +175,7 @@ def p2p_structure(pairs, n: int) -> tuple:
     with sorted unique peers per row (one ``np.unique`` over encoded pair
     codes per side — no Python loop over ranks or pairs).
     """
-    if not isinstance(pairs, np.ndarray):
-        pairs = list(pairs)
-    pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+    pairs = _as_pair_array(pairs)
     src, dst = pairs[:, 0], pairs[:, 1]
     sends = np.zeros(n, np.int64)
     recvs = np.zeros(n, np.int64)
@@ -202,9 +233,17 @@ class Column:
         self._data[self._n : need] = values
         self._n = need
 
+    def add_last(self, delta) -> None:
+        """In-place bump of the most recent value (multiplicity collapse)."""
+        self._data[self._n - 1] += delta
+
     def view(self) -> np.ndarray:
         """The live prefix (no copy; treat as read-only)."""
         return self._data[: self._n]
+
+    def storage_nbytes(self) -> int:
+        """Live-prefix storage bytes (growth headroom excluded)."""
+        return self._n * self._data.dtype.itemsize
 
     # compact pickles: drop the unused growth capacity
     def __getstate__(self) -> tuple:
@@ -263,17 +302,269 @@ class Interner:
         self._ids = {v: i for i, v in enumerate(values)}
 
 
-class TraceBuffer:
-    """Columnar (structure-of-arrays) store of recorded collective calls.
+class StructTable:
+    """Content-fingerprinted store of unique communication structures.
 
-    See the module docstring for the column schema.  One buffer belongs to
-    one :class:`RegionRecorder`; the instrumented collectives append via
-    :func:`record_p2p` / :func:`record_collective`, and the profiler reduces
-    the columns directly.  ``event(i)`` / ``to_events()`` materialize
-    :class:`RegionEvent` views for adapters and the reference profiler.
+    Each unique ``(pairs, n)`` point-to-point structure / ``(groups, n)``
+    communicator structure / raw adapter event payload is stored **once**
+    (dense per-rank slabs + CSR peer-set pair columns — see the module
+    docstring for the column schema); :class:`TraceBuffer` rows reference
+    structs by id.  ``intern_*`` fingerprints the raw array bytes and
+    skips :func:`p2p_structure` (and the dense scatters) entirely on a
+    hit; ``insert_*`` bypass the fingerprint table (the ``intern=False``
+    reference layout, one struct per event).
     """
 
     def __init__(self) -> None:
+        self._fp: dict = {}
+        # Per-struct scalar columns.
+        self._rank_len = Column(np.int64)
+        self._dest_len = Column(np.int64)
+        self._src_len = Column(np.int64)
+        # Dense per-rank slabs (struct-major).
+        self._sends = Column(np.int64)
+        self._recvs = Column(np.int64)
+        self._bsent_unit = Column(np.int64)
+        self._brecv_unit = Column(np.int64)
+        self._participants = Column(bool)
+        # CSR peer-set pair columns (runs of dest_lens[s] / src_lens[s]).
+        self._dest_rows = Column(np.int64)
+        self._dest_peers = Column(np.int64)
+        self._src_rows = Column(np.int64)
+        self._src_peers = Column(np.int64)
+
+    # -- column views (live prefixes, read-only) ----------------------------
+
+    @property
+    def n_structs(self) -> int:
+        return len(self._rank_len)
+
+    @property
+    def rank_lens(self) -> np.ndarray:
+        return self._rank_len.view()
+
+    @property
+    def dest_lens(self) -> np.ndarray:
+        return self._dest_len.view()
+
+    @property
+    def src_lens(self) -> np.ndarray:
+        return self._src_len.view()
+
+    @property
+    def sends(self) -> np.ndarray:
+        return self._sends.view()
+
+    @property
+    def recvs(self) -> np.ndarray:
+        return self._recvs.view()
+
+    @property
+    def bsent_units(self) -> np.ndarray:
+        return self._bsent_unit.view()
+
+    @property
+    def brecv_units(self) -> np.ndarray:
+        return self._brecv_unit.view()
+
+    @property
+    def participants(self) -> np.ndarray:
+        return self._participants.view()
+
+    @property
+    def dest_rows(self) -> np.ndarray:
+        return self._dest_rows.view()
+
+    @property
+    def dest_peers(self) -> np.ndarray:
+        return self._dest_peers.view()
+
+    @property
+    def src_rows(self) -> np.ndarray:
+        return self._src_rows.view()
+
+    @property
+    def src_peers(self) -> np.ndarray:
+        return self._src_peers.view()
+
+    def rank_indptr(self) -> np.ndarray:
+        """int64[S + 1] slab boundaries of the dense per-rank columns."""
+        return _indptr(self.rank_lens)
+
+    def dest_indptr(self) -> np.ndarray:
+        return _indptr(self.dest_lens)
+
+    def src_indptr(self) -> np.ndarray:
+        return _indptr(self.src_lens)
+
+    def storage_nbytes(self) -> int:
+        """Live storage bytes across every column (fingerprint keys excluded)."""
+        cols = (
+            self._rank_len,
+            self._dest_len,
+            self._src_len,
+            self._sends,
+            self._recvs,
+            self._bsent_unit,
+            self._brecv_unit,
+            self._participants,
+            self._dest_rows,
+            self._dest_peers,
+            self._src_rows,
+            self._src_peers,
+        )
+        return sum(c.storage_nbytes() for c in cols)
+
+    # -- interning / insertion ----------------------------------------------
+
+    def intern_p2p(self, pairs: np.ndarray, n: int) -> int:
+        """Struct id of a (pairs, n) point-to-point structure (memoized).
+
+        ``pairs`` must be the canonical contiguous (P, 2) int64 array
+        (see ``_as_pair_array``); on a fingerprint hit no structure is
+        recomputed and no slab is appended.
+        """
+        key = (0, int(n), pairs.tobytes())
+        sid = self._fp.get(key)
+        if sid is None:
+            sid = self.insert_p2p(pairs, n)
+            self._fp[key] = sid
+        return sid
+
+    def intern_collective(self, members: np.ndarray, n: int) -> int:
+        """Struct id of a (group members, n) collective structure (memoized)."""
+        key = (1, int(n), members.tobytes())
+        sid = self._fp.get(key)
+        if sid is None:
+            sid = self.insert_collective(members, n)
+            self._fp[key] = sid
+        return sid
+
+    def intern_event(self, ev: "RegionEvent") -> int:
+        """Struct id of a raw adapter event's payload (memoized)."""
+        key = (
+            2,
+            int(ev.n_ranks),
+            np.asarray(ev.sends, np.int64).tobytes(),
+            np.asarray(ev.recvs, np.int64).tobytes(),
+            np.asarray(ev.bytes_sent, np.int64).tobytes(),
+            np.asarray(ev.bytes_recv, np.int64).tobytes(),
+            np.asarray(ev.participants, bool).tobytes(),
+            np.asarray(ev.dest_indptr, np.int64).tobytes(),
+            np.asarray(ev.dest_indices, np.int64).tobytes(),
+            np.asarray(ev.src_indptr, np.int64).tobytes(),
+            np.asarray(ev.src_indices, np.int64).tobytes(),
+        )
+        sid = self._fp.get(key)
+        if sid is None:
+            sid = self.insert_event(ev)
+            self._fp[key] = sid
+        return sid
+
+    def insert_p2p(self, pairs: np.ndarray, n: int) -> int:
+        sends, recvs, drows, dpeers, srows, speers = p2p_structure(pairs, n)
+        return self._append(
+            n=n,
+            sends=sends,
+            recvs=recvs,
+            bsent_unit=sends,
+            brecv_unit=recvs,
+            participants=np.ones(n, bool),
+            dest_rows=drows,
+            dest_peers=dpeers,
+            src_rows=srows,
+            src_peers=speers,
+        )
+
+    def insert_collective(self, members: np.ndarray, n: int) -> int:
+        unit = np.zeros(n, np.int64)
+        unit[members] = 1
+        zero = np.zeros(n, np.int64)
+        empty = np.zeros(0, np.int64)
+        return self._append(
+            n=n,
+            sends=zero,
+            recvs=zero,
+            bsent_unit=unit,
+            brecv_unit=unit,
+            participants=unit.astype(bool),
+            dest_rows=empty,
+            dest_peers=empty,
+            src_rows=empty,
+            src_peers=empty,
+        )
+
+    def insert_event(self, ev: "RegionEvent") -> int:
+        ranks = np.arange(ev.n_ranks, dtype=np.int64)
+        return self._append(
+            n=ev.n_ranks,
+            sends=ev.sends,
+            recvs=ev.recvs,
+            bsent_unit=ev.bytes_sent,
+            brecv_unit=ev.bytes_recv,
+            participants=ev.participants,
+            dest_rows=np.repeat(ranks, np.diff(ev.dest_indptr)),
+            dest_peers=ev.dest_indices,
+            src_rows=np.repeat(ranks, np.diff(ev.src_indptr)),
+            src_peers=ev.src_indices,
+        )
+
+    def _append(
+        self,
+        *,
+        n: int,
+        sends: np.ndarray,
+        recvs: np.ndarray,
+        bsent_unit: np.ndarray,
+        brecv_unit: np.ndarray,
+        participants: np.ndarray,
+        dest_rows: np.ndarray,
+        dest_peers: np.ndarray,
+        src_rows: np.ndarray,
+        src_peers: np.ndarray,
+    ) -> int:
+        sid = len(self._rank_len)
+        self._rank_len.push(n)
+        self._dest_len.push(len(dest_rows))
+        self._src_len.push(len(src_rows))
+        self._sends.extend(sends)
+        self._recvs.extend(recvs)
+        self._bsent_unit.extend(bsent_unit)
+        self._brecv_unit.extend(brecv_unit)
+        self._participants.extend(participants)
+        self._dest_rows.extend(dest_rows)
+        self._dest_peers.extend(dest_peers)
+        self._src_rows.extend(src_rows)
+        self._src_peers.extend(src_peers)
+        return sid
+
+
+def _indptr(lens: np.ndarray) -> np.ndarray:
+    out = np.zeros(len(lens) + 1, np.int64)
+    np.cumsum(lens, out=out[1:])
+    return out
+
+
+class TraceBuffer:
+    """Structure-interned columnar store of recorded collective calls.
+
+    See the module docstring for the row and struct-table schemas.  One
+    buffer belongs to one :class:`RegionRecorder`; the instrumented
+    collectives append via :func:`record_p2p` / :func:`record_collective`,
+    and the profiler reduces the columns directly with
+    multiplicity-weighted segment reductions.  ``event(i)`` /
+    ``to_events()`` materialize :class:`RegionEvent` views for adapters
+    and the reference profiler (logical, multiplicity-expanded indexing).
+
+    ``intern=False`` reproduces the pre-interning reference layout: every
+    append inserts a fresh struct row (no fingerprint lookup, no
+    multiplicity collapse) — same logical stream, O(events x n_ranks)
+    memory; the perf suite measures interned against it.
+    """
+
+    def __init__(self, intern: bool = True) -> None:
+        self._intern = bool(intern)
+        self.structs = StructTable()
         # Interning tables (shared Interner); the *_names attributes alias
         # the interners' id-ordered value tables, so existing consumers
         # keep indexing plain lists.
@@ -285,27 +576,17 @@ class TraceBuffer:
         self.region_paths: list = self._paths.values
         self.kind_names: list = self._kinds.values
         self.axis_names: list = self._axes.values
-        # Per-event scalar columns.
+        # Per-row scalar columns (one row per run of identical events).
         self._region = Column(np.int32)
         self._path = Column(np.int32)
         self._kind = Column(np.int32)
         self._axis = Column(np.int32)
         self._is_coll = Column(np.uint8)
+        self._struct = Column(np.int64)
+        self._nbytes = Column(np.int64)
+        self._mult = Column(np.int64)
         self._largest = Column(np.int64)
-        self._rank_len = Column(np.int64)
-        self._dest_len = Column(np.int64)
-        self._src_len = Column(np.int64)
-        # Dense per-rank columns (event-major slabs of rank_lens[e] entries).
-        self._sends = Column(np.int64)
-        self._recvs = Column(np.int64)
-        self._bytes_sent = Column(np.int64)
-        self._bytes_recv = Column(np.int64)
-        self._participants = Column(bool)
-        # CSR peer-set pair columns (runs of dest_lens[e] / src_lens[e]).
-        self._dest_rows = Column(np.int64)
-        self._dest_peers = Column(np.int64)
-        self._src_rows = Column(np.int64)
-        self._src_peers = Column(np.int64)
+        self._n_events = 0
 
     # -- interning ----------------------------------------------------------
 
@@ -316,6 +597,12 @@ class TraceBuffer:
 
     @property
     def n_events(self) -> int:
+        """Logical event count (sum of multiplicities)."""
+        return self._n_events
+
+    @property
+    def n_rows(self) -> int:
+        """Physical row count (consecutive identical events collapsed)."""
         return len(self._region)
 
     @property
@@ -339,72 +626,41 @@ class TraceBuffer:
         return self._is_coll.view()
 
     @property
+    def struct_ids(self) -> np.ndarray:
+        return self._struct.view()
+
+    @property
+    def nbytes(self) -> np.ndarray:
+        """Per-row byte scale (per-message / per-rank; 1 for raw events)."""
+        return self._nbytes.view()
+
+    @property
+    def multiplicity(self) -> np.ndarray:
+        return self._mult.view()
+
+    @property
     def largest(self) -> np.ndarray:
         return self._largest.view()
 
-    @property
-    def rank_lens(self) -> np.ndarray:
-        return self._rank_len.view()
+    def storage_nbytes(self) -> int:
+        """Live buffer memory: row columns + the struct table's slabs.
 
-    @property
-    def dest_lens(self) -> np.ndarray:
-        return self._dest_len.view()
-
-    @property
-    def src_lens(self) -> np.ndarray:
-        return self._src_len.view()
-
-    @property
-    def sends(self) -> np.ndarray:
-        return self._sends.view()
-
-    @property
-    def recvs(self) -> np.ndarray:
-        return self._recvs.view()
-
-    @property
-    def bytes_sent(self) -> np.ndarray:
-        return self._bytes_sent.view()
-
-    @property
-    def bytes_recv(self) -> np.ndarray:
-        return self._bytes_recv.view()
-
-    @property
-    def participants(self) -> np.ndarray:
-        return self._participants.view()
-
-    @property
-    def dest_rows(self) -> np.ndarray:
-        return self._dest_rows.view()
-
-    @property
-    def dest_peers(self) -> np.ndarray:
-        return self._dest_peers.view()
-
-    @property
-    def src_rows(self) -> np.ndarray:
-        return self._src_rows.view()
-
-    @property
-    def src_peers(self) -> np.ndarray:
-        return self._src_peers.view()
-
-    def rank_indptr(self) -> np.ndarray:
-        """int64[E + 1] slab boundaries of the dense per-rank columns."""
-        return self._indptr(self.rank_lens)
-
-    def dest_indptr(self) -> np.ndarray:
-        return self._indptr(self.dest_lens)
-
-    def src_indptr(self) -> np.ndarray:
-        return self._indptr(self.src_lens)
-
-    @staticmethod
-    def _indptr(lens: np.ndarray) -> np.ndarray:
-        out = np.zeros(len(lens) + 1, np.int64)
-        np.cumsum(lens, out=out[1:])
-        return out
+        (Distinct from the :attr:`nbytes` *column* — the per-row byte
+        scale of the ISSUE schema; storage accounting is always the
+        ``storage_nbytes`` spelling on Column/StructTable/TraceBuffer.)
+        """
+        cols = (
+            self._region,
+            self._path,
+            self._kind,
+            self._axis,
+            self._is_coll,
+            self._struct,
+            self._nbytes,
+            self._mult,
+            self._largest,
+        )
+        return sum(c.storage_nbytes() for c in cols) + self.structs.storage_nbytes()
 
     # -- appends (the hot recording path; no per-rank/per-event Python) -----
 
@@ -417,34 +673,40 @@ class TraceBuffer:
         axis_name: str,
         is_collective: int,
         largest: int,
-        sends: np.ndarray,
-        recvs: np.ndarray,
-        bytes_sent: np.ndarray,
-        bytes_recv: np.ndarray,
-        participants: np.ndarray,
-        dest_rows: np.ndarray,
-        dest_peers: np.ndarray,
-        src_rows: np.ndarray,
-        src_peers: np.ndarray,
+        struct_id: int,
+        nbytes: int,
     ) -> None:
-        self._region.push(self._regions.intern(region))
-        self._path.push(self._paths.intern(tuple(region_path)))
-        self._kind.push(self._kinds.intern(kind))
-        self._axis.push(self._axes.intern(str(axis_name)))
-        self._is_coll.push(1 if is_collective else 0)
+        rid = self._regions.intern(region)
+        pid = self._paths.intern(tuple(region_path))
+        kid = self._kinds.intern(kind)
+        aid = self._axes.intern(str(axis_name))
+        ic = 1 if is_collective else 0
+        self._n_events += 1
+        j = len(self._region) - 1
+        if (
+            self._intern
+            and j >= 0
+            and self._struct._data[j] == struct_id
+            and self._nbytes._data[j] == nbytes
+            and self._region._data[j] == rid
+            and self._path._data[j] == pid
+            and self._kind._data[j] == kid
+            and self._axis._data[j] == aid
+            and self._is_coll._data[j] == ic
+        ):
+            # identical consecutive event: collapse into the last row
+            # (largest is a function of struct + nbytes, so it matches too)
+            self._mult.add_last(1)
+            return
+        self._region.push(rid)
+        self._path.push(pid)
+        self._kind.push(kid)
+        self._axis.push(aid)
+        self._is_coll.push(ic)
+        self._struct.push(struct_id)
+        self._nbytes.push(nbytes)
+        self._mult.push(1)
         self._largest.push(largest)
-        self._rank_len.push(len(sends))
-        self._dest_len.push(len(dest_rows))
-        self._src_len.push(len(src_rows))
-        self._sends.extend(sends)
-        self._recvs.extend(recvs)
-        self._bytes_sent.extend(bytes_sent)
-        self._bytes_recv.extend(bytes_recv)
-        self._participants.extend(participants)
-        self._dest_rows.extend(dest_rows)
-        self._dest_peers.extend(dest_peers)
-        self._src_rows.extend(src_rows)
-        self._src_peers.extend(src_peers)
 
     def append_p2p(
         self,
@@ -461,27 +723,26 @@ class TraceBuffer:
 
         Every pair moves ``nbytes``; all ``n`` ranks participate (matching the
         SPMD execution model: the permute runs on every rank, including ranks
-        with no active pair this call).
+        with no active pair this call).  The pair array is fingerprinted:
+        repeated structures intern to one :class:`StructTable` entry and
+        skip :func:`p2p_structure` entirely.
         """
-        sends, recvs, drows, dpeers, srows, speers = p2p_structure(pairs, n)
-        bytes_sent = sends * nbytes
-        largest = int(bytes_sent.max()) // max(1, int(sends.max())) if n else 0
+        pairs = _as_pair_array(pairs)
+        if self._intern:
+            sid = self.structs.intern_p2p(pairs, n)
+        else:
+            sid = self.structs.insert_p2p(pairs, n)
+        # Every message of the event is nbytes, so the largest single
+        # message is nbytes exactly whenever any pair exists.
         self._append_row(
             region=region,
             region_path=region_path,
             kind=kind,
             axis_name=axis_name,
             is_collective=0,
-            largest=largest,
-            sends=sends,
-            recvs=recvs,
-            bytes_sent=bytes_sent,
-            bytes_recv=recvs * nbytes,
-            participants=np.ones(n, bool),
-            dest_rows=drows,
-            dest_peers=dpeers,
-            src_rows=srows,
-            src_peers=speers,
+            largest=int(nbytes) if len(pairs) else 0,
+            struct_id=sid,
+            nbytes=int(nbytes),
         )
 
     def append_collective(
@@ -500,14 +761,13 @@ class TraceBuffer:
         ``groups`` is the ``(n_groups, group_size)`` global-rank array from
         ``topology.groups`` (or ``arange(n)[None, :]`` for a flat axis); each
         member rank sends/receives ``per_rank_bytes`` ring-equivalent bytes.
+        The flattened member array is fingerprinted like the p2p pairs.
         """
-        members = np.asarray(groups, np.int64).reshape(-1)
-        bytes_vec = np.zeros(n, np.int64)
-        bytes_vec[members] = per_rank_bytes
-        participants = np.zeros(n, bool)
-        participants[members] = True
-        zero = np.zeros(n, np.int64)
-        empty = np.zeros(0, np.int64)
+        members = np.ascontiguousarray(np.asarray(groups, np.int64).reshape(-1))
+        if self._intern:
+            sid = self.structs.intern_collective(members, n)
+        else:
+            sid = self.structs.insert_collective(members, n)
         self._append_row(
             region=region,
             region_path=region_path,
@@ -515,25 +775,26 @@ class TraceBuffer:
             axis_name=axis_name,
             is_collective=1,
             largest=0,
-            sends=zero,
-            recvs=zero,
-            bytes_sent=bytes_vec,
-            bytes_recv=bytes_vec,
-            participants=participants,
-            dest_rows=empty,
-            dest_peers=empty,
-            src_rows=empty,
-            src_peers=empty,
+            struct_id=sid,
+            nbytes=int(per_rank_bytes),
         )
 
     def append_event(self, ev: "RegionEvent") -> None:
-        """Adapter: append an already-materialized :class:`RegionEvent`."""
+        """Adapter: append an already-materialized :class:`RegionEvent`.
+
+        The event's byte vectors are arbitrary (not a struct x scalar
+        product), so the struct stores them explicitly and the row's byte
+        scale is 1.
+        """
         largest = 0
         if not ev.is_collective and ev.participants.any():
             pv = ev.sends[ev.participants]
             pb = ev.bytes_sent[ev.participants]
             largest = int(pb.max()) // max(1, int(pv.max()))
-        ranks = np.arange(ev.n_ranks, dtype=np.int64)
+        if self._intern:
+            sid = self.structs.intern_event(ev)
+        else:
+            sid = self.structs.insert_event(ev)
         self._append_row(
             region=ev.region,
             region_path=tuple(ev.region_path),
@@ -541,78 +802,83 @@ class TraceBuffer:
             axis_name=ev.axis_name,
             is_collective=int(ev.is_collective),
             largest=largest,
-            sends=ev.sends,
-            recvs=ev.recvs,
-            bytes_sent=ev.bytes_sent,
-            bytes_recv=ev.bytes_recv,
-            participants=ev.participants,
-            dest_rows=np.repeat(ranks, np.diff(ev.dest_indptr)),
-            dest_peers=ev.dest_indices,
-            src_rows=np.repeat(ranks, np.diff(ev.src_indptr)),
-            src_peers=ev.src_indices,
+            struct_id=sid,
+            nbytes=1,
         )
 
     # -- views --------------------------------------------------------------
 
     def event(self, i: int) -> "RegionEvent":
-        """Materialize the i-th event as a :class:`RegionEvent` view."""
-        return self._event(
-            int(i), self.rank_indptr(), self.dest_indptr(), self.src_indptr()
-        )
+        """Materialize the i-th **logical** event as a :class:`RegionEvent`.
 
-    def _event(
-        self, e: int, rptr: np.ndarray, dptr: np.ndarray, sptr: np.ndarray
+        Logical indices expand multiplicities: row ``r`` covers logical
+        events ``cum_mult[r - 1]:cum_mult[r]`` (all identical).
+        """
+        if not 0 <= i < self._n_events:
+            raise IndexError(i)
+        cum = np.cumsum(self.multiplicity)
+        r = int(np.searchsorted(cum, i, side="right"))
+        st = self.structs
+        return self._event_row(r, st.rank_indptr(), st.dest_indptr(), st.src_indptr())
+
+    def _event_row(
+        self, r: int, rptr: np.ndarray, dptr: np.ndarray, sptr: np.ndarray
     ) -> "RegionEvent":
-        if not 0 <= e < self.n_events:
-            raise IndexError(e)
-        n = int(self.rank_lens[e])
-        slab = slice(rptr[e], rptr[e + 1])
-        d = slice(dptr[e], dptr[e + 1])
-        s = slice(sptr[e], sptr[e + 1])
-        dest_indptr, dest_indices = _rows_to_csr(
-            self.dest_rows[d], self.dest_peers[d], n
-        )
-        src_indptr, src_indices = _rows_to_csr(self.src_rows[s], self.src_peers[s], n)
+        st = self.structs
+        s = int(self.struct_ids[r])
+        n = int(st.rank_lens[s])
+        slab = slice(rptr[s], rptr[s + 1])
+        d = slice(dptr[s], dptr[s + 1])
+        sp = slice(sptr[s], sptr[s + 1])
+        scale = int(self.nbytes[r])
+        dest_indptr, dest_indices = _rows_to_csr(st.dest_rows[d], st.dest_peers[d], n)
+        src_indptr, src_indices = _rows_to_csr(st.src_rows[sp], st.src_peers[sp], n)
         return RegionEvent(
-            region=self.region_names[self.region_ids[e]],
-            region_path=self.region_paths[self.path_ids[e]],
-            kind=self.kind_names[self.kind_ids[e]],
+            region=self.region_names[self.region_ids[r]],
+            region_path=self.region_paths[self.path_ids[r]],
+            kind=self.kind_names[self.kind_ids[r]],
             n_ranks=n,
-            sends=self.sends[slab],
-            recvs=self.recvs[slab],
-            bytes_sent=self.bytes_sent[slab],
-            bytes_recv=self.bytes_recv[slab],
+            sends=st.sends[slab],
+            recvs=st.recvs[slab],
+            bytes_sent=st.bsent_units[slab] * scale,
+            bytes_recv=st.brecv_units[slab] * scale,
             dest_indptr=dest_indptr,
             dest_indices=dest_indices,
             src_indptr=src_indptr,
             src_indices=src_indices,
-            participants=self.participants[slab],
-            is_collective=int(self.is_collective[e]),
-            axis_name=self.axis_names[self.axis_ids[e]],
+            participants=st.participants[slab],
+            is_collective=int(self.is_collective[r]),
+            axis_name=self.axis_names[self.axis_ids[r]],
         )
 
     def to_events(self) -> list:
-        """All events as :class:`RegionEvent` views (adapter path only).
+        """All logical events as :class:`RegionEvent` views (adapters only).
 
-        The three slab indptrs are computed once and shared across views,
-        so materializing E views is O(total column entries), not O(E^2).
+        One view is built per physical row and repeated ``multiplicity``
+        times (the repeated logical events are identical by construction),
+        so materializing E events is O(rows x struct payload), not O(E).
         """
-        rptr = self.rank_indptr()
-        dptr = self.dest_indptr()
-        sptr = self.src_indptr()
-        return [self._event(i, rptr, dptr, sptr) for i in range(self.n_events)]
+        st = self.structs
+        rptr = st.rank_indptr()
+        dptr = st.dest_indptr()
+        sptr = st.src_indptr()
+        mult = self.multiplicity
+        out: list = []
+        for r in range(self.n_rows):
+            out.extend([self._event_row(r, rptr, dptr, sptr)] * int(mult[r]))
+        return out
 
 
 @dataclass
 class RegionEvent:
     """One instrumented collective call observed inside a region.
 
-    A *view/adapter* over the columnar :class:`TraceBuffer` store (see the
-    module docstring): all fields describe the static structure of the
-    collective, per participating rank (paper Table I is derived from these),
-    in the array-native canonical form.  The default profiling path never
-    materializes these — they exist for the reference profiler, the legacy
-    dict adapters, and tests.
+    A *view/adapter* over the structure-interned :class:`TraceBuffer`
+    store (see the module docstring): all fields describe the static
+    structure of the collective, per participating rank (paper Table I is
+    derived from these), in the array-native canonical form.  The default
+    profiling path never materializes these — they exist for the reference
+    profiler, the legacy dict adapters, and tests.
     """
 
     region: str  # innermost region name ("sweep_comm")
@@ -768,7 +1034,7 @@ class RegionEvent:
 
 
 class RegionRecorder:
-    """Owns the columnar TraceBuffer for one profiling session.
+    """Owns the structure-interned TraceBuffer for one profiling session.
 
     The instrumented collectives append straight into :attr:`buffer`;
     :attr:`events` materializes RegionEvent views on demand (adapter path —
@@ -866,7 +1132,8 @@ def record_p2p(kind: str, axis_name, pairs, n: int, nbytes: int) -> None:
     """Hot path for instrumented point-to-point patterns.
 
     Appends straight into the active recorder's columnar buffer — no
-    RegionEvent object is constructed.
+    RegionEvent object is constructed, and repeated pair structures are
+    memoized (fingerprint hit skips :func:`p2p_structure`).
     """
     rec = _STATE.recorder
     if rec is not None:
@@ -884,7 +1151,7 @@ def record_p2p(kind: str, axis_name, pairs, n: int, nbytes: int) -> None:
 def record_collective(
     kind: str, axis_name, groups: np.ndarray, n: int, per_rank_bytes: int
 ) -> None:
-    """Hot path for instrumented collectives (columnar append, no objects)."""
+    """Hot path for instrumented collectives (memoized columnar append)."""
     rec = _STATE.recorder
     if rec is not None:
         rec.buffer.append_collective(

@@ -448,13 +448,90 @@ class Frame:
         Sparse (index, column) combinations simply leave the cell absent —
         ``to_markdown``/``to_csv`` render them empty and row dicts omit the
         key, so disjoint region sets across profiles pivot cleanly.
+
+        Vectorized like ``group_by``: rows factorize to composite
+        (index-group, column) cell codes, one ``np.unique`` pass finds the
+        distinct cells (and the legacy dict-insertion column order), and
+        the cell grid fills with last-row-wins fancy assignment — no
+        per-row dict is materialized.  Output is structurally identical to
+        the historical row-dict implementation, including the
+        ``str(column_value)`` column naming, the ``(str(type), value)``
+        row ordering, and the overwrite behavior when a column value
+        collides with the index name.
         """
-        idx: dict[object, dict] = {}
-        for i in range(self._n):
-            r = self._row(i)
-            row = idx.setdefault(r.get(index), {index: r.get(index)})
-            row[str(r.get(column))] = r.get(value)
-        return Frame(idx[k] for k in sorted(idx, key=lambda x: (str(type(x)), x)))
+        if self._n == 0:
+            return Frame([])
+        ivals = self.column(index)
+        cnames = [str(v) for v in self.column(column)]
+        vvals = self.column(value)
+
+        gmap: dict = {}
+        gid = np.empty(self._n, np.int64)
+        for i, v in enumerate(ivals):
+            code = gmap.get(v)
+            if code is None:
+                code = len(gmap)
+                gmap[v] = code
+            gid[i] = code
+        cmap: dict = {}
+        cid = np.empty(self._n, np.int64)
+        for i, c in enumerate(cnames):
+            code = cmap.get(c)
+            if code is None:
+                code = len(cmap)
+                cmap[c] = code
+            cid[i] = code
+        uniq_ivals = list(gmap)
+        col_names = list(cmap)
+        NG, NC = len(uniq_ivals), len(col_names)
+
+        codes = gid * NC + cid
+        flat_vals = np.empty(self._n, object)
+        for i, v in enumerate(vvals):
+            flat_vals[i] = v
+        cell_vals = np.empty(NG * NC, object)
+        cell_vals[codes] = flat_vals  # duplicate cells: last row wins
+        present = np.zeros(NG * NC, bool)
+        present[codes] = True
+        uniq_codes, first_rows = np.unique(codes, return_index=True)
+
+        order = sorted(
+            range(NG), key=lambda g: (str(type(uniq_ivals[g])), uniq_ivals[g])
+        )
+        # Column order replicates dict insertion: scan groups in output-row
+        # order, each group's columns by first assignment.
+        by_group: dict[int, list] = {}
+        for code, fr in zip(uniq_codes, first_rows):
+            by_group.setdefault(int(code) // NC, []).append((int(fr), int(code) % NC))
+        out_names = [index]
+        seen = {index}
+        for g in order:
+            for _, pc in sorted(by_group.get(g, [])):
+                name = col_names[pc]
+                if name not in seen:
+                    seen.add(name)
+                    out_names.append(name)
+
+        # Index column first; a column literally named like the index
+        # overwrites its cells (legacy dict-assignment semantics).
+        idx_vals = [uniq_ivals[g] for g in order]
+        if index in cmap:
+            ci = cmap[index]
+            for r_out, g in enumerate(order):
+                if present[g * NC + ci]:
+                    idx_vals[r_out] = cell_vals[g * NC + ci]
+        cols: dict[str, np.ndarray] = {}
+        mask: dict[str, np.ndarray] = {}
+        all_present = np.ones(NG, bool)
+        cols[index] = _infer_column(idx_vals, all_present)
+        mask[index] = all_present
+        for name in out_names[1:]:
+            ci = cmap[name]
+            vals = [cell_vals[g * NC + ci] for g in order]
+            pr = np.fromiter((present[g * NC + ci] for g in order), bool, count=NG)
+            cols[name] = _infer_column(vals, pr)
+            mask[name] = pr
+        return Frame._from_columns(cols, mask, NG)
 
     # -- access -----------------------------------------------------------
     def column(self, name: str) -> list:

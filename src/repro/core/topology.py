@@ -17,9 +17,17 @@ Global rank = mixed-radix index over the declared axes, in declared order
 ``expand_pairs`` and ``groups`` return **NumPy arrays** (shape ``(P, 2)``
 rank pairs and ``(n_groups, group_size)`` communicator groups) built by
 broadcasting axis offsets — no Python loop over ranks — so the instrumented
-collectives can assemble array-native RegionEvents straight from them.
+collectives can record array-native structures straight from them.
 Element order matches the historical list-of-tuples implementation
 (row-major over the non-participating axes, then the permutation/group).
+
+Both expansions are **memoized per topology**: apps re-issue the same
+axis permutation / communicator group every stage, step, and cycle (a
+kripke sweep re-visits each axis direction across octants; laghos repeats
+the identical halo and timestep patterns every step), so each distinct
+``(axis, perm)`` / axis-set key broadcasts once and every later call is a
+dict hit.  The cached arrays are shared — callers must treat them as
+read-only (the recording paths only fingerprint and reduce them).
 """
 
 from __future__ import annotations
@@ -44,6 +52,9 @@ class Topology:
             self.strides.append(acc)
             acc *= s
         self.strides.reverse()
+        # (axis, perm) / axis-set expansion memos (see module docstring)
+        self._pairs_memo: dict = {}
+        self._groups_memo: dict = {}
 
     def rank(self, coords: Sequence[int]) -> int:
         return sum(c * s for c, s in zip(coords, self.strides))
@@ -62,37 +73,56 @@ class Topology:
         if not positions:
             return np.zeros(1, np.int64)
         grids = np.meshgrid(
-            *[np.arange(self.sizes[i], dtype=np.int64) * self.strides[i]
-              for i in positions],
-            indexing="ij")
+            *[
+                np.arange(self.sizes[i], dtype=np.int64) * self.strides[i]
+                for i in positions
+            ],
+            indexing="ij",
+        )
         out = grids[0]
         for g in grids[1:]:
             out = out + g
         return out.reshape(-1)
 
-    def expand_pairs(self, axis_name: str, perm: Sequence[tuple]
-                     ) -> np.ndarray:
+    def expand_pairs(self, axis_name: str, perm: Sequence[tuple]) -> np.ndarray:
         """Axis-local (src, dst) pairs -> global-rank pairs, for every
-        combination of the other axes' indices; shape ``(P, 2)`` int64."""
+        combination of the other axes' indices; shape ``(P, 2)`` int64.
+
+        Memoized on ``(axis_name, perm)`` — treat the result as read-only.
+        """
+        key = (axis_name, tuple((int(s), int(d)) for s, d in perm))
+        hit = self._pairs_memo.get(key)
+        if hit is not None:
+            return hit
         pos = self.axis_pos(axis_name)
         others = [i for i in range(len(self.sizes)) if i != pos]
         perm_arr = np.asarray(list(perm), np.int64).reshape(-1, 2)
-        base = self._axis_offsets(others)                 # (B,)
+        base = self._axis_offsets(others)  # (B,)
         stride = self.strides[pos]
         # (B, P, 2): every other-axes combo x every permutation pair.
         out = base[:, None, None] + perm_arr[None, :, :] * stride
-        return out.reshape(-1, 2)
+        out = np.ascontiguousarray(out.reshape(-1, 2))
+        self._pairs_memo[key] = out
+        return out
 
     def groups(self, axis_name) -> np.ndarray:
         """Communicator groups for a collective over axis_name (possibly a
-        tuple of axes): ``(n_groups, group_size)`` int64 global ranks."""
-        names = ([axis_name] if isinstance(axis_name, str)
-                 else list(axis_name))
+        tuple of axes): ``(n_groups, group_size)`` int64 global ranks.
+
+        Memoized on the axis set — treat the result as read-only.
+        """
+        names = [axis_name] if isinstance(axis_name, str) else list(axis_name)
+        key = tuple(names)
+        hit = self._groups_memo.get(key)
+        if hit is not None:
+            return hit
         pos = [self.axis_pos(n) for n in names]
         others = [i for i in range(len(self.sizes)) if i not in pos]
-        outer = self._axis_offsets(others)                # (n_groups,)
-        inner = self._axis_offsets(pos)                   # (group_size,)
-        return outer[:, None] + inner[None, :]
+        outer = self._axis_offsets(others)  # (n_groups,)
+        inner = self._axis_offsets(pos)  # (group_size,)
+        out = np.ascontiguousarray(outer[:, None] + inner[None, :])
+        self._groups_memo[key] = out
+        return out
 
 
 class _TopoState(threading.local):

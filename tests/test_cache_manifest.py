@@ -27,21 +27,24 @@ def _mini_profile(name):
     return CommProfile(name=name, n_ranks=2, meta={"pad": "x" * 512})
 
 
+def _counts(m):
+    """Call-count fields only (byte counters are size-dependent)."""
+    return {k: m[k] for k in ("hits", "misses", "puts", "evictions")}
+
+
 def test_manifest_reads_zero_when_absent(tmp_path):
     m = CacheManifest(str(tmp_path / "nonexistent"))
-    assert m.read() == {"hits": 0, "misses": 0, "puts": 0, "evictions": 0}
+    assert m.read() == {k: 0 for k in CacheManifest.FIELDS}
 
 
 def test_manifest_bump_accumulates_across_handles(tmp_path):
     root = str(tmp_path / "cache")
     CacheManifest(root).bump(hits=2, misses=1)
-    CacheManifest(root).bump(hits=1, puts=4)
-    assert CacheManifest(root).read() == {
-        "hits": 3,
-        "misses": 1,
-        "puts": 4,
-        "evictions": 0,
-    }
+    post = CacheManifest(root).bump(hits=1, puts=4, put_bytes=100)
+    assert _counts(post) == {"hits": 3, "misses": 1, "puts": 4, "evictions": 0}
+    read = CacheManifest(root).read()
+    assert read == post
+    assert read["put_bytes"] == 100 and read["evicted_bytes"] == 0
 
 
 def test_manifest_concurrent_bumps_are_exact(tmp_path):
@@ -72,7 +75,8 @@ def test_cache_ops_update_manifest(tmp_path):
     cache.put("k", _mini_profile("p"))
     assert cache.get("k") is not None
     m = cache.manifest.read()
-    assert m == {"hits": 1, "misses": 1, "puts": 1, "evictions": 0}
+    assert _counts(m) == {"hits": 1, "misses": 1, "puts": 1, "evictions": 0}
+    assert m["put_bytes"] == len(_mini_profile("p").to_json())
 
 
 def test_manifest_file_never_evicted(tmp_path):
@@ -84,7 +88,95 @@ def test_manifest_file_never_evicted(tmp_path):
     cache._evict()
     m = cache.manifest.read()
     assert m["puts"] == 2 and m["evictions"] >= 1
+    assert m["evicted_bytes"] > 0
     assert cache.get("k1") is not None  # newest entry survives
+
+
+class _ScanCountingCache(ProfileCache):
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.scans = 0
+
+    def _evict(self):
+        self.scans += 1
+        super()._evict()
+
+
+def test_only_the_crossing_put_scans_the_directory(tmp_path):
+    """Eviction coordination: once the manifest exists, only the handle
+    whose put crossed REPRO_PROFILE_CACHE_MAX_BYTES (per the shared
+    manifest byte totals) pays the directory scan; every other put skips
+    it entirely.  The very first writer of a fresh manifest performs one
+    safety sync scan (re-anchoring against reset manifests)."""
+    root = str(tmp_path / "cache")
+    entry = len(_mini_profile("p0").to_json())
+    cap = int(entry * 4.5)
+    handles = [_ScanCountingCache(root, max_bytes=cap) for _ in range(4)]
+    # first writer of a fresh manifest: one sync scan, nothing evicted
+    handles[0].put("k0", _mini_profile("p0"))
+    assert handles[0].scans == 1
+    assert handles[0].manifest.read()["evictions"] == 0
+    # under-cap puts — first or later, any handle — never scan
+    handles[1].put("k1", _mini_profile("p1"))
+    handles[2].put("k2", _mini_profile("p2"))
+    handles[0].put("k3", _mini_profile("p3"))
+    assert [h.scans for h in handles] == [1, 0, 0, 0]
+    # the put that crosses the cap scans — and only that one
+    handles[3].put("k4", _mini_profile("p4"))
+    assert [h.scans for h in handles] == [1, 0, 0, 1]
+    m = handles[3].manifest.read()
+    assert m["evictions"] >= 1 and m["evicted_bytes"] > 0
+    # newest entry always survives the LRU sweep
+    assert handles[3].get("k4") is not None
+
+
+def test_lowered_cap_on_existing_directory_still_enforced(tmp_path):
+    """A cap set (or lowered) after the directory already grew past it
+    never sees a crossing — the handle's first over-cap put must scan
+    once anyway, or the cap would be permanently unenforced."""
+    root = str(tmp_path / "cache")
+    big = ProfileCache(root, max_bytes=0)  # uncapped growth
+    for i in range(6):
+        big.put(f"k{i}", _mini_profile(f"p{i}"))
+    entry = len(_mini_profile("p0").to_json())
+    capped = _ScanCountingCache(root, max_bytes=int(entry * 2.5))
+    capped.put("k6", _mini_profile("p6"))
+    assert capped.scans == 1
+    m = capped.manifest.read()
+    assert m["evictions"] >= 4
+    files = [n for n in os.listdir(root) if n != "manifest.json"]
+    assert sum(os.path.getsize(os.path.join(root, n)) for n in files) <= int(
+        entry * 2.5
+    )
+    # steady state after the sync scan: under-cap puts stay scan-free
+    capped.put("k7", _mini_profile("p7"))
+    assert capped.scans <= 2
+
+
+def test_reset_manifest_over_full_directory_reanchors_and_evicts(tmp_path):
+    """Deleting manifest.json under a full directory zeroes the byte
+    counters; the next writer's fresh-manifest sync scan must re-anchor
+    the estimate to the real size (signed fold) and enforce the cap
+    instead of trusting the reset counters."""
+    root = str(tmp_path / "cache")
+    entry = len(_mini_profile("p0").to_json())
+    cap = int(entry * 2.5)
+    seed = ProfileCache(root, max_bytes=0)
+    for i in range(6):
+        seed.put(f"k{i}", _mini_profile(f"p{i}"))
+    os.remove(os.path.join(root, CacheManifest.FILENAME))
+
+    cache = _ScanCountingCache(root, max_bytes=cap)
+    cache.put("k6", _mini_profile("p6"))
+    assert cache.scans == 1  # fresh-manifest sync
+    m = cache.manifest.read()
+    assert m["evictions"] >= 4
+    # estimate re-anchored to reality: put_bytes - evicted_bytes equals
+    # the surviving directory bytes (the signed fold went negative)
+    files = [n for n in os.listdir(root) if n != CacheManifest.FILENAME]
+    total = sum(os.path.getsize(os.path.join(root, n)) for n in files)
+    assert total <= cap
+    assert m["put_bytes"] - m["evicted_bytes"] == total
 
 
 def test_process_sweep_twice_reports_exact_accounting(tmp_path):
@@ -96,14 +188,16 @@ def test_process_sweep_twice_reports_exact_accounting(tmp_path):
         _spec(), verbose=False, cache=cache, executor="process", max_workers=3
     )
     m1 = cache.manifest.read()
-    assert m1 == {"hits": 0, "misses": 3, "puts": 3, "evictions": 0}
+    assert _counts(m1) == {"hits": 0, "misses": 3, "puts": 3, "evictions": 0}
+    assert m1["put_bytes"] > 0
 
     cache2 = ProfileCache(root)
     run_experiment(
         _spec(), verbose=False, cache=cache2, executor="process", max_workers=3
     )
     m2 = cache2.manifest.read()
-    assert m2 == {"hits": 3, "misses": 3, "puts": 3, "evictions": 0}
+    assert _counts(m2) == {"hits": 3, "misses": 3, "puts": 3, "evictions": 0}
+    assert m2["put_bytes"] == m1["put_bytes"]  # hits do not re-put
 
 
 def test_run_experiment_emits_aggregated_frame_csv(tmp_path):

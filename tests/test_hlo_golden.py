@@ -166,6 +166,39 @@ def test_buffer_pickles_and_stays_appendable():
     assert int(clone.wire_bytes[-1]) == 64
 
 
+@pytest.mark.parametrize(
+    "path", FIXTURES, ids=[os.path.basename(p)[: -len(".txt")] for p in FIXTURES]
+)
+def test_analyze_cost_single_pass_matches_reference(path):
+    """The tokenizer-based analyze_cost must be bit-identical to the
+    retained two-pass reference on the whole golden corpus (factors,
+    inlining, dot flops, and byte accounting included)."""
+    from repro.core.hlo_cost import analyze_cost, analyze_cost_reference
+
+    text, _expected = _load(path)
+    fast = analyze_cost(text)
+    ref = analyze_cost_reference(text)
+    assert fast.flops == ref.flops
+    assert fast.bytes_accessed == ref.bytes_accessed
+    assert fast.dot_flops_unscaled == ref.dot_flops_unscaled
+
+
+def test_analyze_cost_parity_without_entry_marker():
+    """No ENTRY computation: both paths fall back to factor-1 accounting."""
+    from repro.core.hlo_cost import analyze_cost, analyze_cost_reference
+
+    text = (
+        "%plain (p: f32[8]) -> f32[8] {\n"
+        "  %p = f32[8]{0} parameter(0)\n"
+        "  ROOT %d = f32[8]{0} dot(%p, %p), lhs_contracting_dims={0}\n"
+        "}\n"
+    )
+    fast = analyze_cost(text)
+    ref = analyze_cost_reference(text)
+    assert fast.flops == ref.flops > 0
+    assert fast.bytes_accessed == ref.bytes_accessed > 0
+
+
 def test_golden_corpus_covers_all_kinds():
     """The fixture set must keep exercising every collective kind."""
     seen = CollectiveSummary()

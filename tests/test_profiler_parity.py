@@ -195,6 +195,17 @@ def _check_app(profile_fn, cfg):
     for ev in rec.events:
         assert isinstance(ev.sends, np.ndarray)
         assert len(ev.dest_indptr) == ev.n_ranks + 1
+    # structure interning bites on every real app: repeated structures
+    # dedup into the struct table and identical runs collapse into rows
+    buf = rec.buffer
+    assert buf.structs.n_structs < buf.n_events
+    assert buf.n_rows <= buf.n_events
+    # and the memoized buffer agrees bit-identically with the uninterned
+    # reference layout replay (one struct row per event)
+    plain = _replay(rec, intern=False)
+    assert plain.buffer.structs.n_structs == buf.n_events
+    _assert_profiles_equal(
+        new, CommPatternProfiler.from_recorder(plain, name=new.name))
 
 
 def test_parity_kripke_profile_path():
@@ -223,19 +234,135 @@ def test_trace_buffer_columns_consistent():
     rec = _random_recorder(20260729)
     buf = rec.buffer
     assert buf.n_events == len(rec.events) > 0
-    assert len(buf.region_ids) == len(buf.kind_ids) == buf.n_events
-    assert len(buf.sends) == int(buf.rank_lens.sum())
-    assert len(buf.dest_rows) == int(buf.dest_lens.sum())
-    assert len(buf.src_peers) == int(buf.src_lens.sum())
+    assert buf.n_rows <= buf.n_events
+    assert int(buf.multiplicity.sum()) == buf.n_events
+    assert len(buf.region_ids) == len(buf.kind_ids) == buf.n_rows
+    tab = buf.structs
+    assert tab.n_structs <= buf.n_rows
+    assert len(tab.sends) == int(tab.rank_lens.sum())
+    assert len(tab.dest_rows) == int(tab.dest_lens.sum())
+    assert len(tab.src_peers) == int(tab.src_lens.sum())
+    assert int(buf.struct_ids.max()) < tab.n_structs
     # interning: one table entry per distinct name, ids in range
     assert len(set(buf.region_names)) == len(buf.region_names)
     assert len(set(buf.kind_names)) == len(buf.kind_names)
     assert int(buf.region_ids.max()) < len(buf.region_names)
-    # event views slice the columns back exactly
+    # logical event views slice the struct slabs back exactly
+    rptr = tab.rank_indptr()
     for i, ev in enumerate(rec.events):
-        assert ev.n_ranks == int(buf.rank_lens[i])
-        assert int(ev.dest_indptr[-1]) == int(buf.dest_lens[i])
-        assert int(ev.src_indptr[-1]) == int(buf.src_lens[i])
+        s = int(buf.struct_ids[np.searchsorted(
+            np.cumsum(buf.multiplicity), i, side="right")])
+        assert ev.n_ranks == int(tab.rank_lens[s])
+        assert int(ev.dest_indptr[-1]) == int(tab.dest_lens[s])
+        assert int(ev.src_indptr[-1]) == int(tab.src_lens[s])
+        assert rptr[s + 1] - rptr[s] == ev.n_ranks
+        assert buf.event(i).to_dicts() == ev.to_dicts()
+
+
+def _replay(rec: RegionRecorder, intern: bool) -> RegionRecorder:
+    """Replay a recorder's logical event stream into a fresh buffer."""
+    from repro.core.regions import TraceBuffer
+    out = RegionRecorder()
+    out.buffer = TraceBuffer(intern=intern)
+    out.instances = dict(rec.instances)
+    for ev in rec.events:
+        out.record(ev)
+    return out
+
+
+def test_interned_matches_uninterned_reference_layout():
+    """TraceBuffer(intern=False) — the pre-interning reference layout, one
+    struct row per event — must yield the same logical stream and
+    bit-identical profiles as the interned default."""
+    rec = _random_recorder(424242)
+    interned = _replay(rec, intern=True)
+    plain = _replay(rec, intern=False)
+    assert plain.buffer.n_rows == plain.buffer.n_events == rec.buffer.n_events
+    assert interned.buffer.n_rows <= plain.buffer.n_rows
+    assert interned.buffer.structs.n_structs <= plain.buffer.structs.n_structs
+    a = CommPatternProfiler.from_recorder(interned, name="p")
+    b = CommPatternProfiler.from_recorder(plain, name="p")
+    _assert_profiles_equal(a, b)
+    assert a.to_json() == b.to_json()
+    for ea, eb in zip(interned.events, plain.events):
+        assert ea.to_dicts() == eb.to_dicts()
+
+
+def test_multiplicity_collapses_identical_consecutive_events():
+    """36 identical messages per phase (the kripke shape) collapse to one
+    row x multiplicity 36, one struct — bit-identical to the expanded
+    reference accounting."""
+    from repro.core.regions import TraceBuffer
+
+    pairs = [(0, 1), (1, 2), (2, 3)]
+    rec = RegionRecorder()
+    rec.enter("sweep_comm")
+    for _ in range(36):
+        rec.buffer.append_p2p(region="sweep_comm", region_path=("sweep_comm",),
+                              kind="ppermute", axis_name="x",
+                              pairs=pairs, n=4, nbytes=128)
+    # a different nbytes breaks the run (no collapse across it)
+    rec.buffer.append_p2p(region="sweep_comm", region_path=("sweep_comm",),
+                          kind="ppermute", axis_name="x",
+                          pairs=pairs, n=4, nbytes=256)
+    for _ in range(5):
+        rec.buffer.append_collective(region="sweep_comm",
+                                     region_path=("sweep_comm",),
+                                     kind="psum", axis_name="x",
+                                     groups=np.arange(4)[None, :], n=4,
+                                     per_rank_bytes=96)
+    buf = rec.buffer
+    assert buf.n_events == 42 and buf.n_rows == 3
+    assert buf.multiplicity.tolist() == [36, 1, 5]
+    assert buf.structs.n_structs == 2  # one p2p struct (reused) + one coll
+    assert len(rec.events) == 42
+    new = CommPatternProfiler.from_recorder(rec, name="p")
+    ref = CommPatternProfiler.from_recorder(rec, name="p", impl="reference")
+    _assert_profiles_equal(new, ref)
+    st = new.regions["sweep_comm"]
+    assert st.total_sends == 37 * 3
+    assert st.total_bytes_sent == 36 * 3 * 128 + 3 * 256
+    assert st.coll == 5
+    assert st.largest_send == 256
+    # an uninterned replay of the logical stream agrees bit-identically
+    plain = _replay(rec, intern=False)
+    assert plain.buffer.n_rows == 42
+    _assert_profiles_equal(new, CommPatternProfiler.from_recorder(plain,
+                                                                  name="p"))
+
+    # TraceBuffer(intern=False) never collapses nor dedups
+    loose = TraceBuffer(intern=False)
+    for _ in range(3):
+        loose.append_p2p(region="r", region_path=("r",), kind="ppermute",
+                         axis_name="x", pairs=pairs, n=4, nbytes=128)
+    assert loose.n_rows == 3 and loose.structs.n_structs == 3
+
+
+def test_append_p2p_largest_degenerate_paths():
+    """largest is plain nbytes-or-0: empty pair sets and n == 0 record 0,
+    any nonempty pair set records nbytes (regression for the simplified
+    computation in append_p2p)."""
+    rec = RegionRecorder()
+    rec.enter("r")
+    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
+                          axis_name="x", pairs=[], n=4, nbytes=64)
+    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
+                          axis_name="x", pairs=[], n=0, nbytes=64)
+    assert rec.buffer.largest.tolist() == [0, 0]
+    prof = CommPatternProfiler.from_recorder(rec, name="p")
+    ref = CommPatternProfiler.from_recorder(rec, name="p", impl="reference")
+    _assert_profiles_equal(prof, ref)
+    assert prof.regions["r"].largest_send == 0
+    assert prof.regions["r"].total_sends == 0
+    # duplicated pairs still mean one message of nbytes each
+    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
+                          axis_name="x", pairs=[(0, 1), (0, 1)], n=4,
+                          nbytes=640)
+    assert int(rec.buffer.largest[-1]) == 640
+    prof2 = CommPatternProfiler.from_recorder(rec, name="p")
+    ref2 = CommPatternProfiler.from_recorder(rec, name="p", impl="reference")
+    _assert_profiles_equal(prof2, ref2)
+    assert prof2.regions["r"].largest_send == 640
 
 
 def test_columnar_append_matches_materialized_events():
@@ -294,6 +421,36 @@ def test_buffer_pickles_between_processes():
     import pickle
     rec = _random_recorder(11)
     clone = pickle.loads(pickle.dumps(rec))
+    a = CommPatternProfiler.from_recorder(rec, name="p")
+    b = CommPatternProfiler.from_recorder(clone, name="p")
+    _assert_profiles_equal(a, b)
+
+
+def test_collapsed_buffer_pickle_keeps_fingerprints_and_multiplicity():
+    """A pickled interned buffer must keep its multiplicity rows AND its
+    fingerprint table, so appends after the round-trip keep memoizing and
+    collapsing instead of inserting duplicate structs."""
+    import pickle
+
+    pairs = [(0, 1), (1, 2)]
+    rec = RegionRecorder()
+    rec.enter("r")
+    for _ in range(4):
+        rec.buffer.append_p2p(region="r", region_path=("r",),
+                              kind="ppermute", axis_name="x",
+                              pairs=pairs, n=4, nbytes=32)
+    buf = pickle.loads(pickle.dumps(rec.buffer))
+    assert buf.n_rows == 1 and buf.n_events == 4
+    assert buf.multiplicity.tolist() == [4]
+    buf.append_p2p(region="r", region_path=("r",), kind="ppermute",
+                   axis_name="x", pairs=pairs, n=4, nbytes=32)
+    assert buf.n_rows == 1 and buf.n_events == 5
+    assert buf.structs.n_structs == 1
+    clone = RegionRecorder()
+    clone.buffer = buf
+    clone.instances = dict(rec.instances)
+    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
+                          axis_name="x", pairs=pairs, n=4, nbytes=32)
     a = CommPatternProfiler.from_recorder(rec, name="p")
     b = CommPatternProfiler.from_recorder(clone, name="p")
     _assert_profiles_equal(a, b)

@@ -271,6 +271,52 @@ def test_pivot_disjoint_regions_leaves_cells_absent():
     assert md.count("\n") == 3  # header + separator + 2 rows, no KeyError
 
 
+def _pivot_rowdict_reference(frame, index, column, value):
+    """The historical per-row-dict pivot, kept as a structural oracle."""
+    idx = {}
+    for r in frame.rows:
+        row = idx.setdefault(r.get(index), {index: r.get(index)})
+        row[str(r.get(column))] = r.get(value)
+    return Frame(idx[k] for k in sorted(idx, key=lambda x: (str(type(x)), x)))
+
+
+def test_pivot_vectorized_structural_parity():
+    """The np.unique-based pivot must be structurally identical to the
+    row-dict implementation: same rows, column order, dtypes, CSV."""
+    cases = [
+        Frame.from_profiles(_disjoint_profiles()),
+        Frame(
+            [
+                {"a": 2, "b": "x", "v": 1},
+                {"a": 1, "b": "y", "v": 2},
+                {"a": 2, "b": "y", "v": 3},
+                {"a": 2, "b": "x", "v": 4},  # duplicate cell: last wins
+                {"b": "x", "v": 5},  # absent index -> None group
+                {"a": 1, "b": "x"},  # absent value -> present None cell
+                {"a": 3, "v": 7},  # absent column -> "None" column
+            ]
+        ),
+        # column values colliding with the index name overwrite its cell
+        Frame([{"a": 1, "b": "a", "v": 9}, {"a": 2, "b": "x", "v": 3}]),
+    ]
+    specs = [
+        ("n_ranks", "region", "total_bytes_sent"),
+        ("a", "b", "v"),
+        ("a", "b", "v"),
+    ]
+    for frame, (ix, col, val) in zip(cases, specs):
+        fast = frame.pivot(ix, col, val)
+        ref = _pivot_rowdict_reference(frame, ix, col, val)
+        assert fast.columns() == ref.columns()
+        assert fast.rows == ref.rows
+        assert fast.to_csv() == ref.to_csv()
+        for c in ref.columns():
+            fv, fm = fast.column_array(c)
+            rv, rm = ref.column_array(c)
+            assert fv.dtype == rv.dtype, c
+            assert fm.tolist() == rm.tolist(), c
+
+
 def test_table4_region_filter_zero_row_for_missing_region():
     md = table4_metrics(_disjoint_profiles(), region="mg_level_0")
     lines = md.splitlines()

@@ -1,0 +1,144 @@
+"""Trace-construction scale benchmark: structure interning vs reference.
+
+Replays the exact kripke communication stream (fuse_messages=False: per
+octant, three axis passes, 36 identical per-(dirset, groupset) messages
+per wavefront stage) into two TraceBuffers — the structure-interned
+default and ``intern=False``, the pre-interning reference layout that
+recomputes and stores O(n_ranks) state per event — and asserts the
+headline wins of the interned store at paper-and-beyond rank counts:
+
+* >= 5x trace-construction speedup and >= 10x buffer memory reduction on
+  the 512-rank kripke trace (thresholds from ISSUE 5's acceptance
+  criteria);
+* 2048- and 4096-rank streams stay small in absolute terms (the regime
+  the 4096-rank CI sweep runs in) while remaining bit-identical to the
+  reference layout's profiles.
+
+Marked ``perf`` and skipped unless ``REPRO_PERF_TESTS`` is set — timing
+assertions are environment-sensitive and must not gate the tier-1 suite.
+The CI benchmark-smoke job runs them with the flag enabled.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.apps.kripke import OCTANT_ORDER, _active_pairs, _octant_signs
+from repro.apps.stencil import Decomp3D
+from repro.core.profiler import CommPatternProfiler
+from repro.core.regions import RegionRecorder, TraceBuffer
+
+pytestmark = [
+    pytest.mark.perf,
+    pytest.mark.skipif(
+        not os.environ.get("REPRO_PERF_TESTS"),
+        reason="perf micro-benchmarks run only with REPRO_PERF_TESTS=1",
+    ),
+]
+
+MESSAGES_PER_PHASE = 36  # n_dirsets x n_groupsets (paper §IV-A)
+
+
+def _kripke_stream(decomp: tuple, n_octants: int = 2, nbytes: int = 4096) -> list:
+    """The kripke recording stream as (pairs, n, nbytes) append calls."""
+    dc = Decomp3D(*decomp)
+    n = dc.n_ranks
+    calls = []
+    for o in range(n_octants):
+        signs = _octant_signs(OCTANT_ORDER[o])
+        for axis in (0, 1, 2):
+            for stage in range(dc.shape[axis] - 1):
+                pairs = np.asarray(_active_pairs(dc, stage, axis, signs))
+                calls.extend([(pairs, n, nbytes)] * MESSAGES_PER_PHASE)
+    return calls
+
+
+def _replay(calls: list, intern: bool) -> TraceBuffer:
+    buf = TraceBuffer(intern=intern)
+    for pairs, n, nbytes in calls:
+        buf.append_p2p(
+            region="sweep_comm",
+            region_path=("main", "sweep_comm"),
+            kind="ppermute",
+            axis_name="x",
+            pairs=pairs,
+            n=n,
+            nbytes=nbytes,
+        )
+    return buf
+
+
+def _profile(buf: TraceBuffer):
+    rec = RegionRecorder()
+    rec.buffer = buf
+    rec.instances = {"sweep_comm": 1}
+    return CommPatternProfiler.from_recorder(rec, name="p")
+
+
+def _best_of(fn, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def test_interned_kripke_trace_at_512_ranks_thresholds():
+    """ISSUE 5 acceptance: >= 5x construction speedup, >= 10x less memory
+    on the 512-rank kripke trace, bit-identical profiles."""
+    calls = _kripke_stream((8, 8, 8))
+    assert len(calls) == 2 * 3 * 7 * MESSAGES_PER_PHASE
+
+    t_int = _best_of(lambda: _replay(calls, True))
+    t_ref = _best_of(lambda: _replay(calls, False))
+    interned = _replay(calls, True)
+    ref = _replay(calls, False)
+    mem_int = interned.storage_nbytes()
+    mem_ref = ref.storage_nbytes()
+    print(
+        f"\n  {len(calls)} events @ 512 ranks: "
+        f"interned {t_int * 1e3:.1f} ms / {mem_int / 1e6:.2f} MB vs "
+        f"reference {t_ref * 1e3:.1f} ms / {mem_ref / 1e6:.2f} MB "
+        f"({t_ref / t_int:.1f}x faster, {mem_ref / mem_int:.1f}x smaller)"
+    )
+    assert t_ref / t_int >= 5.0, (t_int, t_ref)
+    assert mem_ref / mem_int >= 10.0, (mem_int, mem_ref)
+
+    # structure dedup: 42 unique stage structures, 36x multiplicity rows
+    assert interned.n_events == ref.n_events == len(calls)
+    assert interned.structs.n_structs == 2 * 3 * 7
+    assert interned.n_rows == 2 * 3 * 7
+    assert set(interned.multiplicity.tolist()) == {MESSAGES_PER_PHASE}
+    assert ref.structs.n_structs == len(calls)
+
+    # and the profiles agree bit-identically
+    assert _profile(interned).to_json() == _profile(ref).to_json()
+
+
+@pytest.mark.parametrize("decomp,n_ranks", [((16, 16, 8), 2048), ((32, 16, 8), 4096)])
+def test_trace_scale_to_4096_ranks(decomp, n_ranks):
+    """2048/4096-rank streams: interned construction stays fast and the
+    buffer stays megabyte-scale where the reference layout grows with
+    events x n_ranks — while profiles stay bit-identical."""
+    calls = _kripke_stream(decomp, n_octants=1)
+    t_int = _best_of(lambda: _replay(calls, True), repeats=2)
+    t_ref = _best_of(lambda: _replay(calls, False), repeats=2)
+    interned = _replay(calls, True)
+    ref = _replay(calls, False)
+    mem_int = interned.storage_nbytes()
+    mem_ref = ref.storage_nbytes()
+    print(
+        f"\n  {len(calls)} events @ {n_ranks} ranks: "
+        f"interned {t_int * 1e3:.1f} ms / {mem_int / 1e6:.2f} MB vs "
+        f"reference {t_ref * 1e3:.1f} ms / {mem_ref / 1e6:.2f} MB "
+        f"({t_ref / t_int:.1f}x faster, {mem_ref / mem_int:.1f}x smaller)"
+    )
+    assert Decomp3D(*decomp).n_ranks == n_ranks
+    assert t_int < t_ref, (t_int, t_ref)
+    assert mem_ref / mem_int >= 10.0, (mem_int, mem_ref)
+    # O(unique_structs x n_ranks + events): single-digit MB even at 4096
+    assert mem_int < (16 << 20), mem_int
+    assert _profile(interned).to_json() == _profile(ref).to_json()
