@@ -9,9 +9,18 @@ import os
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 DRYRUN = os.path.join(RESULTS, "dryrun")
 
-ARCH_ORDER = ("minicpm3-4b", "deepseek-coder-33b", "gemma-2b", "olmo-1b",
-              "zamba2-1.2b", "qwen2-vl-7b", "seamless-m4t-medium",
-              "xlstm-1.3b", "granite-moe-3b-a800m", "grok-1-314b")
+ARCH_ORDER = (
+    "minicpm3-4b",
+    "deepseek-coder-33b",
+    "gemma-2b",
+    "olmo-1b",
+    "zamba2-1.2b",
+    "qwen2-vl-7b",
+    "seamless-m4t-medium",
+    "xlstm-1.3b",
+    "granite-moe-3b-a800m",
+    "grok-1-314b",
+)
 SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 
 
@@ -31,62 +40,88 @@ def improvement_note(rec: dict) -> str:
     shape = rec["shape"]
     if dom == "memory_s":
         if "xlstm" in arch:
-            return ("mLSTM matrix memory (1024^2/head) round-trips HBM every "
-                    "chunk; the Pallas mlstm_scan kernel keeps it in VMEM")
+            return (
+                "mLSTM matrix memory (1024^2/head) round-trips HBM every "
+                "chunk; the Pallas mlstm_scan kernel keeps it in VMEM"
+            )
         if shape.startswith(("prefill", "train")):
-            return ("naive attention materializes S^2 f32 scores; chunked/"
-                    "flash attention removes the quadratic HBM traffic")
+            return (
+                "naive attention materializes S^2 f32 scores; chunked/"
+                "flash attention removes the quadratic HBM traffic"
+            )
         return "decode reads the full KV cache; quantized KV would halve it"
     if dom == "collective_s":
         if rec.get("collectives", {}).get("by_region", {}).get("moe"):
-            return ("GShard dense dispatch einsum + EP traffic dominates; "
-                    "sort-based dispatch or wider expert sharding helps")
-        return ("TP activation all-reduces dominate; lower TP degree / more "
-                "DP, or overlap collectives with compute")
+            return (
+                "GShard dense dispatch einsum + EP traffic dominates; "
+                "sort-based dispatch or wider expert sharding helps"
+            )
+        return (
+            "TP activation all-reduces dominate; lower TP degree / more "
+            "DP, or overlap collectives with compute"
+        )
     return "compute-bound: raise MXU utilization (fused kernels, bf16)"
 
 
 def table(mesh: str = "16x16") -> str:
-    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
-            "dominant | MODEL/HLO flops | roofline frac | mem GiB/dev | "
-            "note |",
-            "|---|---|---|---|---|---|---|---|---|---|"]
-    recs = {(r["arch"], r["shape"]): r for r in load_records()
-            if r.get("mesh") == mesh and "tag" not in r}
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | "
+        "dominant | MODEL/HLO flops | roofline frac | mem GiB/dev | "
+        "note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = {
+        (r["arch"], r["shape"]): r
+        for r in load_records()
+        if r.get("mesh") == mesh and "tag" not in r
+    }
     for arch in ARCH_ORDER:
         for shape in SHAPE_ORDER:
             r = recs.get((arch, shape))
             if r is None:
                 continue
             if r["status"] == "skipped":
-                rows.append(f"| {arch} | {shape} | — | — | — | skipped | — "
-                            f"| — | — | {r['reason'][:60]} |")
+                rows.append(
+                    f"| {arch} | {shape} | — | — | — | skipped | — "
+                    f"| — | — | {r['reason'][:60]} |"
+                )
                 continue
             if r["status"] != "ok":
-                rows.append(f"| {arch} | {shape} | — | — | — | ERROR | — | "
-                            f"— | — | {r.get('error', '')[:60]} |")
+                rows.append(
+                    f"| {arch} | {shape} | — | — | — | ERROR | — | "
+                    f"— | — | {r.get('error', '')[:60]} |"
+                )
                 continue
             rf = r["roofline"]
-            mem = r["memory"]["total_bytes"] / 2 ** 30
+            mem = r["memory"]["total_bytes"] / 2**30
             rows.append(
                 f"| {arch} | {shape} | {rf['compute_s']:.4f} | "
                 f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
                 f"{rf['dominant'].replace('_s', '')} | "
                 f"{rf['model_to_hlo_flops']:.3f} | "
                 f"{rf['roofline_fraction']:.4f} | {mem:.1f} | "
-                f"{improvement_note(r)[:80]} |")
+                f"{improvement_note(r)[:80]} |"
+            )
     return "\n".join(rows)
 
 
 def perf_table() -> str:
     """§Perf: baseline vs optimized for the hillclimbed cells."""
-    base = {(r["arch"], r["shape"]): r for r in load_records()
-            if r.get("mesh") == "16x16" and "tag" not in r
-            and r.get("status") == "ok"}
-    opt = {(r["arch"], r["shape"]): r for r in load_records("*optimized*")
-           if r.get("status") == "ok"}
-    rows = ["| arch | shape | baseline step_s | optimized step_s | "
-            "speedup | frac before -> after |", "|---|---|---|---|---|---|"]
+    base = {
+        (r["arch"], r["shape"]): r
+        for r in load_records()
+        if r.get("mesh") == "16x16" and "tag" not in r and r.get("status") == "ok"
+    }
+    opt = {
+        (r["arch"], r["shape"]): r
+        for r in load_records("*optimized*")
+        if r.get("status") == "ok"
+    }
+    rows = [
+        "| arch | shape | baseline step_s | optimized step_s | "
+        "speedup | frac before -> after |",
+        "|---|---|---|---|---|---|",
+    ]
     for key, o in sorted(opt.items()):
         b = base.get(key)
         if not b:
@@ -96,16 +131,20 @@ def perf_table() -> str:
         rows.append(
             f"| {key[0]} | {key[1]} | {bs:.3f} | {os_:.3f} | "
             f"{bs / os_:.1f}x | {b['roofline']['roofline_fraction']:.4f} -> "
-            f"{o['roofline']['roofline_fraction']:.4f} |")
+            f"{o['roofline']['roofline_fraction']:.4f} |"
+        )
     return "\n".join(rows)
 
 
 def run() -> list:
-    md = ["## Roofline table — single-pod 16x16 (256 chips), baseline "
-          "plans\n", table("16x16"),
-          "\n## Multi-pod 2x16x16 (512 chips)\n", table("2x16x16"),
-          "\n## §Perf hillclimbed cells — baseline vs optimized\n",
-          perf_table()]
+    md = [
+        "## Roofline table — single-pod 16x16 (256 chips), baseline plans\n",
+        table("16x16"),
+        "\n## Multi-pod 2x16x16 (512 chips)\n",
+        table("2x16x16"),
+        "\n## §Perf hillclimbed cells — baseline vs optimized\n",
+        perf_table(),
+    ]
     path = os.path.join(RESULTS, "roofline.md")
     with open(path, "w") as f:
         f.write("\n".join(md))
@@ -115,7 +154,11 @@ def run() -> list:
             continue
         rf = r["roofline"]
         tag = f"/{r['tag']}" if "tag" in r else ""
-        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}",
-                     rf["step_s_lower_bound"] * 1e6,
-                     f"dom={rf['dominant']};frac={rf['roofline_fraction']:.4f}"))
+        rows.append(
+            (
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}",
+                rf["step_s_lower_bound"] * 1e6,
+                f"dom={rf['dominant']};frac={rf['roofline_fraction']:.4f}",
+            )
+        )
     return rows

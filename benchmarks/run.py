@@ -12,7 +12,12 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def run_figures() -> None:
+def run_figures(backend: str | None = None) -> None:
+    if backend is not None:
+        # Fig scripts call profile()/Frame without a backend kwarg; the env
+        # default is how the accelerated path reaches them (see
+        # repro.core.backend.resolve_backend).
+        os.environ["REPRO_BACKEND"] = backend
     import fig1_kripke_scaling
     import fig2_amg_levels
     import fig3_amg_ranks
@@ -43,19 +48,23 @@ def run_figures() -> None:
             print(f"{row_name},{us:.2f},{derived}")
 
 
-def run_smoke(out_dir: str) -> None:
+def run_smoke(out_dir: str, backend: str | None = None) -> None:
     """CI smoke: paper-scale cache sweep + a 4096-rank three-app sweep.
 
     First, the paper's 64..512-rank kripke experiment runs twice: the
     first pass traces under the process-pool executor and populates the
     shared profile cache (the directory manifest must account for every
     worker's hits/misses exactly); the second (serial) pass must be served
-    entirely from the cache and produce byte-identical profiles.  Then the
-    structure-interned trace store's regime is exercised: every
-    ``SCALE_EXPERIMENTS`` app sweeps its 2048- and 4096-rank points and
-    the aggregated frame lands in ``scale_frame.csv``.  Profile JSONs plus
-    the Thicket-frame CSVs land in ``out_dir`` for the workflow to upload
-    as artifacts.
+    entirely from the cache and produce byte-identical profiles.  A third,
+    uncached serial pass re-traces the sweep on the *other* reduction
+    backend (jax when this run used numpy and vice versa, skipped when
+    only one backend is importable) and must also be byte-identical —
+    the cross-backend exactness contract from ``repro.core.backend``,
+    asserted end to end.  Then the structure-interned trace store's regime
+    is exercised: every ``SCALE_EXPERIMENTS`` app sweeps its 2048- and
+    4096-rank points and the aggregated frame lands in
+    ``scale_frame.csv``.  Profile JSONs plus the Thicket-frame CSVs land
+    in ``out_dir`` for the workflow to upload as artifacts.
     """
     import time
     from dataclasses import replace
@@ -66,6 +75,7 @@ def run_smoke(out_dir: str) -> None:
         run_experiment,
     )
     from repro.benchpark.spec import PAPER_EXPERIMENTS, SCALE_EXPERIMENTS
+    from repro.core.backend import resolve_backend
     from repro.core.thicket import Frame
 
     spec = PAPER_EXPERIMENTS["kripke-weak-dane"]  # 64..512 ranks
@@ -75,7 +85,9 @@ def run_smoke(out_dir: str) -> None:
     cache = ProfileCache(cache_root)
     m0 = cache.manifest.read()
     t0 = time.perf_counter()
-    first = run_experiment(spec, out_dir=out_dir, cache=cache, executor="process")
+    first = run_experiment(
+        spec, out_dir=out_dir, cache=cache, executor="process", backend=backend
+    )
     t1 = time.perf_counter()
     assert len(first) == n
     m1 = cache.manifest.read()
@@ -93,6 +105,19 @@ def run_smoke(out_dir: str) -> None:
     assert m2["misses"] == m1["misses"], (m1, m2)
     for a, b in zip(first, second):
         assert a.to_json() == b.to_json()
+
+    # cross-backend pass: re-trace (no cache) on the other backend and
+    # require byte-identical profiles
+    used = type(resolve_backend(backend)).__name__
+    other = "jax" if used == "NumpyBackend" else "numpy"
+    if type(resolve_backend(other)).__name__ == used:
+        other = None  # jax not importable: only one backend available
+    t_x0 = time.perf_counter()
+    if other is not None:
+        cross = run_experiment(spec, cache=None, executor="serial", backend=other)
+        for a, b in zip(first, cross):
+            assert a.to_json() == b.to_json(), (used, other)
+    t_x1 = time.perf_counter()
 
     # one aggregated Thicket frame over the sweep's profile JSONs
     frame = Frame.from_profile_dir(out_dir)
@@ -114,6 +139,7 @@ def run_smoke(out_dir: str) -> None:
             out_dir=out_dir,
             cache=cache,
             executor="process",
+            backend=backend,
         )
     t4 = time.perf_counter()
     scale_frame = Frame.from_profiles(scale_profiles)
@@ -123,11 +149,18 @@ def run_smoke(out_dir: str) -> None:
     with open(scale_path, "w") as f:
         f.write(scale_frame.to_csv())
 
+    cross_msg = (
+        f"cross-backend pass ({used} vs {other}) {t_x1 - t_x0:.1f}s, "
+        f"byte-identical; "
+        if other is not None
+        else "cross-backend pass skipped (jax unavailable); "
+    )
     print(
         f"smoke OK: {n} points in {out_dir}; "
-        f"first pass {t1 - t0:.1f}s (executor=process, manifest "
-        f"hits={served} misses={traced}), "
+        f"first pass {t1 - t0:.1f}s (executor=process, backend={used}, "
+        f"manifest hits={served} misses={traced}), "
         f"second pass {t2 - t1:.1f}s (serial, served from cache); "
+        f"{cross_msg}"
         f"aggregated frame {len(frame)} rows x {len(frame.columns())} cols "
         f"-> {frame_path}; "
         f"scale sweep ({len(scale_profiles)} points up to 4096 ranks) "
@@ -147,11 +180,18 @@ def main() -> None:
         default=os.path.join(os.path.dirname(__file__), "results", "smoke"),
         help="output directory for smoke profile JSONs",
     )
+    parser.add_argument(
+        "--backend",
+        choices=("numpy", "jax"),
+        default=None,
+        help="reduction backend for profiling sweeps "
+        "(default: REPRO_BACKEND env, else numpy)",
+    )
     args = parser.parse_args()
     if args.smoke:
-        run_smoke(args.out)
+        run_smoke(args.out, backend=args.backend)
     else:
-        run_figures()
+        run_figures(backend=args.backend)
 
 
 if __name__ == "__main__":

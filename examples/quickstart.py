@@ -6,6 +6,13 @@
 3. print the Table-I-schema statistics and the corner-vs-interior finding,
 4. run the same profiler over a *compiled sharded LM step* and attribute
    GSPMD collectives to model regions.
+
+Every reduction below runs on the swappable backend from
+``repro.core.backend``: set ``REPRO_BACKEND=jax`` (or pass
+``backend="jax"`` to ``CommPatternProfiler.from_recorder`` /
+``Frame.group_by``/``agg``/``pivot``) to move the per-region weight
+matmuls onto jax.jit — profiles stay byte-identical to the NumPy
+reference either way.
 """
 
 import os
@@ -17,31 +24,10 @@ from repro.apps.kripke import KripkeConfig, profile as kripke_profile
 from repro.apps.stencil import Decomp3D
 from repro.core.reports import region_stats_table, table1_schema
 
-
-def main() -> None:
-    print("== Table I — attributes the profiler collects ==")
-    print(table1_schema())
-
-    print("\n== Kripke sweep at 4x4x4 = 64 ranks (paper Dane point) ==")
-    cfg = KripkeConfig(decomp=Decomp3D(4, 4, 4), nx=16, ny=32, nz=32,
-                      n_octants=2, fuse_messages=False)
-    prof = kripke_profile(cfg)
-    print(region_stats_table(prof))
-    sc = prof.regions["sweep_comm"]
-    print(f"\ncommunication partners per rank: min={sc.dest_ranks[0]} "
-          f"(corner), max={sc.dest_ranks[1]} (interior) — paper §IV-A")
-    print(f"messages per phase per partner: "
-          f"{cfg.n_dirsets * cfg.n_groupsets} — paper's 36")
-
-    print("\n== The same analysis on a compiled sharded LM train step ==")
-    # (small mesh: works on any machine; the 512-chip version is
-    #  `python -m repro.launch.dryrun`)
-    import subprocess
-    out = subprocess.run(
-        [sys.executable, "-c", """
+_LM_SNIPPET = """
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
-import sys; sys.path.insert(0, %r)
+import sys; sys.path.insert(0, {src!r})
 import jax
 from repro.configs import registry
 from repro.core.hlo import scan_hlo_collectives
@@ -65,9 +51,48 @@ with parallel_context(mesh, plan):
 s = scan_hlo_collectives(compiled.as_text(), 8, with_loops=True).summarize()
 print('collectives by model region (count, wire bytes/device):')
 for region, (n, b) in sorted(s.by_region.items()):
-    print(f'  {region:12s} n={n:3d}  {b:12d} B')
-""" % os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))],
-        capture_output=True, text=True)
+    print(f'  {{region:12s}} n={{n:3d}}  {{b:12d}} B')
+"""
+
+
+def main() -> None:
+    print("== Table I — attributes the profiler collects ==")
+    print(table1_schema())
+
+    print("\n== Kripke sweep at 4x4x4 = 64 ranks (paper Dane point) ==")
+    cfg = KripkeConfig(
+        decomp=Decomp3D(4, 4, 4),
+        nx=16,
+        ny=32,
+        nz=32,
+        n_octants=2,
+        fuse_messages=False,
+    )
+    # REPRO_BACKEND=jax python examples/quickstart.py runs this same
+    # profile on the jax.jit reduction backend, byte-identically.
+    prof = kripke_profile(cfg)
+    print(region_stats_table(prof))
+    sc = prof.regions["sweep_comm"]
+    print(
+        f"\ncommunication partners per rank: min={sc.dest_ranks[0]} "
+        f"(corner), max={sc.dest_ranks[1]} (interior) — paper §IV-A"
+    )
+    print(
+        f"messages per phase per partner: "
+        f"{cfg.n_dirsets * cfg.n_groupsets} — paper's 36"
+    )
+
+    print("\n== The same analysis on a compiled sharded LM train step ==")
+    # (small mesh: works on any machine; the 512-chip version is
+    #  `python -m repro.launch.dryrun`)
+    import subprocess
+
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _LM_SNIPPET.format(src=src)],
+        capture_output=True,
+        text=True,
+    )
     print(out.stdout or out.stderr)
 
 

@@ -52,10 +52,12 @@ import os
 import threading
 import time
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from contextlib import nullcontext
 from dataclasses import asdict, is_dataclass
 from typing import Optional
 
 from repro.benchpark.spec import ExperimentSpec
+from repro.core.backend import use_backend
 from repro.core.profiler import CommProfile
 from repro.core.thicket import Frame
 
@@ -114,6 +116,7 @@ def _roofline_seconds(app: str, cfg, profile: CommProfile) -> float:
 #: trace/profiling semantics or the app kernels changes the fingerprint and
 #: therefore invalidates every cached profile.
 _FINGERPRINT_MODULES = (
+    "repro.core.backend",
     "repro.core.collectives",
     "repro.core.compat",
     "repro.core.profiler",
@@ -433,13 +436,21 @@ class ProfileCache:
 
 
 def _trace_point(
-    spec: ExperimentSpec, pt, cfg, cache: Optional[ProfileCache], verbose: bool
+    spec: ExperimentSpec,
+    pt,
+    cfg,
+    cache: Optional[ProfileCache],
+    verbose: bool,
+    backend: Optional[str] = None,
 ) -> tuple:
     """Profile (or cache-load) one scaling point.
 
     Module-level so it pickles into process-pool workers; ``cache``
     hit/miss counters are handle-local, the backing directory and its
-    manifest are shared.  Returns ``(pt, profile, cached)``.
+    manifest are shared.  ``backend`` names the reduction backend for the
+    trace (installed thread-locally via ``use_backend``, so it holds inside
+    pool workers without changing the app ``profile()`` signatures).
+    Returns ``(pt, profile, cached)``.
     """
     from repro.apps import amg, kripke, laghos
 
@@ -463,7 +474,11 @@ def _trace_point(
         prof.name = f"{spec.name}-{pt.n_ranks}"
         prof.meta = meta
     else:
-        prof = profile_fns[spec.app](cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta)
+        ctx = use_backend(backend) if backend is not None else nullcontext()
+        with ctx:
+            prof = profile_fns[spec.app](
+                cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta
+            )
     prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
     if cache and not cached:
         cache.put(key, prof)
@@ -481,9 +496,9 @@ def _trace_point(
 
 def _trace_point_in_worker(args) -> tuple:
     """Process-pool entry: rebuild a cache handle on the shared directory."""
-    spec, pt, cfg, cache_root, max_bytes, verbose = args
+    spec, pt, cfg, cache_root, max_bytes, verbose, backend = args
     cache = ProfileCache(cache_root, max_bytes) if cache_root else None
-    return _trace_point(spec, pt, cfg, cache, verbose)
+    return _trace_point(spec, pt, cfg, cache, verbose, backend)
 
 
 def run_experiment(
@@ -496,6 +511,7 @@ def run_experiment(
     max_workers: Optional[int] = None,
     executor: str = "thread",
     frame_csv: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> list:
     """Profile every scaling point of ``spec`` (cached + concurrent).
 
@@ -506,9 +522,12 @@ def run_experiment(
     and its manifest via atomic renames), or ``"serial"``.
     ``max_workers``: pool width for independent points; defaults to
     min(4, n_points).  ``frame_csv``: also write the sweep as one
-    aggregated Thicket-frame CSV (one row per profile x region).  Results
-    keep the spec's point order regardless of completion order; all
-    executors produce byte-identical profiles.
+    aggregated Thicket-frame CSV (one row per profile x region).
+    ``backend``: reduction-backend name for every traced point (see
+    ``repro.core.backend``; default resolves from ``REPRO_BACKEND``) — all
+    backends produce byte-identical profiles.  Results keep the spec's
+    point order regardless of completion order; all executors produce
+    byte-identical profiles.
     """
     if executor not in ("thread", "process", "serial"):
         raise ValueError(f"unknown executor: {executor!r}")
@@ -529,6 +548,7 @@ def run_experiment(
                 cache.root if cache else None,
                 cache.max_bytes if cache else None,
                 verbose,
+                backend,
             )
             for pt, cfg in points
         ]
@@ -547,12 +567,17 @@ def run_experiment(
         with ThreadPoolExecutor(max_workers=max_workers) as ex:
             results = list(
                 ex.map(
-                    lambda pc: _trace_point(spec, pc[0], pc[1], cache, verbose),
+                    lambda pc: _trace_point(
+                        spec, pc[0], pc[1], cache, verbose, backend
+                    ),
                     points,
                 )
             )  # keeps point order
     else:
-        results = [_trace_point(spec, pt, cfg, cache, verbose) for pt, cfg in points]
+        results = [
+            _trace_point(spec, pt, cfg, cache, verbose, backend)
+            for pt, cfg in points
+        ]
 
     profiles = []
     for pt, prof, _ in results:

@@ -13,9 +13,16 @@ Public API:
                                parse_hlo_collectives* are its view adapters)
   Frame / reports            — Thicket-style analysis & paper-table emitters
                                (two-layer: traced + hlo rows per region)
+  resolve_backend / use_backend — reduction-backend selection (numpy | jax;
+                               default from REPRO_BACKEND, byte-identical
+                               profiles across backends)
 """
 
 from repro.core import compat  # noqa: F401
+from repro.core.backend import (  # noqa: F401
+    BackendUnavailable, NumpyBackend, ReduceBackend, available_backends,
+    resolve_backend, use_backend,
+)
 from repro.core.regions import (  # noqa: F401
     comm_region, recording, current_region, COMM_REGION_SCOPE_PREFIX,
 )

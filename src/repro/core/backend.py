@@ -1,0 +1,687 @@
+"""Backend-abstracted reduction substrate shared by every analysis layer.
+
+The profilers (traced-layer :class:`~repro.core.profiler.CommPatternProfiler`,
+compiled-layer :class:`~repro.core.profiler.HloCollectiveProfiler`) and the
+vectorized :class:`~repro.core.thicket.Frame` reductions all bottom out in a
+small set of kernels:
+
+* :func:`segment_spans` — ordering + contiguous block boundaries for
+  grouped segment reductions (host-side NumPy; shared by every backend);
+* ``block_reduce`` / ``segment_reduce`` — per-segment reductions over 2-D
+  grids / 1-D columns;
+* ``matmul`` — the (region x struct) multiplicity-weighted **exact int64**
+  weight matmuls against the StructTable's dense (struct x rank) slabs;
+* ``pair_counts`` — the distinct-peer-set dedup over encoded
+  (region, rank, peer) codes;
+* ``factorize`` — ``np.unique(return_index, return_inverse)`` semantics for
+  Frame group codes.
+
+Two interchangeable implementations with **bit-identical** outputs:
+
+``NumpyBackend``
+    The reference: plain NumPy, the historical hot path.  ``pair_counts``
+    picks between one dense bitmap scatter, a *chunked* bitmap scatter over
+    region groups (bounding peak allocation to :data:`_BITMAP_CELLS_CAP`
+    cells at high rank counts), and a sort-based ``np.unique`` pass when the
+    code space is sparse relative to the pair count — see
+    :func:`_dedup_strategy`.
+
+``JaxBackend``
+    ``jax.jit``-compiled reductions with x64 enabled *inside the backend
+    only* (``jax.experimental.enable_x64`` scopes every call, so the
+    process-global default dtype is untouched).  Exact int64 matmuls run on
+    device as f64 ``dot_general``: a single f64 product is exact whenever
+    ``max|w| * max|slab| * S < 2**53``, and larger values split into
+    limb-decomposed partial matmuls recombined by shifts (still exact —
+    every partial product and partial sum is an integer below 2**53).  An
+    optional **Pallas segmented-reduce kernel** (the house
+    ``kernels/ssd_scan.py`` idiom: sequential grid over fixed-size row
+    blocks, VMEM scratch accumulator initialized at step 0 and emitted at
+    the last step) backs ``block_reduce`` / ``segment_reduce``; it
+    auto-enables on TPU and runs in ``interpret=True`` mode elsewhere so
+    parity is testable on CPU.
+
+Boundary contract (what the profilers rely on):
+
+* NumPy in, NumPy out — every method accepts and returns ``np.ndarray``;
+  device residency is a backend-internal detail.
+* int64 count/byte paths are **exact**, never rounded: results are
+  bit-identical across backends whenever the true values fit in int64.
+* Small scatters (``np.add.at`` weight accumulation), argsorts, and
+  ``reduceat`` calls with O(rows) inputs stay host-side even under the jax
+  backend — measured on CPU, XLA scatter/sort lose to NumPy there, while
+  the weight-grid matmuls (the O(G*S*Rmax) term that dominates at high
+  rank counts) win by a wide margin.
+
+Selection: :func:`resolve_backend` resolves, in priority order, an explicit
+``backend=`` argument (name or instance), a :func:`use_backend` thread-local
+override, the ``REPRO_BACKEND`` environment variable, and finally
+``"numpy"``.  Asking for jax when it is missing or x64 cannot be enabled
+warns and falls back to NumPy instead of crashing; an unknown *explicit*
+name raises ``ValueError`` while an unknown environment value only warns.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import threading
+import warnings
+from contextlib import contextmanager
+from typing import Optional, Union
+
+import numpy as np
+
+#: Environment variable naming the default reduction backend.
+BACKEND_ENV = "REPRO_BACKEND"
+
+#: f64 integer-exactness bound: every integer with |v| < 2**53 is exact.
+_F64_EXACT = 1 << 53
+
+#: Dense dedup bitmaps never allocate more than this many boolean cells at
+#: once; past it the scatter chunks over region groups (or falls back to the
+#: sort-based path) — see :func:`_dedup_strategy`.
+_BITMAP_CELLS_CAP = 1 << 26
+
+#: Dense bitmaps touch every cell; past this work factor relative to the
+#: pair count, one sort of the pair codes is cheaper than zeroing+summing
+#: the full (group, rank, peer) code space.
+_BITMAP_WORK_FACTOR = 64
+
+
+# ---------------------------------------------------------------------------
+# Shared host-side kernels (every backend uses these)
+# ---------------------------------------------------------------------------
+
+
+def segment_spans(key: np.ndarray) -> tuple:
+    """Ordering + contiguous block boundaries for segment reductions.
+
+    ``key`` holds one composite int group code per element.  Returns
+    ``(order, sorted_key, starts, ends)``: ``order`` is None when the input
+    is already non-decreasing (the common, pre-grouped trace shape — the
+    permutation is skipped entirely), otherwise a stable argsort; block
+    ``i`` of the sorted data spans ``starts[i]:ends[i]`` and carries key
+    ``sorted_key[starts[i]]``.
+    """
+    n = len(key)
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return None, np.asarray(key), z, z
+    if np.any(np.diff(key) < 0):
+        order = np.argsort(key, kind="stable")
+        sorted_key = key[order]
+    else:
+        order = None
+        sorted_key = key
+    starts = np.concatenate(([0], np.flatnonzero(np.diff(sorted_key)) + 1))
+    ends = np.append(starts[1:], n)
+    return order, sorted_key, starts, ends
+
+
+def block_reduce(
+    grid: np.ndarray, starts: np.ndarray, ends: np.ndarray, ufunc: np.ufunc
+) -> np.ndarray:
+    """One contiguous block reduction per segment over a 2-D grid's rows.
+
+    ``ufunc.reduce`` over a contiguous block vectorizes along the inner
+    axis where generic ``reduceat`` falls back to a scalar inner loop; the
+    block count is O(groups), not O(rows).  This is the NumPy reference —
+    backends may route it elsewhere (see :meth:`JaxBackend.block_reduce`).
+    """
+    return np.stack([ufunc.reduce(grid[s:e], axis=0) for s, e in zip(starts, ends)])
+
+
+def segment_reduce(
+    col: np.ndarray, order, starts: np.ndarray, ufunc: np.ufunc = np.add
+) -> np.ndarray:
+    """Per-segment reduction of a 1-D column in one ``reduceat`` pass.
+
+    ``order`` / ``starts`` come from :func:`segment_spans` over the
+    column's group codes.  NumPy reference implementation.
+    """
+    if not len(starts):
+        return np.zeros(0, col.dtype)
+    vals = col if order is None else col[order]
+    return ufunc.reduceat(vals, starts)
+
+
+def _segment_ids(starts: np.ndarray, n: int) -> np.ndarray:
+    """Per-element segment id for contiguous spans tiling ``[0, n)``."""
+    nseg = len(starts)
+    lengths = np.diff(np.append(starts, n))
+    return np.repeat(np.arange(nseg, dtype=np.int64), lengths)
+
+
+# ---------------------------------------------------------------------------
+# Peer-set dedup strategy (satellite of the backend refactor: the dense
+# G * Rmax * stride bitmap went quadratic-ish at high rank counts)
+# ---------------------------------------------------------------------------
+
+
+def _dedup_strategy(n_groups: int, rank_extent: int, stride: int, m: int) -> tuple:
+    """Pick the distinct-peer dedup path for ``m`` encoded pairs.
+
+    Returns ``("bitmap", n_groups)`` for one dense scatter over the whole
+    (group, rank, peer) code space, ``("chunked", groups_per_chunk)`` for
+    dense scatters over group chunks whose bitmaps stay under
+    :data:`_BITMAP_CELLS_CAP` cells, or ``("unique", 0)`` for the
+    sort-based path.  Dense scatters touch every cell, so they only run
+    when the code space is within :data:`_BITMAP_WORK_FACTOR` cells per
+    pair; the chunking keeps peak allocation bounded at rank counts where
+    the historical single bitmap (``cells = G * Rmax * stride``, with
+    ``stride ~ Rmax``) grew quadratically.  All three paths produce
+    identical counts.
+    """
+    per_group = int(rank_extent) * int(stride)
+    cells = int(n_groups) * per_group
+    if m == 0 or cells == 0:
+        return ("unique", 0)
+    if cells > _BITMAP_WORK_FACTOR * m:
+        return ("unique", 0)
+    if cells <= _BITMAP_CELLS_CAP:
+        return ("bitmap", int(n_groups))
+    if per_group <= _BITMAP_CELLS_CAP:
+        return ("chunked", max(1, _BITMAP_CELLS_CAP // per_group))
+    return ("unique", 0)
+
+
+def _pair_counts_numpy(
+    group_ids: np.ndarray,
+    rows: np.ndarray,
+    peers: np.ndarray,
+    n_groups: int,
+    rank_extent: int,
+    strategy: Optional[tuple] = None,
+) -> np.ndarray:
+    """|distinct peers| per (group, rank) over encoded pairs (NumPy).
+
+    ``group_ids`` must be non-decreasing (the profiler's unique
+    (region, struct) combinations are emitted group-major), which lets the
+    chunked path slice pair runs per group with one ``searchsorted``.
+    ``strategy`` forces a :func:`_dedup_strategy` decision (tests only).
+    """
+    m = len(rows)
+    counts = np.zeros(n_groups * rank_extent, np.int64)
+    if m == 0 or rank_extent == 0 or n_groups == 0:
+        return counts.reshape(n_groups, rank_extent)
+    stride = np.int64(int(peers.max()) + 1)
+    if strategy is None:
+        strategy = _dedup_strategy(n_groups, rank_extent, int(stride), m)
+    kind, chunk = strategy
+    if kind == "unique":
+        codes = (group_ids * rank_extent + rows) * stride + peers
+        uniq = np.unique(codes)
+        counts = np.bincount(uniq // stride, minlength=n_groups * rank_extent)
+    elif kind == "bitmap":
+        codes = (group_ids * rank_extent + rows) * stride + peers
+        bitmap = np.zeros(n_groups * rank_extent * int(stride), bool)
+        bitmap[codes] = True
+        counts = bitmap.reshape(n_groups * rank_extent, int(stride)).sum(axis=1)
+    else:  # chunked: dense scatter per run of groups, bounded peak memory
+        bounds = np.searchsorted(group_ids, np.arange(n_groups + 1))
+        for g0 in range(0, n_groups, chunk):
+            g1 = min(g0 + chunk, n_groups)
+            lo, hi = int(bounds[g0]), int(bounds[g1])
+            if lo == hi:
+                continue
+            local = (
+                (group_ids[lo:hi] - g0) * rank_extent + rows[lo:hi]
+            ) * stride + peers[lo:hi]
+            bitmap = np.zeros((g1 - g0) * rank_extent * int(stride), bool)
+            bitmap[local] = True
+            counts[g0 * rank_extent : g1 * rank_extent] = bitmap.reshape(
+                (g1 - g0) * rank_extent, int(stride)
+            ).sum(axis=1)
+    return counts.reshape(n_groups, rank_extent).astype(np.int64, copy=False)
+
+
+# ---------------------------------------------------------------------------
+# Backend interface + NumPy reference
+# ---------------------------------------------------------------------------
+
+
+class ReduceBackend:
+    """Interface every reduction backend implements (NumPy in, NumPy out)."""
+
+    name = "abstract"
+
+    def matmul(self, w: np.ndarray, grid: np.ndarray) -> np.ndarray:
+        """Exact int64 (G, S) @ (S, R) — never rounded."""
+        raise NotImplementedError
+
+    def block_reduce(self, grid, starts, ends, ufunc: np.ufunc) -> np.ndarray:
+        raise NotImplementedError
+
+    def segment_reduce(self, col, order, starts, ufunc: np.ufunc = np.add):
+        raise NotImplementedError
+
+    def factorize(self, col: np.ndarray) -> tuple:
+        """``(uniq, first_index, inverse)`` with np.unique semantics."""
+        raise NotImplementedError
+
+    def pair_counts(self, group_ids, rows, peers, n_groups, rank_extent):
+        """|distinct peers| per (group, rank); group_ids non-decreasing."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<{type(self).__name__} name={self.name!r}>"
+
+
+class NumpyBackend(ReduceBackend):
+    """The reference backend: plain NumPy, bit-exact by construction."""
+
+    name = "numpy"
+
+    def matmul(self, w: np.ndarray, grid: np.ndarray) -> np.ndarray:
+        return w @ grid
+
+    def block_reduce(self, grid, starts, ends, ufunc: np.ufunc) -> np.ndarray:
+        return block_reduce(grid, starts, ends, ufunc)
+
+    def segment_reduce(self, col, order, starts, ufunc: np.ufunc = np.add):
+        return segment_reduce(col, order, starts, ufunc)
+
+    def factorize(self, col: np.ndarray) -> tuple:
+        uniq, first, inv = np.unique(col, return_index=True, return_inverse=True)
+        return uniq, first.astype(np.int64), inv.reshape(-1).astype(np.int64)
+
+    def pair_counts(self, group_ids, rows, peers, n_groups, rank_extent):
+        return _pair_counts_numpy(group_ids, rows, peers, n_groups, rank_extent)
+
+
+# ---------------------------------------------------------------------------
+# jax backend: exact f64/limb matmuls + optional Pallas segmented reduce
+# ---------------------------------------------------------------------------
+
+
+class BackendUnavailable(RuntimeError):
+    """Raised when the jax backend cannot run here (no jax, or no x64)."""
+
+
+def _import_jax():
+    """Deferred jax import (monkeypatched by the fallback tests)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    return jax, jnp, enable_x64
+
+
+def _x64_ok() -> bool:
+    """True when ``enable_x64`` actually yields 64-bit array types."""
+    try:
+        jax, jnp, enable_x64 = _import_jax()
+        with enable_x64():
+            return bool(jnp.zeros((), jnp.int64).dtype == np.dtype(np.int64))
+    except Exception:
+        return False
+
+
+def _nlimbs(vmax: int, t: int) -> int:
+    return max(1, -(-max(vmax, 1).bit_length() // t))
+
+
+def _limb_width(other_max: int, s: int) -> int:
+    """Widest limb t with (2**t - 1) * other_max * s < 2**53."""
+    om, sm = max(other_max, 1), max(s, 1)
+    t = 0
+    while t < 63 and ((1 << (t + 1)) - 1) * om * sm < _F64_EXACT:
+        t += 1
+    return t
+
+
+def _limb_plan(amax: int, bmax: int, s: int) -> Optional[tuple]:
+    """(ta, ka, tb, kb) limb widths/counts making every partial f64 dot
+    exact, or None when even 1-bit limbs overflow (true int64 results
+    cannot reach that regime; callers fall back to the NumPy matmul)."""
+    if amax * bmax * max(s, 1) < _F64_EXACT:
+        return (64, 1, 64, 1)
+    ta = _limb_width(bmax, s)
+    if ta >= 1:
+        return (ta, _nlimbs(amax, ta), 64, 1)
+    tb = 0  # split both sides: grow symmetric widths while exact
+    while ((1 << (tb + 1)) - 1) ** 2 * max(s, 1) < _F64_EXACT:
+        tb += 1
+    if tb < 1:
+        return None
+    ta = _limb_width((1 << tb) - 1, s)
+    if ta < 1:
+        return None
+    return (ta, _nlimbs(amax, ta), tb, _nlimbs(bmax, tb))
+
+
+def _limbs(arr: np.ndarray, t: int, k: int) -> np.ndarray:
+    """Stack ``k`` little-endian limbs of width ``t`` bits: (k, *arr.shape)."""
+    if k == 1 and t >= 64:
+        return arr[None]
+    mask = np.int64((1 << t) - 1)
+    return np.stack([(arr >> (t * i)) & mask for i in range(k)])
+
+
+@functools.lru_cache(maxsize=None)
+def _limb_dot_fn(ka: int, kb: int, ta: int, tb: int):
+    """jit-compiled exact dot over limb stacks (cached per limb plan)."""
+    jax, jnp, _ = _import_jax()
+
+    def dot(a_limbs, b_limbs):  # (ka, G, S) i64, (kb, S, R) i64 -> (G, R) i64
+        af = a_limbs.astype(jnp.float64)
+        bf = b_limbs.astype(jnp.float64)
+        out = None
+        for i in range(ka):
+            for j in range(kb):
+                p = jnp.rint(af[i] @ bf[j]).astype(jnp.int64)
+                shift = ta * i + tb * j
+                if shift:
+                    p = p << shift
+                out = p if out is None else out + p
+        return out
+
+    return jax.jit(dot)
+
+
+_SEG_OPS = {np.add: "sum", np.maximum: "max", np.minimum: "min"}
+
+
+def _op_init(op: str, dtype) -> np.generic:
+    if op == "sum":
+        return np.zeros((), dtype)[()]
+    info = np.iinfo(dtype) if np.issubdtype(dtype, np.integer) else np.finfo(dtype)
+    return np.asarray(info.min if op == "max" else info.max, dtype)[()]
+
+
+def _pallas_segment_reduce(
+    vals: np.ndarray,
+    seg: np.ndarray,
+    n_segments: int,
+    op: str,
+    *,
+    interpret: bool,
+    block: int = 256,
+) -> np.ndarray:
+    """Segmented reduce as a Pallas kernel (ssd_scan idiom).
+
+    Sequential grid over fixed-size row blocks of the segment-sorted
+    ``vals (N, C)``; the (n_segments, C) accumulator lives in VMEM scratch,
+    initialized at grid step 0 and emitted at the last step.  Rows combine
+    into their segment with a one-hot mask, so dynamic span lengths never
+    reach the kernel.  ``interpret=True`` runs it on CPU for parity tests.
+    """
+    jax, jnp, enable_x64 = _import_jax()
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    n, c = vals.shape
+    init = _op_init(op, vals.dtype)
+    pad = (-n) % block
+    if pad:
+        seg = np.concatenate([seg, np.full(pad, n_segments, seg.dtype)])
+        vals = np.concatenate([vals, np.full((pad, c), init, vals.dtype)])
+    seg = seg.astype(np.int32)
+    nb = len(seg) // block
+
+    def kernel(seg_ref, val_ref, out_ref, acc_ref):
+        bi = pl.program_id(0)
+
+        @pl.when(bi == 0)
+        def _init():
+            acc_ref[...] = jnp.full_like(acc_ref, init)
+
+        sids = seg_ref[...]  # (block,)
+        rows = val_ref[...]  # (block, c)
+        onehot = sids[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (block, n_segments), 1
+        )
+        hit = onehot[:, :, None]  # (block, n_segments, 1)
+        if op == "sum":
+            acc_ref[...] += jnp.sum(jnp.where(hit, rows[:, None, :], 0), axis=0)
+        elif op == "max":
+            acc_ref[...] = jnp.maximum(
+                acc_ref[...],
+                jnp.max(jnp.where(hit, rows[:, None, :], init), axis=0),
+            )
+        else:  # min
+            acc_ref[...] = jnp.minimum(
+                acc_ref[...],
+                jnp.min(jnp.where(hit, rows[:, None, :], init), axis=0),
+            )
+
+        @pl.when(bi == pl.num_programs(0) - 1)
+        def _emit():
+            out_ref[...] = acc_ref[...]
+
+    with enable_x64():
+        out = pl.pallas_call(
+            kernel,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((block, c), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((n_segments, c), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_segments, c), vals.dtype),
+            scratch_shapes=[pltpu.VMEM((n_segments, c), jnp.dtype(vals.dtype))],
+            interpret=interpret,
+        )(seg, vals)
+        return np.asarray(out)
+
+
+class JaxBackend(ReduceBackend):
+    """jax.jit reductions; x64 is enabled inside every call, never globally.
+
+    ``use_pallas=None`` auto-enables the Pallas segmented-reduce kernel on
+    TPU only; ``interpret=None`` runs Pallas in interpret mode off-TPU so
+    the kernel stays testable on CPU.  Construction raises
+    :class:`BackendUnavailable` when jax is missing or x64 cannot be
+    enabled — :func:`resolve_backend` turns that into a warning + NumPy
+    fallback.
+    """
+
+    name = "jax"
+
+    def __init__(
+        self,
+        use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
+    ):
+        try:
+            self._jax, self._jnp, self._enable_x64 = _import_jax()
+        except Exception as e:
+            raise BackendUnavailable(f"jax is not importable: {e!r}") from e
+        if not _x64_ok():
+            raise BackendUnavailable(
+                "jax x64 mode is unavailable; exact int64 reductions need it"
+            )
+        on_tpu = self._jax.default_backend() == "tpu"
+        self.use_pallas = on_tpu if use_pallas is None else bool(use_pallas)
+        self.interpret = (not on_tpu) if interpret is None else bool(interpret)
+
+    # -- exact int64 matmul -------------------------------------------------
+    def matmul(self, w: np.ndarray, grid: np.ndarray) -> np.ndarray:
+        w = np.ascontiguousarray(w, np.int64)
+        grid = np.ascontiguousarray(grid, np.int64)
+        g, s = w.shape
+        r = grid.shape[1]
+        if g == 0 or s == 0 or r == 0:
+            return np.zeros((g, r), np.int64)
+        if int(w.min()) < 0 or int(grid.min()) < 0:
+            return w @ grid  # profiler weights are non-negative by contract
+        plan = _limb_plan(int(w.max()), int(grid.max()), s)
+        if plan is None:  # pragma: no cover - beyond any int64-valid input
+            return w @ grid
+        ta, ka, tb, kb = plan
+        with self._enable_x64():
+            out = _limb_dot_fn(ka, kb, ta, tb)(
+                _limbs(w, ta, ka),
+                _limbs(grid, tb, kb),
+            )
+            return np.asarray(out)
+
+    # -- segmented reductions -----------------------------------------------
+    def _segment_apply(self, vals: np.ndarray, seg: np.ndarray, nseg: int, op):
+        if self.use_pallas:
+            flat = vals if vals.ndim == 2 else vals[:, None]
+            out = _pallas_segment_reduce(
+                flat,
+                seg,
+                nseg,
+                op,
+                interpret=self.interpret,
+            )
+            return out if vals.ndim == 2 else out[:, 0]
+        jax = self._jax
+        fns = {
+            "sum": jax.ops.segment_sum,
+            "max": jax.ops.segment_max,
+            "min": jax.ops.segment_min,
+        }
+        with self._enable_x64():
+            out = fns[op](
+                vals,
+                seg,
+                num_segments=nseg,
+                indices_are_sorted=True,
+            )
+            return np.asarray(out)
+
+    def block_reduce(self, grid, starts, ends, ufunc: np.ufunc) -> np.ndarray:
+        op = _SEG_OPS.get(ufunc)
+        if op is None or getattr(grid, "ndim", 0) != 2:
+            return block_reduce(grid, starts, ends, ufunc)
+        nseg = len(starts)
+        if nseg == 0:
+            return np.zeros((0,) + grid.shape[1:], grid.dtype)
+        lens = np.asarray(ends) - np.asarray(starts)
+        n = int(lens.sum())
+        offs = np.zeros(nseg, np.int64)
+        np.cumsum(lens[:-1], out=offs[1:])
+        idx = np.repeat(starts, lens) + (np.arange(n) - np.repeat(offs, lens))
+        seg = np.repeat(np.arange(nseg, dtype=np.int64), lens)
+        out = self._segment_apply(grid[idx], seg, nseg, op)
+        return out.astype(grid.dtype, copy=False)
+
+    def segment_reduce(self, col, order, starts, ufunc: np.ufunc = np.add):
+        if not len(starts):
+            return np.zeros(0, col.dtype)
+        op = _SEG_OPS.get(ufunc)
+        if op is None:
+            return segment_reduce(col, order, starts, ufunc)
+        vals = col if order is None else col[order]
+        seg = _segment_ids(np.asarray(starts), len(vals))
+        out = self._segment_apply(np.asarray(vals), seg, len(starts), op)
+        return out.astype(col.dtype, copy=False)
+
+    # -- factorize / dedup ----------------------------------------------------
+    def factorize(self, col: np.ndarray) -> tuple:
+        col = np.asarray(col)
+        with self._enable_x64():
+            uniq, inv = self._jnp.unique(col, return_inverse=True)
+        uniq = np.asarray(uniq)
+        inv = np.asarray(inv).reshape(-1).astype(np.int64)
+        # first-occurrence indices derived from the inverse (np.unique's
+        # return_index contract), independent of jnp.unique tie-breaking
+        first = np.full(len(uniq), len(inv), np.int64)
+        np.minimum.at(first, inv, np.arange(len(inv), dtype=np.int64))
+        return uniq, first, inv
+
+    def pair_counts(self, group_ids, rows, peers, n_groups, rank_extent):
+        m = len(rows)
+        if m == 0 or rank_extent == 0 or n_groups == 0:
+            return np.zeros((n_groups, rank_extent), np.int64)
+        stride = np.int64(int(peers.max()) + 1)
+        codes = (group_ids * rank_extent + rows) * stride + peers
+        with self._enable_x64():
+            uniq = np.asarray(self._jnp.unique(codes))
+        counts = np.bincount(uniq // stride, minlength=n_groups * rank_extent)
+        return counts.reshape(n_groups, rank_extent).astype(np.int64, copy=False)
+
+
+# ---------------------------------------------------------------------------
+# Selection: explicit arg > use_backend() override > REPRO_BACKEND > numpy
+# ---------------------------------------------------------------------------
+
+_instances: dict = {}
+_instances_lock = threading.Lock()
+_tls = threading.local()
+
+
+def available_backends() -> tuple:
+    return ("numpy", "jax")
+
+
+def _instance(name: str) -> ReduceBackend:
+    with _instances_lock:
+        inst = _instances.get(name)
+        if inst is None:
+            inst = NumpyBackend() if name == "numpy" else JaxBackend()
+            _instances[name] = inst
+        return inst
+
+
+def resolve_backend(
+    backend: Union[ReduceBackend, str, None] = None,
+) -> ReduceBackend:
+    """Resolve a backend name/instance to a :class:`ReduceBackend`.
+
+    Priority: explicit ``backend`` argument, then a :func:`use_backend`
+    thread-local override, then the ``REPRO_BACKEND`` environment variable,
+    then ``"numpy"``.  ``"jax"`` falls back to NumPy **with a warning**
+    when jax is missing or x64 cannot be enabled; an unknown explicit name
+    raises ``ValueError``, an unknown environment/override value warns and
+    falls back.
+    """
+    if isinstance(backend, ReduceBackend):
+        return backend
+    explicit = backend is not None
+    name = backend
+    if name is None:
+        override = getattr(_tls, "override", None)
+        if isinstance(override, ReduceBackend):
+            return override
+        name = override
+    if name is None:
+        name = os.environ.get(BACKEND_ENV)
+    if name is None:
+        return _instance("numpy")
+    name = str(name).strip().lower()
+    if name not in available_backends():
+        if explicit:
+            raise ValueError(
+                f"unknown reduction backend: {backend!r} "
+                f"(expected one of {available_backends()})"
+            )
+        warnings.warn(
+            f"{BACKEND_ENV}={name!r} is not a known reduction backend "
+            f"{available_backends()}; falling back to numpy",
+            stacklevel=2,
+        )
+        return _instance("numpy")
+    if name == "jax":
+        try:
+            return _instance("jax")
+        except BackendUnavailable as e:
+            warnings.warn(
+                f"jax reduction backend unavailable ({e}); "
+                "falling back to the numpy reference",
+                stacklevel=2,
+            )
+            return _instance("numpy")
+    return _instance(name)
+
+
+@contextmanager
+def use_backend(backend: Union[ReduceBackend, str, None]):
+    """Thread-local default backend for the scope (sweep runners use this
+    so app ``profile()`` entry points need no signature change)."""
+    if isinstance(backend, str):
+        if backend.strip().lower() not in available_backends():
+            raise ValueError(
+                f"unknown reduction backend: {backend!r} "
+                f"(expected one of {available_backends()})"
+            )
+    prev = getattr(_tls, "override", None)
+    _tls.override = backend
+    try:
+        yield
+    finally:
+        _tls.override = prev

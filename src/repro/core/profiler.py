@@ -29,17 +29,34 @@ kernels (``segment_spans`` / ``block_reduce`` / ``segment_reduce``):
 ``repro.core.hlo.HloCollectiveBuffer`` into per-region ``layer="hlo"``
 rows for ``thicket.Frame`` — one ordering pass, one block reduction per
 statistic, no per-event/per-op Python in either.
+
+Backend contract (see :mod:`repro.core.backend`): the kernels live in a
+swappable reduction backend selected by ``backend=`` / ``REPRO_BACKEND``
+(``"numpy"`` reference, or ``"jax"`` — jit-compiled with x64 enabled inside
+the backend and an optional Pallas segmented-reduce kernel that auto-enables
+on TPU).  Boundaries are NumPy arrays in both directions; every int64
+count/byte path is **exact**, so profiles are bit-identical across backends.
+Host NumPy keeps the O(rows) scatters/orderings; the backend owns the
+O(G x S x Rmax) weight-grid matmuls and the peer-set dedup that dominate at
+high rank counts.
 """
 
 from __future__ import annotations
 
 import json
 from dataclasses import asdict, dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import numpy as np
 
+from repro.core.backend import (  # noqa: F401  (re-exported kernel API)
+    ReduceBackend,
+    block_reduce,
+    resolve_backend,
+    segment_reduce,
+    segment_spans,
+)
 from repro.core.regions import RegionRecorder, TraceBuffer, recording
 
 
@@ -136,63 +153,10 @@ _I64_MAX = np.iinfo(np.int64).max
 _I64_MIN = np.iinfo(np.int64).min
 
 
-# ---------------------------------------------------------------------------
-# Grouped segment-reduction kernels
-# ---------------------------------------------------------------------------
-# Shared by the traced-layer CommPatternProfiler and the compiled-layer
-# HloCollectiveProfiler: order events/ops by a composite group code once,
-# then run ONE block reduction per statistic across all groups at once.
-
-
-def segment_spans(key: np.ndarray) -> tuple:
-    """Ordering + contiguous block boundaries for segment reductions.
-
-    ``key`` holds one composite int group code per element.  Returns
-    ``(order, sorted_key, starts, ends)``: ``order`` is None when the input
-    is already non-decreasing (the common, pre-grouped trace shape — the
-    permutation is skipped entirely), otherwise a stable argsort; block
-    ``i`` of the sorted data spans ``starts[i]:ends[i]`` and carries key
-    ``sorted_key[starts[i]]``.
-    """
-    n = len(key)
-    if n == 0:
-        z = np.zeros(0, np.int64)
-        return None, np.asarray(key), z, z
-    if np.any(np.diff(key) < 0):
-        order = np.argsort(key, kind="stable")
-        sorted_key = key[order]
-    else:
-        order = None
-        sorted_key = key
-    starts = np.concatenate(([0], np.flatnonzero(np.diff(sorted_key)) + 1))
-    ends = np.append(starts[1:], n)
-    return order, sorted_key, starts, ends
-
-
-def block_reduce(
-    grid: np.ndarray, starts: np.ndarray, ends: np.ndarray, ufunc: np.ufunc
-) -> np.ndarray:
-    """One contiguous block reduction per segment over a 2-D grid's rows.
-
-    ``ufunc.reduce`` over a contiguous block vectorizes along the inner
-    axis where generic ``reduceat`` falls back to a scalar inner loop; the
-    block count is O(groups), not O(rows).
-    """
-    return np.stack([ufunc.reduce(grid[s:e], axis=0) for s, e in zip(starts, ends)])
-
-
-def segment_reduce(
-    col: np.ndarray, order, starts: np.ndarray, ufunc: np.ufunc = np.add
-) -> np.ndarray:
-    """Per-segment reduction of a 1-D column in one ``reduceat`` pass.
-
-    ``order`` / ``starts`` come from :func:`segment_spans` over the
-    column's group codes.
-    """
-    if not len(starts):
-        return np.zeros(0, col.dtype)
-    vals = col if order is None else col[order]
-    return ufunc.reduceat(vals, starts)
+# Grouped segment-reduction kernels (``segment_spans`` / ``block_reduce`` /
+# ``segment_reduce``) live in :mod:`repro.core.backend` and are re-exported
+# above: both profilers order events/ops by a composite group code once,
+# then run ONE backend reduction per statistic across all groups at once.
 
 
 class CommPatternProfiler:
@@ -225,6 +189,12 @@ class CommPatternProfiler:
       tests in ``tests/test_profiler_parity.py`` assert equality on
       randomized event streams and on the real kripke/amg/laghos profile
       paths, with interning on and off.
+
+    The vectorized path's heavy kernels — the (G x S) weight matmuls
+    against the (S x Rmax) slabs and the peer-set dedup — dispatch through
+    a :class:`~repro.core.backend.ReduceBackend` (``backend=`` parameter,
+    default from ``REPRO_BACKEND``; NumPy arrays at every boundary, int64
+    paths exact, so profiles are bit-identical across backends).
     """
 
     @staticmethod
@@ -235,6 +205,7 @@ class CommPatternProfiler:
         replication: int = 1,
         meta: Optional[dict] = None,
         impl: str = "numpy",
+        backend: Union[ReduceBackend, str, None] = None,
     ) -> CommProfile:
         """Build a CommProfile.
 
@@ -242,21 +213,33 @@ class CommPatternProfiler:
         pattern repeats over (e.g. a ppermute over a 16-wide axis of a
         16x16 mesh repeats over 16 groups).  Totals scale by it; min/max
         per-rank stats do not.
+
+        ``backend``: reduction backend name/instance for the vectorized
+        implementation (see :func:`repro.core.backend.resolve_backend`);
+        ``impl="reference"`` is pure-Python and ignores it.
         """
         if impl == "numpy":
-            fn = CommPatternProfiler._from_recorder_numpy
+            return CommPatternProfiler._from_recorder_numpy(
+                rec, name=name, replication=replication, meta=meta, backend=backend
+            )
         elif impl == "reference":
-            fn = CommPatternProfiler._from_recorder_reference
-        else:
-            raise ValueError(f"unknown profiler impl: {impl!r}")
-        return fn(rec, name=name, replication=replication, meta=meta)
+            return CommPatternProfiler._from_recorder_reference(
+                rec, name=name, replication=replication, meta=meta
+            )
+        raise ValueError(f"unknown profiler impl: {impl!r}")
 
     # -- segment-reduced implementation (default) ---------------------------
 
     @staticmethod
     def _from_recorder_numpy(
-        rec: RegionRecorder, *, name: str, replication: int, meta: Optional[dict]
+        rec: RegionRecorder,
+        *,
+        name: str,
+        replication: int,
+        meta: Optional[dict],
+        backend: Union[ReduceBackend, str, None] = None,
     ) -> CommProfile:
+        be = resolve_backend(backend)
         buf = getattr(rec, "buffer", None)
         if buf is None:  # duck-typed recorder carrying a plain event list
             buf = TraceBuffer()
@@ -342,13 +325,13 @@ class CommPatternProfiler:
                 wcb, (g_of_row[is_coll], sid[is_coll]), mult[is_coll] * scale[is_coll]
             )
 
-            sends_g = wc @ layout(tab.sends)
-            recvs_g = wc @ layout(tab.recvs)
-            bsent_g = wb @ layout(tab.bsent_units)
-            brecv_g = wb @ layout(tab.brecv_units)
-            cbytes_g = wcb @ layout(tab.bsent_units)
-            part_g = ((wc > 0).astype(np.int64) @ part_i) > 0
-            cpart_g = ((wcm > 0).astype(np.int64) @ part_i) > 0
+            sends_g = be.matmul(wc, layout(tab.sends))
+            recvs_g = be.matmul(wc, layout(tab.recvs))
+            bsent_g = be.matmul(wb, layout(tab.bsent_units))
+            brecv_g = be.matmul(wb, layout(tab.brecv_units))
+            cbytes_g = be.matmul(wcb, layout(tab.bsent_units))
+            part_g = be.matmul((wc > 0).astype(np.int64), part_i) > 0
+            cpart_g = be.matmul((wcm > 0).astype(np.int64), part_i) > 0
 
         # Unique (region, struct) combinations of point-to-point rows —
         # shared by both peer-set sides (repetition cannot change a union).
@@ -367,10 +350,11 @@ class CommPatternProfiler:
             """|union of peer sets| per (region, rank), deduplicated.
 
             Only the unique (region, struct) combinations contribute.
-            Cross-struct duplicates collapse via a boolean presence bitmap
-            over the (region, rank, peer) code space when it is small (one
-            vector scatter + a row sum — no sort), falling back to
-            ``np.unique`` over the encoded pair codes otherwise.
+            Host code gathers the (group, rank, peer) pair columns; the
+            backend's ``pair_counts`` collapses cross-struct duplicates
+            (dense bitmap scatter, group-chunked scatter at high rank
+            counts, or a sort over the encoded codes — see
+            :func:`repro.core.backend._dedup_strategy`).
             """
             if not R or Rmax == 0 or not len(rows_col):
                 return np.zeros((G, Rmax), np.int64)
@@ -384,18 +368,8 @@ class CommPatternProfiler:
             src_idx = np.repeat(tab_indptr[su], ln) + within
             rows = rows_col[src_idx]
             peers = peers_col[src_idx]
-            gp = np.repeat(gu, ln)
-            stride = np.int64(int(peers.max()) + 1)
-            codes = (gp * Rmax + rows) * stride + peers
-            cells = G * Rmax * int(stride)
-            if cells <= (1 << 26):
-                bitmap = np.zeros(cells, bool)
-                bitmap[codes] = True
-                counts = bitmap.reshape(G * Rmax, int(stride)).sum(axis=1)
-            else:
-                uniq2 = np.unique(codes)
-                counts = np.bincount(uniq2 // stride, minlength=G * Rmax)
-            return counts.reshape(G, Rmax).astype(np.int64, copy=False)
+            gp = np.repeat(gu, ln)  # non-decreasing: gu is sorted by group
+            return be.pair_counts(gp, rows, peers, G, Rmax)
 
         dests_g = distinct_grid(
             tab.dest_rows, tab.dest_peers, tab.dest_lens, tab.dest_indptr()
@@ -567,9 +541,12 @@ class HloCollectiveProfiler:
     region/kind ids plus wire/operand/result byte columns) into per-region
     rows with the same grouped segment-reduction kernels the traced-layer
     profiler uses: one composite region ordering
-    (:func:`segment_spans`), then one :func:`segment_reduce` /
-    ``bincount`` pass per statistic across all regions at once — no per-op
-    Python.
+    (:func:`segment_spans`), then one ``segment_reduce`` / ``bincount``
+    pass per statistic across all regions at once — no per-op Python.
+    The per-statistic reductions dispatch through the same
+    :class:`~repro.core.backend.ReduceBackend` as the traced layer
+    (``backend=`` parameter, default from ``REPRO_BACKEND``), with
+    bit-identical int64 outputs on every backend.
 
     The rows are plain dicts tagged ``layer="hlo"`` and keyed like
     ``thicket.Frame.from_profiles`` rows (``profile`` / ``n_ranks`` /
@@ -585,8 +562,10 @@ class HloCollectiveProfiler:
         name: str = "hlo",
         n_ranks: int = 0,
         meta: Optional[dict] = None,
+        backend: Union[ReduceBackend, str, None] = None,
     ) -> list:
         """One row dict per region, in first-appearance order."""
+        be = resolve_backend(backend)
         N = buf.n_ops
         rids = buf.region_ids
         if N:
@@ -602,10 +581,10 @@ class HloCollectiveProfiler:
         # Group codes are assigned in first-appearance order, so the sorted
         # segments come out in exactly the output row order.
         order, _, starts, _ = segment_spans(g_of_op)
-        wire = segment_reduce(buf.wire_bytes, order, starts)
-        operand = segment_reduce(buf.operand_bytes, order, starts)
-        result = segment_reduce(buf.result_bytes, order, starts)
-        largest = segment_reduce(buf.wire_bytes, order, starts, np.maximum)
+        wire = be.segment_reduce(buf.wire_bytes, order, starts)
+        operand = be.segment_reduce(buf.operand_bytes, order, starts)
+        result = be.segment_reduce(buf.result_bytes, order, starts)
+        largest = be.segment_reduce(buf.wire_bytes, order, starts, np.maximum)
         counts = np.bincount(g_of_op, minlength=G)
         K = len(buf.kind_names)
         kind_counts = np.zeros((G, K), np.int64)

@@ -119,6 +119,22 @@ profiles between workers.  The profiler (:mod:`repro.core.profiler`)
 consumes the columns directly with multiplicity-weighted segment
 reductions over the unique structures; it never materializes per-event
 objects.
+
+Backend contract (how these columns meet :mod:`repro.core.backend`)
+--------------------------------------------------------------------
+
+The dense slabs and CSR pair columns above are exactly what the
+swappable reduction backend consumes: the profiler reshapes the struct
+slabs into ``(S, Rmax)`` int64 grids and hands the backend int64
+multiplicity-weight matrices to multiply against them, plus the
+``(rows, peers)`` pair columns for peer-set dedup.  Every array crossing
+that boundary is a NumPy ndarray with the dtypes listed in the schemas
+above (int64 slabs/counts/bytes, bool participants, int64 pair columns),
+and every backend — NumPy reference, jax.jit, jax+Pallas — must return
+bit-identical int64 results; the store itself never depends on which
+backend reduces it.  See the backend module docstring for the exactness
+guarantees (f64-exact / limb-decomposed matmuls under jax x64) and for
+when the Pallas segmented-reduce kernel engages.
 """
 
 from __future__ import annotations

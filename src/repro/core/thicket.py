@@ -38,8 +38,12 @@ collectives) and :meth:`Frame.from_hlo` rows carry ``layer="hlo"``
 (compiler-inserted GSPMD traffic from the columnar HLO analyzer), joined
 per (profile, n_ranks, region) — the ``commr::`` scopes give both layers
 one region namespace (``reports.hlo_vs_traced``).  ``group_by`` / ``agg``
-run vectorized: one ``np.unique`` pass over composite key codes, no
-per-row dict materialization.
+run vectorized: one factorize pass over composite key codes, no per-row
+dict materialization.  The factorize dispatches through the same
+:class:`~repro.core.backend.ReduceBackend` as the profilers (``backend=``
+keyword on ``group_by`` / ``agg`` / ``pivot``, default from
+``REPRO_BACKEND``) with identical grouping on every backend; object-dtype
+and masked key columns always factorize host-side.
 
 Derived metrics mirror the paper's §V analysis:
   bandwidth   bytes sent per second per process (Fig. 5/6 left axes)
@@ -57,6 +61,7 @@ from typing import Callable, Iterable, Optional
 
 import numpy as np
 
+from repro.core.backend import resolve_backend
 from repro.core.profiler import CommProfile, HloCollectiveProfiler
 
 
@@ -364,15 +369,16 @@ class Frame:
             )
         return self._take(np.asarray(idx))
 
-    def _key_codes(self, keys: tuple) -> np.ndarray:
+    def _key_codes(self, keys: tuple, be=None) -> np.ndarray:
         """Dense int64 group code per row for the key-column tuple.
 
-        Numeric fully-present key columns factorize with one ``np.unique``;
-        object/masked columns fall back to a dict factorization (absent
-        cells read as None, matching ``r.get``).  Codes are re-compacted
-        after every key, so composites never overflow (each stage's code
-        is < n_rows).
+        Numeric fully-present key columns factorize through the reduction
+        backend ``be`` (one unique/inverse pass); object/masked columns
+        fall back to a dict factorization (absent cells read as None,
+        matching ``r.get``).  Codes are re-compacted after every key, so
+        composites never overflow (each stage's code is < n_rows).
         """
+        be = be if be is not None else resolve_backend(None)
         n = self._n
         codes = np.zeros(n, np.int64)
         if n == 0:
@@ -383,7 +389,7 @@ class Frame:
                 continue  # missing column: single None value, code 0
             m = self._mask[k]
             if col.dtype.kind in "biuf" and m.all():
-                kc = np.unique(col, return_inverse=True)[1].astype(np.int64)
+                kc = be.factorize(col)[2]
             else:
                 ids: dict = {}
                 kc = np.empty(n, np.int64)
@@ -395,22 +401,24 @@ class Frame:
                         ids[v] = code
                     kc[i] = code
             combined = codes * (int(kc.max()) + 1) + kc
-            codes = np.unique(combined, return_inverse=True)[1].astype(np.int64)
+            codes = be.factorize(combined)[2]
         return codes
 
-    def group_by(self, *keys: str) -> dict:
+    def group_by(self, *keys: str, backend=None) -> dict:
         """Group rows by key columns: {key_tuple: sub-Frame}.
 
-        Vectorized: one ``np.unique`` pass over composite key codes (see
+        Vectorized: one factorize pass over composite key codes (see
         ``_key_codes``) — no per-row dict is materialized.  Groups keep
         first-appearance order and sub-frames preserve row order; iterate
         a sub-frame (or take ``.rows``) for the row dicts the legacy
-        list-valued ``group_by`` returned.
+        list-valued ``group_by`` returned.  ``backend`` picks the reduction
+        backend (name/instance; default resolved from ``REPRO_BACKEND``).
         """
         if self._n == 0:
             return {}
-        codes = self._key_codes(keys)
-        uniq, first, inv = np.unique(codes, return_index=True, return_inverse=True)
+        be = resolve_backend(backend)
+        codes = self._key_codes(keys, be)
+        uniq, first, inv = be.factorize(codes)
         by_code = np.argsort(inv, kind="stable")  # ascending rows per group
         bounds = np.concatenate(
             ([0], np.flatnonzero(np.diff(inv[by_code])) + 1, [self._n])
@@ -428,21 +436,22 @@ class Frame:
             groups[tuple(key)] = sub
         return groups
 
-    def agg(self, keys: tuple, aggs: dict) -> "Frame":
+    def agg(self, keys: tuple, aggs: dict, backend=None) -> "Frame":
         """aggs: out_col -> (in_col, fn) where fn maps list->scalar.
 
         Runs on the vectorized group path: each fn receives the group's
         column values as a list (absent cells -> None, like ``r.get``).
+        ``backend`` threads through to :meth:`group_by`.
         """
         out = []
-        for kv, sub in self.group_by(*keys).items():
+        for kv, sub in self.group_by(*keys, backend=backend).items():
             row = dict(zip(keys, kv))
             for out_col, (in_col, fn) in aggs.items():
                 row[out_col] = fn(sub.column(in_col))
             out.append(row)
         return Frame(out)
 
-    def pivot(self, index: str, column: str, value: str) -> "Frame":
+    def pivot(self, index: str, column: str, value: str, backend=None) -> "Frame":
         """Rows keyed by `index`, one output column per distinct `column`.
 
         Sparse (index, column) combinations simply leave the cell absent —
@@ -450,8 +459,8 @@ class Frame:
         key, so disjoint region sets across profiles pivot cleanly.
 
         Vectorized like ``group_by``: rows factorize to composite
-        (index-group, column) cell codes, one ``np.unique`` pass finds the
-        distinct cells (and the legacy dict-insertion column order), and
+        (index-group, column) cell codes, one backend factorize pass finds
+        the distinct cells (and the legacy dict-insertion column order), and
         the cell grid fills with last-row-wins fancy assignment — no
         per-row dict is materialized.  Output is structurally identical to
         the historical row-dict implementation, including the
@@ -493,7 +502,7 @@ class Frame:
         cell_vals[codes] = flat_vals  # duplicate cells: last row wins
         present = np.zeros(NG * NC, bool)
         present[codes] = True
-        uniq_codes, first_rows = np.unique(codes, return_index=True)
+        uniq_codes, first_rows, _ = resolve_backend(backend).factorize(codes)
 
         order = sorted(
             range(NG), key=lambda g: (str(type(uniq_ivals[g])), uniq_ivals[g])

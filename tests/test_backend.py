@@ -1,0 +1,400 @@
+"""Backend selection, exactness, and dedup-strategy unit tests.
+
+Covers the :mod:`repro.core.backend` substrate on its own terms:
+``REPRO_BACKEND`` env parsing and the graceful NumPy fallback when jax is
+missing or x64 is off (a warning, never a crash), dispatch from
+``CommPatternProfiler`` / ``Frame.agg`` into the selected backend, the
+exact-int64 matmul (single-f64 and limb-decomposed plans, negative-input
+fallback), and the peer-set dedup strategy split (dense bitmap / chunked
+bitmap / sort-based ``np.unique``) that replaced the historical
+``G * Rmax * stride`` single-allocation bitmap.  End-to-end bit-identical
+profile parity lives in ``test_backend_parity.py``; timing assertions in
+``test_backend_perf.py``.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import backend as B
+from repro.core.backend import (
+    BACKEND_ENV,
+    BackendUnavailable,
+    JaxBackend,
+    NumpyBackend,
+    _dedup_strategy,
+    _limb_plan,
+    _pair_counts_numpy,
+    resolve_backend,
+    segment_spans,
+    use_backend,
+)
+from repro.core.profiler import CommPatternProfiler
+from repro.core.regions import RegionEvent, RegionRecorder
+from repro.core.thicket import Frame
+
+
+def _small_recorder() -> RegionRecorder:
+    rec = RegionRecorder()
+    rec.record(
+        RegionEvent.from_dicts(
+            region="r",
+            region_path=("r",),
+            kind="ppermute",
+            sends_per_rank={0: 1, 1: 2},
+            recvs_per_rank={0: 2, 1: 1},
+            dest_ranks={0: {1}, 1: {0}},
+            src_ranks={0: {1}, 1: {0}},
+            bytes_sent={0: 64, 1: 128},
+            bytes_recv={0: 128, 1: 64},
+        )
+    )
+    return rec
+
+
+def _frame() -> Frame:
+    return Frame([{"k": i % 3, "v": float(i)} for i in range(12)])
+
+
+# ---------------------------------------------------------------------------
+# Selection: env parsing, explicit args, use_backend override
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_default_is_numpy(monkeypatch):
+    monkeypatch.delenv(BACKEND_ENV, raising=False)
+    assert isinstance(resolve_backend(), NumpyBackend)
+    assert isinstance(resolve_backend(None), NumpyBackend)
+
+
+def test_resolve_env_selects_jax(monkeypatch):
+    monkeypatch.setenv(BACKEND_ENV, "jax")
+    assert isinstance(resolve_backend(), JaxBackend)
+
+
+def test_resolve_env_normalizes_whitespace_and_case(monkeypatch):
+    monkeypatch.setenv(BACKEND_ENV, "  JAX \n")
+    assert isinstance(resolve_backend(), JaxBackend)
+    monkeypatch.setenv(BACKEND_ENV, " NumPy ")
+    assert isinstance(resolve_backend(), NumpyBackend)
+
+
+def test_resolve_unknown_env_warns_and_falls_back(monkeypatch):
+    monkeypatch.setenv(BACKEND_ENV, "cuda")
+    with pytest.warns(UserWarning, match="not a known reduction backend"):
+        assert isinstance(resolve_backend(), NumpyBackend)
+
+
+def test_resolve_unknown_explicit_name_raises():
+    with pytest.raises(ValueError, match="unknown reduction backend"):
+        resolve_backend("cuda")
+
+
+def test_resolve_explicit_instance_passthrough():
+    inst = NumpyBackend()
+    assert resolve_backend(inst) is inst
+
+
+def test_explicit_arg_beats_env(monkeypatch):
+    monkeypatch.setenv(BACKEND_ENV, "jax")
+    assert isinstance(resolve_backend("numpy"), NumpyBackend)
+
+
+def test_use_backend_override_beats_env(monkeypatch):
+    monkeypatch.setenv(BACKEND_ENV, "numpy")
+    with use_backend("jax"):
+        assert isinstance(resolve_backend(), JaxBackend)
+        # explicit argument still wins over the override
+        assert isinstance(resolve_backend("numpy"), NumpyBackend)
+    assert isinstance(resolve_backend(), NumpyBackend)
+
+
+def test_use_backend_nests_and_restores():
+    with use_backend("jax"):
+        with use_backend("numpy"):
+            assert isinstance(resolve_backend(), NumpyBackend)
+        assert isinstance(resolve_backend(), JaxBackend)
+
+
+def test_use_backend_unknown_name_raises_eagerly():
+    with pytest.raises(ValueError, match="unknown reduction backend"):
+        with use_backend("cuda"):
+            pass  # pragma: no cover - must raise before entering
+
+
+def test_use_backend_accepts_instances():
+    inst = NumpyBackend()
+    with use_backend(inst):
+        assert resolve_backend() is inst
+
+
+# ---------------------------------------------------------------------------
+# Graceful fallback: jax missing / x64 unavailable -> warning + numpy
+# ---------------------------------------------------------------------------
+
+
+def test_jax_missing_falls_back_with_warning(monkeypatch):
+    def boom():
+        raise ImportError("no module named jax")
+
+    monkeypatch.setattr(B, "_import_jax", boom)
+    monkeypatch.setattr(B, "_instances", {})  # bypass the cached instance
+    with pytest.warns(UserWarning, match="falling back to the numpy"):
+        assert isinstance(resolve_backend("jax"), NumpyBackend)
+
+
+def test_x64_off_falls_back_with_warning(monkeypatch):
+    monkeypatch.setattr(B, "_x64_ok", lambda: False)
+    monkeypatch.setattr(B, "_instances", {})
+    with pytest.warns(UserWarning, match="falling back to the numpy"):
+        assert isinstance(resolve_backend("jax"), NumpyBackend)
+
+
+def test_jax_backend_ctor_raises_backend_unavailable(monkeypatch):
+    monkeypatch.setattr(B, "_x64_ok", lambda: False)
+    with pytest.raises(BackendUnavailable, match="x64"):
+        JaxBackend()
+
+
+def test_fallback_still_profiles(monkeypatch):
+    monkeypatch.setattr(B, "_x64_ok", lambda: False)
+    monkeypatch.setattr(B, "_instances", {})
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        prof = CommPatternProfiler.from_recorder(_small_recorder(), backend="jax")
+    ref = CommPatternProfiler.from_recorder(_small_recorder())
+    assert prof.to_json() == ref.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: both backends reachable from the profiler and Frame.agg
+# ---------------------------------------------------------------------------
+
+
+def _spy(monkeypatch, cls, method):
+    calls = []
+    orig = getattr(cls, method)
+
+    def wrapper(self, *a, **kw):
+        calls.append(method)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(cls, method, wrapper)
+    return calls
+
+
+def test_profiler_dispatches_to_jax_backend(monkeypatch):
+    calls = _spy(monkeypatch, JaxBackend, "matmul")
+    CommPatternProfiler.from_recorder(_small_recorder(), backend="jax")
+    assert calls, "jax backend matmul never reached from from_recorder"
+
+
+def test_profiler_dispatches_to_numpy_backend(monkeypatch):
+    calls = _spy(monkeypatch, NumpyBackend, "matmul")
+    CommPatternProfiler.from_recorder(_small_recorder(), backend="numpy")
+    assert calls, "numpy backend matmul never reached from from_recorder"
+
+
+def test_frame_agg_dispatches_to_jax_backend(monkeypatch):
+    calls = _spy(monkeypatch, JaxBackend, "factorize")
+    _frame().agg(("k",), {"tot": ("v", sum)}, backend="jax")
+    assert calls, "jax backend factorize never reached from Frame.agg"
+
+
+def test_frame_agg_dispatches_to_numpy_backend(monkeypatch):
+    calls = _spy(monkeypatch, NumpyBackend, "factorize")
+    _frame().agg(("k",), {"tot": ("v", sum)}, backend="numpy")
+    assert calls, "numpy backend factorize never reached from Frame.agg"
+
+
+def test_env_default_reaches_profiler(monkeypatch):
+    monkeypatch.setenv(BACKEND_ENV, "jax")
+    calls = _spy(monkeypatch, JaxBackend, "matmul")
+    CommPatternProfiler.from_recorder(_small_recorder())
+    assert calls, "REPRO_BACKEND=jax never reached from_recorder"
+
+
+# ---------------------------------------------------------------------------
+# Exact int64 matmul (the jax backend's f64 / limb-decomposed dots)
+# ---------------------------------------------------------------------------
+
+
+def _jax_be() -> JaxBackend:
+    return resolve_backend("jax")
+
+
+@pytest.mark.parametrize(
+    "wmax,gmax",
+    [
+        (5, 7),  # trivially exact in one f64 dot
+        (1 << 20, 1 << 24),  # still one dot: product < 2**53
+        (1 << 30, 1 << 30),  # needs limb decomposition
+        (1 << 59, 1),  # extreme single-side magnitude
+    ],
+)
+def test_matmul_exact_vs_numpy(wmax, gmax):
+    rng = np.random.default_rng(hash((wmax, gmax)) % (1 << 32))
+    w = rng.integers(0, wmax + 1, size=(7, 13), dtype=np.int64)
+    g = rng.integers(0, gmax + 1, size=(13, 11), dtype=np.int64)
+    want = w @ g
+    assert (want >= 0).all(), "test inputs must not overflow int64"
+    got = _jax_be().matmul(w, g)
+    assert got.dtype == np.int64
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matmul_negative_inputs_fall_back_exactly():
+    rng = np.random.default_rng(3)
+    w = rng.integers(-50, 50, size=(4, 6), dtype=np.int64)
+    g = rng.integers(-50, 50, size=(6, 5), dtype=np.int64)
+    np.testing.assert_array_equal(_jax_be().matmul(w, g), w @ g)
+
+
+def test_matmul_empty_shapes():
+    be = _jax_be()
+    a = be.matmul(np.zeros((0, 4), np.int64), np.zeros((4, 3), np.int64))
+    assert a.shape == (0, 3)
+    b = be.matmul(np.zeros((2, 0), np.int64), np.zeros((0, 3), np.int64))
+    assert b.shape == (2, 3)
+
+
+def test_limb_plan_regimes():
+    amax = bmax = 1 << 30
+    assert _limb_plan(5, 7, 13) == (64, 1, 64, 1)  # single exact dot
+    plan = _limb_plan(amax, bmax, 13)  # needs a split
+    assert plan is not None and plan[1] * plan[3] > 1
+    # every plan keeps partial f64 products exact (an unsplit side, k == 1,
+    # contributes its full magnitude)
+    ta, ka, tb, kb = plan
+    a_limb = (1 << ta) - 1 if ka > 1 else amax
+    b_limb = (1 << tb) - 1 if kb > 1 else bmax
+    assert a_limb * b_limb * 13 < (1 << 53)
+
+
+# ---------------------------------------------------------------------------
+# Peer-set dedup: strategy split + large-Rmax regression (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_strategy_small_dense_uses_bitmap():
+    # plenty of pairs relative to the code space -> dense scatter
+    assert _dedup_strategy(4, 64, 64, 10_000)[0] == "bitmap"
+
+
+def test_dedup_strategy_sparse_uses_unique():
+    # the historical failure mode: G * Rmax * stride blows past any cap
+    # while only a handful of pairs exist.  cells/pair >> work factor.
+    assert _dedup_strategy(4, 100_000, 100_000, 1_000) == ("unique", 0)
+
+
+def test_dedup_strategy_large_but_dense_chunks():
+    # code space over the cell cap but pairs dense enough for scatters:
+    # chunk over groups, each chunk's bitmap under the cap
+    g, rmax, stride = 64, 4096, 4096
+    cells = g * rmax * stride  # 2**30 > _BITMAP_CELLS_CAP
+    kind, chunk = _dedup_strategy(g, rmax, stride, cells // 8)
+    assert kind == "chunked"
+    assert 1 <= chunk < g
+    assert chunk * rmax * stride <= B._BITMAP_CELLS_CAP
+
+
+def test_dedup_strategy_empty_inputs():
+    assert _dedup_strategy(0, 64, 64, 0) == ("unique", 0)
+    assert _dedup_strategy(4, 0, 0, 0) == ("unique", 0)
+
+
+def _random_pairs(rng, n_groups, rank_extent, m):
+    """Encoded (group, rank, peer) pairs with group-major (sorted) groups."""
+    group_ids = np.sort(rng.integers(0, n_groups, m)).astype(np.int64)
+    rows = rng.integers(0, rank_extent, m).astype(np.int64)
+    peers = rng.integers(0, rank_extent, m).astype(np.int64)
+    return group_ids, rows, peers
+
+
+@pytest.mark.parametrize(
+    "forced", [("bitmap", 0), ("chunked", 3), ("chunked", 1), ("unique", 0)]
+)
+def test_pair_counts_strategies_identical(forced):
+    rng = np.random.default_rng(11)
+    group_ids, rows, peers = _random_pairs(rng, 7, 33, 4_000)
+    want = _pair_counts_numpy(group_ids, rows, peers, 7, 33, strategy=("unique", 0))
+    got = _pair_counts_numpy(group_ids, rows, peers, 7, 33, strategy=forced)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pair_counts_jax_matches_numpy():
+    rng = np.random.default_rng(12)
+    group_ids, rows, peers = _random_pairs(rng, 5, 41, 3_000)
+    want = _pair_counts_numpy(group_ids, rows, peers, 5, 41)
+    got = _jax_be().pair_counts(group_ids, rows, peers, 5, 41)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pair_counts_large_rmax_regression():
+    """65k ranks, sparse pairs: the old dense bitmap would allocate
+    G * Rmax * stride ~ 2**41 cells (terabytes); the strategy split must
+    route to the sort path and still count exactly."""
+    rmax = 65_536
+    rng = np.random.default_rng(13)
+    group_ids, rows, peers = _random_pairs(rng, 8, rmax, 20_000)
+    stride = int(peers.max()) + 1
+    assert _dedup_strategy(8, rmax, stride, len(rows)) == ("unique", 0)
+    got = _pair_counts_numpy(group_ids, rows, peers, 8, rmax)
+    want = _pair_counts_numpy(group_ids, rows, peers, 8, rmax, strategy=("unique", 0))
+    np.testing.assert_array_equal(got, want)
+    # spot-check one (group, rank) cell against a python set
+    g0, r0 = int(group_ids[0]), int(rows[0])
+    sel = (group_ids == g0) & (rows == r0)
+    assert got[g0, r0] == len(set(peers[sel].tolist()))
+
+
+def test_pair_counts_profile_parity_at_high_rank_counts():
+    """End-to-end regression: a sparse 32k-rank trace profiles without the
+    dense bitmap (strategy must not be 'bitmap') and matches the forced
+    chunked scatter bit for bit."""
+    rmax = 32_768
+    rng = np.random.default_rng(14)
+    group_ids, rows, peers = _random_pairs(rng, 4, rmax, 10_000)
+    auto = _pair_counts_numpy(group_ids, rows, peers, 4, rmax)
+    forced = _pair_counts_numpy(
+        group_ids, rows, peers, 4, rmax, strategy=("chunked", 1)
+    )
+    np.testing.assert_array_equal(auto, forced)
+
+
+# ---------------------------------------------------------------------------
+# Pallas segmented reduce: CPU interpret-mode parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ufunc", [np.add, np.maximum, np.minimum])
+def test_pallas_segment_reduce_parity(ufunc):
+    be = JaxBackend(use_pallas=True, interpret=True)
+    rng = np.random.default_rng(21)
+    key = np.sort(rng.integers(0, 9, 500)).astype(np.int64)
+    col = rng.integers(0, 1 << 40, 500).astype(np.int64)
+    order, _, starts, _ = segment_spans(key)
+    want = NumpyBackend().segment_reduce(col, order, starts, ufunc)
+    got = be.segment_reduce(col, order, starts, ufunc)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("ufunc", [np.add, np.maximum, np.minimum])
+def test_pallas_block_reduce_parity(ufunc):
+    be = JaxBackend(use_pallas=True, interpret=True)
+    rng = np.random.default_rng(22)
+    key = np.sort(rng.integers(0, 6, 300)).astype(np.int64)
+    grid = rng.integers(0, 1 << 30, (300, 5)).astype(np.int64)
+    _, _, starts, ends = segment_spans(key)
+    want = NumpyBackend().block_reduce(grid, starts, ends, ufunc)
+    got = be.block_reduce(grid, starts, ends, ufunc)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_backend_profiles_identically():
+    be = JaxBackend(use_pallas=True, interpret=True)
+    prof = CommPatternProfiler.from_recorder(_small_recorder(), backend=be)
+    ref = CommPatternProfiler.from_recorder(_small_recorder())
+    assert prof.to_json() == ref.to_json()

@@ -1,0 +1,186 @@
+"""Cross-backend bit-identity: jax reductions vs the NumPy reference.
+
+ISSUE 6's acceptance bar: the jax backend (plain jax.jit and the
+Pallas-segmented variant in interpret mode) must produce **byte-identical**
+profiles on the real kripke/amg/laghos trace paths, on randomized event
+streams (reusing ``test_profiler_parity``'s stream builder, so ragged rank
+extents and sparse dicts are covered), on the golden HLO corpus, and
+through every vectorized ``Frame`` reduction.  Profiles compare via
+``to_json()`` — byte equality, not numeric tolerance; the int64 count/byte
+paths are exact on every backend.
+"""
+
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from proptest import given, settings, st
+from test_profiler_parity import _assert_profiles_equal, _random_recorder
+
+from repro.apps.stencil import Decomp3D
+from repro.core.backend import JaxBackend, use_backend
+from repro.core.hlo import scan_hlo_collectives
+from repro.core.profiler import CommPatternProfiler, HloCollectiveProfiler
+from repro.core.thicket import Frame
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
+FIXTURES = sorted(glob.glob(os.path.join(FIXTURE_DIR, "*.txt")))
+
+#: Backends that must match the NumPy reference byte for byte: the default
+#: jax backend (jit reductions) and the Pallas segmented-reduce variant,
+#: interpret-mode so it runs on CPU.
+JAX_VARIANTS = [
+    pytest.param(lambda: "jax", id="jax"),
+    pytest.param(
+        lambda: JaxBackend(use_pallas=True, interpret=True),
+        id="jax-pallas-interpret",
+    ),
+]
+
+
+# ---------------------------------------------------------------------------
+# Randomized event streams
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_random_streams_bit_identical(seed):
+    rec = _random_recorder(seed)
+    repl = (seed % 3) + 1
+    ref = CommPatternProfiler.from_recorder(
+        rec, name="p", replication=repl, backend="numpy"
+    )
+    jx = CommPatternProfiler.from_recorder(
+        rec, name="p", replication=repl, backend="jax"
+    )
+    _assert_profiles_equal(ref, jx)
+    assert ref.to_json() == jx.to_json()
+
+
+def test_random_stream_pallas_variant():
+    rec = _random_recorder(20260808)
+    ref = CommPatternProfiler.from_recorder(rec, backend="numpy")
+    jx = CommPatternProfiler.from_recorder(
+        rec, backend=JaxBackend(use_pallas=True, interpret=True)
+    )
+    assert ref.to_json() == jx.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Real app trace paths (kripke / amg / laghos)
+# ---------------------------------------------------------------------------
+
+
+def _app_parity(profile_fn, cfg, make_backend):
+    ref = profile_fn(cfg)
+    with use_backend(make_backend()):
+        jx = profile_fn(cfg)
+    _assert_profiles_equal(ref, jx)
+    assert ref.to_json() == jx.to_json()
+
+
+@pytest.mark.parametrize("make_backend", JAX_VARIANTS)
+def test_kripke_bit_identical(make_backend):
+    from repro.apps.kripke import KripkeConfig, profile
+
+    cfg = KripkeConfig(
+        decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4, n_octants=2, fuse_messages=False
+    )
+    _app_parity(profile, cfg, make_backend)
+
+
+@pytest.mark.parametrize("make_backend", JAX_VARIANTS)
+def test_amg_bit_identical(make_backend):
+    from repro.apps.amg import AMGConfig, profile
+
+    _app_parity(profile, AMGConfig(decomp=Decomp3D(2, 2, 2)), make_backend)
+
+
+@pytest.mark.parametrize("make_backend", JAX_VARIANTS)
+def test_laghos_bit_identical(make_backend):
+    from repro.apps.laghos import LaghosConfig, profile
+
+    cfg = LaghosConfig(decomp=Decomp3D(2, 2, 1), nx=32, ny=32, n_steps=1)
+    _app_parity(profile, cfg, make_backend)
+
+
+# ---------------------------------------------------------------------------
+# Golden HLO corpus
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "path", FIXTURES, ids=[os.path.basename(p)[: -len(".txt")] for p in FIXTURES]
+)
+@pytest.mark.parametrize("make_backend", JAX_VARIANTS)
+def test_hlo_golden_bit_identical(path, make_backend):
+    with open(path) as f:
+        text = f.read()
+    with open(path[: -len(".txt")] + ".expected.json") as f:
+        td = json.load(f)["total_devices"]
+    buf = scan_hlo_collectives(text, td, with_loops=True)
+    ref = HloCollectiveProfiler.region_rows(buf, name="g", n_ranks=8, backend="numpy")
+    jx = HloCollectiveProfiler.region_rows(
+        buf, name="g", n_ranks=8, backend=make_backend()
+    )
+    assert json.dumps(ref, sort_keys=True) == json.dumps(jx, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Frame reductions
+# ---------------------------------------------------------------------------
+
+
+def _mixed_frame(seed):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(rng.integers(5, 60)):
+        row = {
+            "region": f"r{int(rng.integers(4))}",
+            "rank": int(rng.integers(6)),
+            "bytes": int(rng.integers(1 << 40)),
+        }
+        if rng.random() < 0.8:  # absent cells exercise the mask path
+            row["rate"] = float(rng.random())
+        rows.append(row)
+    return Frame(rows)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_frame_group_by_identical(seed):
+    f = _mixed_frame(seed)
+    g_ref = f.group_by("region", "rank", backend="numpy")
+    g_jax = f.group_by("region", "rank", backend="jax")
+    assert list(g_ref) == list(g_jax)
+    for key in g_ref:
+        assert g_ref[key].rows == g_jax[key].rows
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_frame_agg_identical(seed):
+    f = _mixed_frame(seed)
+    aggs = {"total": ("bytes", sum), "n": ("bytes", len)}
+    ref = f.agg(("region",), aggs, backend="numpy")
+    jx = f.agg(("region",), aggs, backend="jax")
+    assert ref.rows == jx.rows
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_frame_pivot_identical(seed):
+    f = _mixed_frame(seed)
+    ref = f.pivot("region", "rank", "bytes", backend="numpy")
+    jx = f.pivot("region", "rank", "bytes", backend="jax")
+    assert ref.rows == jx.rows
+    assert ref.columns() == jx.columns()
+
+
+def test_frame_env_backend_identical(monkeypatch):
+    f = _mixed_frame(7)
+    ref = f.agg(("region",), {"total": ("bytes", sum)})
+    monkeypatch.setenv("REPRO_BACKEND", "jax")
+    jx = f.agg(("region",), {"total": ("bytes", sum)})
+    assert ref.rows == jx.rows
