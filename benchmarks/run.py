@@ -168,12 +168,146 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
     )
 
 
+def run_live(out_dir: str, backend: str | None = None) -> None:
+    """CI live-smoke: streamed/merged profiles must equal batch, byte for byte.
+
+    The paper's three apps (kripke/amg/laghos weak- and strong-scaling
+    experiments) run twice: a batch serial reference pass (no cache), then
+    a live process-pool pass (``live_dir`` mode) where every worker streams
+    its trace through the incremental profiler and publishes mergeable
+    summary shards.  A poller thread runs a ``SweepAggregator`` against the
+    shard directory *while the sweep executes*, capturing a mid-flight
+    partial frame (tagged with the ingest watermark) that lands in
+    ``out_dir/live_partial_frame.csv`` for the workflow artifact.  At the
+    end, both the live pass's returned profiles and the aggregator's merged
+    profiles must be byte-identical (``to_json()``) to the batch reference
+    for every point.  If the sweep outruns the poller (every shard already
+    published at first ingest), the partial frame is reconstructed
+    deterministically by re-ingesting all shards but one into a fresh
+    aggregator.
+    """
+    import shutil
+    import tempfile
+    import threading
+    import time
+
+    from repro.benchpark.aggregator import SweepAggregator
+    from repro.benchpark.runner import point_key, run_experiment
+    from repro.benchpark.spec import PAPER_EXPERIMENTS
+    from repro.core.backend import resolve_backend
+
+    specs = [
+        PAPER_EXPERIMENTS["kripke-weak-dane"],
+        PAPER_EXPERIMENTS["amg-weak-dane"],
+        PAPER_EXPERIMENTS["laghos-strong"],
+    ]
+    used = resolve_backend(backend).name
+    os.makedirs(out_dir, exist_ok=True)
+
+    t0 = time.perf_counter()
+    batch = {}
+    for spec in specs:
+        for (pt, _), prof in zip(
+            spec.configs(),
+            run_experiment(spec, verbose=False, executor="serial", backend=backend),
+        ):
+            batch[point_key(spec, pt)] = prof
+    t1 = time.perf_counter()
+
+    live_root = tempfile.mkdtemp(prefix="live-shards-")
+    agg = SweepAggregator(live_root)
+    partial_csv = None
+    stop = threading.Event()
+
+    def poll() -> None:
+        nonlocal partial_csv
+        while not stop.is_set():
+            agg.ingest()
+            points = agg.points()
+            if points and not (
+                agg.complete() and len(points) == len(batch)
+            ):
+                partial_csv = agg.frame(include_partial=True).to_csv()
+            stop.wait(0.05)
+
+    poller = threading.Thread(target=poll, daemon=True)
+    poller.start()
+    try:
+        live = {}
+        for spec in specs:
+            for (pt, _), prof in zip(
+                spec.configs(),
+                run_experiment(
+                    spec,
+                    verbose=False,
+                    executor="process",
+                    backend=backend,
+                    live_dir=live_root,
+                ),
+            ):
+                live[point_key(spec, pt)] = prof
+    finally:
+        stop.set()
+        poller.join()
+    t2 = time.perf_counter()
+
+    agg.ingest()
+    assert agg.complete(), agg.watermark()
+    assert sorted(agg.points()) == sorted(batch), (agg.points(), sorted(batch))
+    for key, ref in batch.items():
+        assert live[key].to_json() == ref.to_json(), f"live != batch at {key}"
+        assert agg.profile(key).to_json() == ref.to_json(), (
+            f"aggregated != batch at {key}"
+        )
+
+    if partial_csv is None:
+        # Deterministic fallback: replay all shards but the last point's
+        # final one into a fresh aggregator, so the artifact always shows a
+        # genuine watermark-tagged partial view.
+        names = sorted(os.listdir(live_root))
+        replay_root = tempfile.mkdtemp(prefix="live-replay-")
+        for fname in names[:-1]:
+            shutil.copy(
+                os.path.join(live_root, fname), os.path.join(replay_root, fname)
+            )
+        replay = SweepAggregator(replay_root)
+        replay.ingest()
+        assert not replay.complete()
+        partial_csv = replay.frame(include_partial=True).to_csv()
+        shutil.rmtree(replay_root, ignore_errors=True)
+        partial_note = "reconstructed"
+    else:
+        partial_note = "mid-flight"
+    partial_path = os.path.join(out_dir, "live_partial_frame.csv")
+    with open(partial_path, "w") as f:
+        f.write(partial_csv)
+    final_path = os.path.join(out_dir, "live_final_frame.csv")
+    with open(final_path, "w") as f:
+        f.write(agg.frame().to_csv())
+    shutil.rmtree(live_root, ignore_errors=True)
+
+    print(
+        f"live smoke OK (backend={used}): {len(batch)} points across "
+        f"{len(specs)} apps; "
+        f"batch reference {t1 - t0:.1f}s (serial), "
+        f"live pass {t2 - t1:.1f}s (process pool + aggregator); "
+        f"streamed/merged profiles byte-identical to batch; "
+        f"{partial_note} partial frame -> {partial_path}"
+    )
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description="paper figures / CI smoke")
     parser.add_argument(
         "--smoke",
         action="store_true",
         help="run the cache/process-pool smoke sweep instead of the figures",
+    )
+    parser.add_argument(
+        "--live",
+        action="store_true",
+        help="run the live streaming/aggregator smoke pass "
+        "(streamed == batch byte-identity)",
     )
     parser.add_argument(
         "--out",
@@ -188,7 +322,9 @@ def main() -> None:
         "(default: REPRO_BACKEND env, else numpy)",
     )
     args = parser.parse_args()
-    if args.smoke:
+    if args.live:
+        run_live(args.out, backend=args.backend)
+    elif args.smoke:
         run_smoke(args.out, backend=args.backend)
     else:
         run_figures(backend=args.backend)

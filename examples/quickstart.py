@@ -5,7 +5,12 @@
    no devices needed),
 3. print the Table-I-schema statistics and the corner-vs-interior finding,
 4. run the same profiler over a *compiled sharded LM step* and attribute
-   GSPMD collectives to model regions.
+   GSPMD collectives to model regions,
+5. re-profile the same trace **incrementally** (live monitoring): consume
+   the TraceBuffer in watermark deltas, publish the mergeable summary
+   shards, and let a ``SweepAggregator`` rebuild the batch profile
+   byte-for-byte — the mechanism behind ``benchmarks/run.py --live`` and
+   the ``live_dir=`` mode of the benchpark runner.
 
 Every reduction below runs on the swappable backend from
 ``repro.core.backend``: set ``REPRO_BACKEND=jax`` (or pass
@@ -80,6 +85,46 @@ def main() -> None:
     print(
         f"messages per phase per partner: "
         f"{cfg.n_dirsets * cfg.n_groupsets} — paper's 36"
+    )
+
+    print("\n== Live monitoring: the same profile, streamed in deltas ==")
+    # A sweep worker doesn't have to wait for the trace to finish: under a
+    # trace_observer hook, profile() hands the recorder to the incremental
+    # profiler, which re-reduces only the rows recorded since its
+    # (row, multiplicity) watermark.  The deltas are mergeable shards a
+    # SweepAggregator can combine in any order or tree shape; a complete
+    # shard set reproduces the batch profile byte-for-byte.
+    import tempfile
+
+    from repro.benchpark.aggregator import SweepAggregator, publish_shard
+    from repro.core.profiler import CommPatternProfiler, trace_observer
+
+    shards = []
+
+    def streaming_observer(rec, *, name, replication, meta):
+        sp = CommPatternProfiler.incremental(rec)
+        n = rec.buffer.n_rows
+        for cut in (n // 3, 2 * n // 3, None):
+            delta = sp.update(cut)
+            if delta.n_events or delta.instances:
+                shards.append(delta)
+        print(f"  consumed trace in {len(shards)} deltas, watermark {sp.watermark}")
+        return sp.profile(name=name, replication=replication, meta=meta)
+
+    with trace_observer(streaming_observer):
+        live = kripke_profile(cfg)
+    with tempfile.TemporaryDirectory() as shard_dir:
+        for i, d in enumerate(shards):
+            publish_shard(
+                shard_dir, point="kripke-00064", seq=i, total=len(shards),
+                summary=d, name=live.name, meta=live.meta,
+            )
+        agg = SweepAggregator(shard_dir)
+        agg.ingest()
+        merged = agg.profile("kripke-00064")
+    print(
+        f"  streamed == batch: {live.to_json() == prof.to_json()}; "
+        f"aggregated == batch: {merged.to_json() == prof.to_json()}"
     )
 
     print("\n== The same analysis on a compiled sharded LM train step ==")

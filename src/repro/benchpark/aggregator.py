@@ -1,0 +1,265 @@
+"""Live sweep aggregator: merge profile shards while the sweep still runs.
+
+The batch runner traces every scaling point, then reduces, then reports.
+This module is the monitoring half of ROADMAP item 3: concurrent sweep
+workers stream each point's trace through the incremental profiler
+(:mod:`repro.core.streaming`) and **publish mergeable summary shards** to a
+shared directory; a long-running :class:`SweepAggregator` ingests whatever
+shards exist *right now*, merges them in a balanced aggregation tree, and
+serves :class:`~repro.core.thicket.Frame` queries over the partial sweep —
+so the fleet is observable in flight instead of archived post-hoc.
+
+Aggregator lifecycle
+--------------------
+
+1. Workers publish shards with the cache machinery's publish idiom
+   (:func:`publish_shard`): the payload is written to a unique temp file
+   opened ``O_CREAT | O_EXCL`` (no two writers ever share a temp), fsynced,
+   and atomically ``os.replace``-d to its final name — a shard file is
+   either absent or complete, never torn.
+2. The aggregator (any process that can see the directory) calls
+   :meth:`SweepAggregator.ingest` whenever it likes; each call picks up
+   newly published shards.  A file that fails to load (torn copy on a
+   non-atomic filesystem, foreign junk) is *skipped and retried* on the
+   next ingest — it degrades the view, never corrupts it.
+3. :meth:`SweepAggregator.frame` / :meth:`profile` serve the current view.
+   Points with missing shards (a crashed worker, a sweep still running)
+   produce well-formed **partial** profiles from the shards that did
+   arrive, tagged with the ingest watermark
+   (``meta["ingest_shards"] / ["ingest_total"] / ["complete"]``), so a
+   consumer can always tell a converged row from an in-flight one.
+4. Once every shard of a point has arrived, the merged result is
+   **byte-identical** (``to_json()``) to the batch ``from_recorder``
+   profile of that point — the merge is associative/commutative and exact
+   (see the merge contract in :mod:`repro.core.streaming`), so shard
+   arrival order, interleaving, and tree shape are all irrelevant.
+
+Shards come in two kinds: ``"summary"`` (a pickled mergeable
+:class:`~repro.core.streaming.ProfileSummary` delta plus the point's
+name/replication/meta labels) and ``"profile"`` (a finished profile's JSON
+verbatim — what a cache hit publishes, since a cached point has no
+recorder to stream).
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import re
+import threading
+from typing import Optional
+
+from repro.core.profiler import CommProfile
+from repro.core.streaming import ProfileSummary, merge_tree
+from repro.core.thicket import Frame
+
+#: Shard filenames: ``<point>.<seq>of<total>.shard`` (zero-padded so a
+#: lexicographic listing is point-major, seq-ordered).
+_SHARD_RE = re.compile(r"^(?P<point>.+)\.(?P<seq>\d{4})of(?P<total>\d{4})\.shard$")
+
+
+def shard_filename(point: str, seq: int, total: int) -> str:
+    if not (0 <= seq < total <= 9999):
+        raise ValueError(f"bad shard coordinates: {seq}/{total}")
+    return f"{point}.{seq:04d}of{total:04d}.shard"
+
+
+def publish_shard(
+    root: str,
+    *,
+    point: str,
+    seq: int,
+    total: int,
+    summary: Optional[ProfileSummary] = None,
+    profile_json: Optional[str] = None,
+    name: str = "profile",
+    replication: int = 1,
+    meta: Optional[dict] = None,
+) -> str:
+    """Atomically publish one shard of a point's profile.
+
+    Exactly one of ``summary`` (a mergeable delta) / ``profile_json`` (a
+    finished profile, e.g. from a cache hit — ``total`` must be 1) is
+    given.  The write is torn-proof: unique ``O_CREAT | O_EXCL`` temp,
+    fsync, atomic rename — concurrent workers never collide and an
+    aggregator never observes a half-written shard.  Returns the final
+    path.
+    """
+    if (summary is None) == (profile_json is None):
+        raise ValueError("exactly one of summary/profile_json is required")
+    if profile_json is not None and total != 1:
+        raise ValueError("a finished-profile shard must be the point's only one")
+    payload = {
+        "kind": "summary" if summary is not None else "profile",
+        "summary": summary,
+        "profile_json": profile_json,
+        "name": name,
+        "replication": int(replication),
+        "meta": dict(meta or {}),
+    }
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, shard_filename(point, seq, total))
+    tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+    fd = os.open(tmp, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+class _PointState:
+    """Everything ingested so far for one sweep point."""
+
+    def __init__(self, total: int):
+        self.total = total
+        self.shards: dict = {}  # seq -> ProfileSummary
+        self.final_json: Optional[str] = None  # kind="profile" payload
+        self.name = "profile"
+        self.replication = 1
+        self.meta: dict = {}
+
+    @property
+    def ingested(self) -> int:
+        return 1 if self.final_json is not None else len(self.shards)
+
+    @property
+    def complete(self) -> bool:
+        return self.ingested >= self.total
+
+
+class SweepAggregator:
+    """Long-running in-process merge service over a shard directory.
+
+    Ingests shards published by concurrent sweep workers and serves
+    merged profiles / partial frames while the sweep is still running.
+    All state is in-memory and rebuilt from the directory, so an
+    aggregator can start (or restart) at any time — including in a
+    different process from every worker.  See the module docstring for
+    the lifecycle and crash-tolerance contract.
+    """
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        self._points: dict = {}  # point -> _PointState
+        self._seen: set = set()  # ingested filenames
+
+    # -- ingest --------------------------------------------------------------
+
+    def ingest(self) -> int:
+        """Pick up newly published shards; returns how many were ingested.
+
+        A file that fails to parse or unpickle is left un-ingested and
+        retried on the next call — a crashed worker's never-published
+        shard simply stays missing (partial view), and foreign files are
+        ignored.
+        """
+        try:
+            names = sorted(os.listdir(self.root))
+        except OSError:
+            return 0
+        new = 0
+        for fname in names:
+            if fname in self._seen:
+                continue
+            m = _SHARD_RE.match(fname)
+            if m is None:
+                continue
+            try:
+                with open(os.path.join(self.root, fname), "rb") as f:
+                    payload = pickle.load(f)
+                kind = payload["kind"]
+            except Exception:
+                continue  # torn/corrupt: retry on a future ingest
+            point = m.group("point")
+            seq, total = int(m.group("seq")), int(m.group("total"))
+            st = self._points.get(point)
+            if st is None:
+                st = self._points[point] = _PointState(total)
+            st.total = max(st.total, total)
+            if kind == "profile":
+                st.final_json = payload["profile_json"]
+            else:
+                st.shards[seq] = payload["summary"]
+            st.name = payload.get("name", st.name)
+            st.replication = payload.get("replication", st.replication)
+            st.meta = payload.get("meta", st.meta)
+            self._seen.add(fname)
+            new += 1
+        return new
+
+    # -- views ---------------------------------------------------------------
+
+    def points(self) -> list:
+        """Known point keys, sorted (the zero-padded rank order)."""
+        return sorted(self._points)
+
+    def watermark(self, point: Optional[str] = None):
+        """Ingest watermark: ``(ingested, total)``, or a dict over points."""
+        if point is not None:
+            st = self._points[point]
+            return (st.ingested, st.total)
+        return {p: self.watermark(p) for p in self.points()}
+
+    def complete(self, point: Optional[str] = None) -> bool:
+        """Whether every shard of ``point`` (default: all points) arrived."""
+        if point is not None:
+            return self._points[point].complete
+        return bool(self._points) and all(
+            st.complete for st in self._points.values()
+        )
+
+    def merged(self, point: str) -> ProfileSummary:
+        """The point's current merged summary (balanced aggregation tree)."""
+        st = self._points[point]
+        return merge_tree(st.shards[s] for s in sorted(st.shards))
+
+    def profile(self, point: str) -> CommProfile:
+        """The point's profile from the shards ingested so far.
+
+        Complete points are byte-identical to the batch reduction;
+        incomplete points are the well-formed profile of the events the
+        arrived shards cover (a lost shard narrows the view, it never
+        corrupts it).
+        """
+        st = self._points[point]
+        if st.final_json is not None:
+            return CommProfile.from_json(st.final_json)
+        return self.merged(point).finalize(
+            name=st.name, replication=st.replication, meta=st.meta
+        )
+
+    def profiles(self) -> list:
+        """One profile per known point, in point order."""
+        return [self.profile(p) for p in self.points()]
+
+    def frame(self, include_partial: bool = True) -> Frame:
+        """The current sweep view as a Thicket frame.
+
+        Every row carries the ingest watermark in its meta columns
+        (``meta_ingest_shards`` / ``meta_ingest_total`` /
+        ``meta_complete``); ``include_partial=False`` restricts to points
+        whose shards have all arrived.  The watermark is stamped on frame
+        copies only — :meth:`profile` outputs stay byte-comparable to the
+        batch pipeline.
+        """
+        profs = []
+        for point in self.points():
+            st = self._points[point]
+            if not include_partial and not st.complete:
+                continue
+            prof = self.profile(point)
+            prof.meta = dict(prof.meta)
+            prof.meta["ingest_shards"] = st.ingested
+            prof.meta["ingest_total"] = st.total
+            prof.meta["complete"] = st.complete
+            profs.append(prof)
+        return Frame.from_profiles(profs)

@@ -41,6 +41,16 @@ Sweep-scalability features on top of the plain loop:
   emits the whole sweep as one NumPy-backed Thicket
   :class:`~repro.core.thicket.Frame` CSV (one row per profile x region),
   the form the paper's scaling analysis consumes.
+* **Live mode** (``run_experiment(..., live_dir=...)``): every traced point
+  streams through the incremental profiler
+  (:meth:`CommPatternProfiler.incremental
+  <repro.core.profiler.CommPatternProfiler.incremental>`) instead of the
+  batch reduction, and the resulting mergeable summary deltas are
+  published as shard files (atomic O_EXCL + rename, ``live_shards`` per
+  point; cache hits publish their finished JSON as a single shard) that a
+  concurrently running :class:`~repro.benchpark.aggregator.SweepAggregator`
+  merges and serves while the sweep is still in flight.  Live profiles are
+  byte-identical to batch ones — the live smoke pass asserts it.
 """
 
 from __future__ import annotations
@@ -56,9 +66,10 @@ from contextlib import nullcontext
 from dataclasses import asdict, is_dataclass
 from typing import Optional
 
+from repro.benchpark.aggregator import publish_shard
 from repro.benchpark.spec import ExperimentSpec
 from repro.core.backend import use_backend
-from repro.core.profiler import CommProfile
+from repro.core.profiler import CommPatternProfiler, CommProfile, trace_observer
 from repro.core.thicket import Frame
 
 # same system model the dry-run uses (TPU v5e)
@@ -121,6 +132,7 @@ _FINGERPRINT_MODULES = (
     "repro.core.compat",
     "repro.core.profiler",
     "repro.core.regions",
+    "repro.core.streaming",
     "repro.core.topology",
     "repro.apps.stencil",
     "repro.apps.amg",
@@ -435,6 +447,36 @@ class ProfileCache:
 # ---------------------------------------------------------------------------
 
 
+def point_key(spec: ExperimentSpec, pt) -> str:
+    """Shard/aggregator key for one scaling point (zero-padded rank order)."""
+    return f"{spec.name}-{pt.n_ranks:05d}"
+
+
+def _make_live_observer(holder: dict, live_shards: int):
+    """A :func:`trace_observer` hook routing the trace through the
+    incremental profiler: the recorder is consumed in ``live_shards``
+    watermark deltas whose mergeable summaries land in ``holder`` for
+    publication (after the roofline stamp), and the *streamed* profile is
+    returned as the point's result — so live mode genuinely exercises the
+    watermark/merge machinery rather than the batch reduction."""
+
+    def observer(rec, *, name, replication, meta):
+        sp = CommPatternProfiler.incremental(rec)
+        n = rec.buffer.n_rows
+        chunks = max(1, int(live_shards))
+        deltas = [sp.update((n * (i + 1)) // chunks) for i in range(chunks)]
+        tail = sp.update()  # boundary-row growth / late instance entries
+        if tail.regions or tail.instances or tail.n_events:
+            deltas.append(tail)
+        holder["deltas"] = deltas
+        holder["replication"] = replication
+        return sp.profile(
+            name=name, replication=replication, meta=meta, update=False
+        )
+
+    return observer
+
+
 def _trace_point(
     spec: ExperimentSpec,
     pt,
@@ -442,6 +484,8 @@ def _trace_point(
     cache: Optional[ProfileCache],
     verbose: bool,
     backend: Optional[str] = None,
+    live_dir: Optional[str] = None,
+    live_shards: int = 4,
 ) -> tuple:
     """Profile (or cache-load) one scaling point.
 
@@ -450,6 +494,10 @@ def _trace_point(
     manifest are shared.  ``backend`` names the reduction backend for the
     trace (installed thread-locally via ``use_backend``, so it holds inside
     pool workers without changing the app ``profile()`` signatures).
+    ``live_dir`` switches the point to the incremental profiler and
+    publishes its summary deltas as ``live_shards`` shard files for a
+    concurrent :class:`~repro.benchpark.aggregator.SweepAggregator`
+    (cache hits publish their finished JSON as one shard).
     Returns ``(pt, profile, cached)``.
     """
     from repro.apps import amg, kripke, laghos
@@ -469,17 +517,50 @@ def _trace_point(
     key = cache.key(spec.app, cfg, pt.decomp) if cache else None
     prof = cache.get(key) if cache else None
     cached = prof is not None
+    holder: dict = {}
     if cached:
         # identical physics, this experiment's labels
         prof.name = f"{spec.name}-{pt.n_ranks}"
         prof.meta = meta
     else:
         ctx = use_backend(backend) if backend is not None else nullcontext()
-        with ctx:
+        obs = (
+            trace_observer(_make_live_observer(holder, live_shards))
+            if live_dir
+            else nullcontext()
+        )
+        with ctx, obs:
             prof = profile_fns[spec.app](
                 cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta
             )
     prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
+    if live_dir:
+        # Publish only after the roofline stamp so shard meta finalizes to
+        # exactly the batch pipeline's profile bytes.
+        point = point_key(spec, pt)
+        deltas = holder.get("deltas")
+        if deltas is None:  # cache hit (or an app bypassing profile_traced)
+            publish_shard(
+                live_dir,
+                point=point,
+                seq=0,
+                total=1,
+                profile_json=prof.to_json(),
+                name=prof.name,
+                meta=prof.meta,
+            )
+        else:
+            for i, delta in enumerate(deltas):
+                publish_shard(
+                    live_dir,
+                    point=point,
+                    seq=i,
+                    total=len(deltas),
+                    summary=delta,
+                    name=prof.name,
+                    replication=holder["replication"],
+                    meta=prof.meta,
+                )
     if cache and not cached:
         cache.put(key, prof)
     if verbose:  # stream progress as points finish
@@ -496,9 +577,13 @@ def _trace_point(
 
 def _trace_point_in_worker(args) -> tuple:
     """Process-pool entry: rebuild a cache handle on the shared directory."""
-    spec, pt, cfg, cache_root, max_bytes, verbose, backend = args
+    spec, pt, cfg, cache_root, max_bytes, verbose, backend, live_dir, live_shards = (
+        args
+    )
     cache = ProfileCache(cache_root, max_bytes) if cache_root else None
-    return _trace_point(spec, pt, cfg, cache, verbose, backend)
+    return _trace_point(
+        spec, pt, cfg, cache, verbose, backend, live_dir, live_shards
+    )
 
 
 def run_experiment(
@@ -512,6 +597,8 @@ def run_experiment(
     executor: str = "thread",
     frame_csv: Optional[str] = None,
     backend: Optional[str] = None,
+    live_dir: Optional[str] = None,
+    live_shards: int = 4,
 ) -> list:
     """Profile every scaling point of ``spec`` (cached + concurrent).
 
@@ -525,7 +612,12 @@ def run_experiment(
     aggregated Thicket-frame CSV (one row per profile x region).
     ``backend``: reduction-backend name for every traced point (see
     ``repro.core.backend``; default resolves from ``REPRO_BACKEND``) — all
-    backends produce byte-identical profiles.  Results keep the spec's
+    backends produce byte-identical profiles.  ``live_dir`` enables live
+    mode: each point is profiled incrementally and its mergeable summary
+    deltas (``live_shards`` per traced point) are published to that
+    directory for a concurrent
+    :class:`~repro.benchpark.aggregator.SweepAggregator`; returned
+    profiles stay byte-identical to batch mode.  Results keep the spec's
     point order regardless of completion order; all executors produce
     byte-identical profiles.
     """
@@ -549,6 +641,8 @@ def run_experiment(
                 cache.max_bytes if cache else None,
                 verbose,
                 backend,
+                live_dir,
+                live_shards,
             )
             for pt, cfg in points
         ]
@@ -568,14 +662,17 @@ def run_experiment(
             results = list(
                 ex.map(
                     lambda pc: _trace_point(
-                        spec, pc[0], pc[1], cache, verbose, backend
+                        spec, pc[0], pc[1], cache, verbose, backend,
+                        live_dir, live_shards,
                     ),
                     points,
                 )
             )  # keeps point order
     else:
         results = [
-            _trace_point(spec, pt, cfg, cache, verbose, backend)
+            _trace_point(
+                spec, pt, cfg, cache, verbose, backend, live_dir, live_shards
+            )
             for pt, cfg in points
         ]
 

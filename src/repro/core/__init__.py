@@ -16,24 +16,50 @@ Public API:
   resolve_backend / use_backend — reduction-backend selection (numpy | jax;
                                default from REPRO_BACKEND, byte-identical
                                profiles across backends)
+  StreamingProfiler / trace_observer — incremental (watermark/delta)
+                               profiling and the hook that swaps it into
+                               profile_traced; ProfileSummary/merge_tree
+                               are the mergeable shard form the live
+                               sweep aggregator reduces
 """
 
 from repro.core import compat  # noqa: F401
 from repro.core.backend import (  # noqa: F401
-    BackendUnavailable, NumpyBackend, ReduceBackend, available_backends,
-    resolve_backend, use_backend,
+    BackendUnavailable,
+    NumpyBackend,
+    ReduceBackend,
+    available_backends,
+    resolve_backend,
+    use_backend,
 )
 from repro.core.regions import (  # noqa: F401
-    comm_region, recording, current_region, COMM_REGION_SCOPE_PREFIX,
+    COMM_REGION_SCOPE_PREFIX,
+    comm_region,
+    current_region,
+    recording,
 )
 from repro.core.profiler import (  # noqa: F401
-    CommPatternProfiler, CommProfile, HloCollectiveProfiler, RegionStats,
+    CommPatternProfiler,
+    CommProfile,
+    HloCollectiveProfiler,
+    RegionStats,
     profile_traced,
+    trace_observer,
+)
+from repro.core.streaming import (  # noqa: F401
+    ProfileSummary,
+    RegionSummary,
+    StreamingProfiler,
+    merge_tree,
 )
 from repro.core.hlo import (  # noqa: F401
-    CollectiveOp, CollectiveSummary, HloCollectiveBuffer,
-    parse_hlo_collectives, parse_hlo_collectives_with_loops,
-    scan_hlo_collectives, summarize_collectives,
+    CollectiveOp,
+    CollectiveSummary,
+    HloCollectiveBuffer,
+    parse_hlo_collectives,
+    parse_hlo_collectives_with_loops,
+    scan_hlo_collectives,
+    summarize_collectives,
 )
 from repro.core import collectives  # noqa: F401
 from repro.core.thicket import Frame, add_rate_metrics  # noqa: F401

@@ -236,6 +236,89 @@ def _pair_counts_numpy(
     return counts.reshape(n_groups, rank_extent).astype(np.int64, copy=False)
 
 
+#: Bit position of the rank in a fixed ``(rank << 32) | peer`` pair code.
+PAIR_CODE_SHIFT = 32
+
+
+def _decode_pair_codes(
+    uniq: np.ndarray, n_groups: int, rank_extent: int, stride: int
+) -> tuple:
+    """Split sorted unique compound codes into per-group fixed pair codes.
+
+    ``uniq`` holds sorted ``(group * rank_extent + rank) * stride + peer``
+    codes.  The compound encoding is monotone in (group, rank, peer) and
+    the fixed ``(rank << PAIR_CODE_SHIFT) | peer`` encoding is monotone in
+    (rank, peer), so within each group the converted codes stay sorted —
+    no re-sort needed.  Returns ``(indptr, codes)`` CSR over groups.
+    """
+    per_group = np.int64(rank_extent) * np.int64(stride)
+    g = uniq // per_group
+    local = uniq - g * per_group
+    codes = ((local // stride) << PAIR_CODE_SHIFT) | (local % stride)
+    indptr = np.searchsorted(g, np.arange(n_groups + 1)).astype(np.int64)
+    return indptr, codes.astype(np.int64, copy=False)
+
+
+def _pair_codes_numpy(
+    group_ids: np.ndarray,
+    rows: np.ndarray,
+    peers: np.ndarray,
+    n_groups: int,
+    strategy: Optional[tuple] = None,
+) -> tuple:
+    """Distinct (rank, peer) sets per group as sorted unique fixed codes.
+
+    The mergeable twin of :func:`_pair_counts_numpy`: same non-decreasing
+    ``group_ids`` contract, same :func:`_dedup_strategy` split (dense
+    bitmap / chunked bitmap / sort-based unique), but instead of
+    collapsing to per-rank counts it returns ``(indptr, codes)`` — a CSR
+    over groups of sorted unique ``(rank << PAIR_CODE_SHIFT) | peer``
+    int64 codes.  The encoding is *fixed* (no data-dependent stride), so
+    code sets from different deltas/shards union directly
+    (:mod:`repro.core.streaming` merges them with ``np.union1d``).
+    """
+    m = len(rows)
+    if m == 0 or n_groups == 0:
+        return np.zeros(n_groups + 1, np.int64), np.zeros(0, np.int64)
+    rank_extent = int(rows.max()) + 1
+    stride = int(peers.max()) + 1
+    if rank_extent > (1 << 31) or stride > (1 << PAIR_CODE_SHIFT):
+        raise ValueError(
+            f"rank/peer ids ({rank_extent}, {stride}) exceed the fixed "
+            f"pair-code encoding"
+        )
+    if strategy is None:
+        strategy = _dedup_strategy(n_groups, rank_extent, stride, m)
+    kind, chunk = strategy
+    if kind == "unique":
+        comp = (group_ids * rank_extent + rows) * stride + peers
+        uniq = np.unique(comp)
+    elif kind == "bitmap":
+        comp = (group_ids * rank_extent + rows) * stride + peers
+        bitmap = np.zeros(n_groups * rank_extent * stride, bool)
+        bitmap[comp] = True
+        uniq = np.flatnonzero(bitmap)
+    else:  # chunked: dense scatter per run of groups, bounded peak memory
+        bounds = np.searchsorted(group_ids, np.arange(n_groups + 1))
+        parts = []
+        base = np.int64(rank_extent) * np.int64(stride)
+        for g0 in range(0, n_groups, chunk):
+            g1 = min(g0 + chunk, n_groups)
+            lo, hi = int(bounds[g0]), int(bounds[g1])
+            if lo == hi:
+                continue
+            local = (
+                (group_ids[lo:hi] - g0) * rank_extent + rows[lo:hi]
+            ) * stride + peers[lo:hi]
+            bitmap = np.zeros((g1 - g0) * rank_extent * stride, bool)
+            bitmap[local] = True
+            parts.append(np.flatnonzero(bitmap) + g0 * base)
+        uniq = (
+            np.concatenate(parts) if parts else np.zeros(0, np.int64)
+        )  # chunks are group-major, so the concatenation is already sorted
+    return _decode_pair_codes(uniq, n_groups, rank_extent, stride)
+
+
 # ---------------------------------------------------------------------------
 # Backend interface + NumPy reference
 # ---------------------------------------------------------------------------
@@ -264,6 +347,13 @@ class ReduceBackend:
         """|distinct peers| per (group, rank); group_ids non-decreasing."""
         raise NotImplementedError
 
+    def pair_codes(self, group_ids, rows, peers, n_groups) -> tuple:
+        """Distinct (rank, peer) sets per group as sorted unique fixed
+        ``(rank << PAIR_CODE_SHIFT) | peer`` codes — ``(indptr, codes)``
+        CSR over groups; group_ids non-decreasing.  The mergeable form of
+        :meth:`pair_counts` (see :mod:`repro.core.streaming`)."""
+        raise NotImplementedError
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<{type(self).__name__} name={self.name!r}>"
 
@@ -288,6 +378,9 @@ class NumpyBackend(ReduceBackend):
 
     def pair_counts(self, group_ids, rows, peers, n_groups, rank_extent):
         return _pair_counts_numpy(group_ids, rows, peers, n_groups, rank_extent)
+
+    def pair_codes(self, group_ids, rows, peers, n_groups) -> tuple:
+        return _pair_codes_numpy(group_ids, rows, peers, n_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -594,6 +687,22 @@ class JaxBackend(ReduceBackend):
             uniq = np.asarray(self._jnp.unique(codes))
         counts = np.bincount(uniq // stride, minlength=n_groups * rank_extent)
         return counts.reshape(n_groups, rank_extent).astype(np.int64, copy=False)
+
+    def pair_codes(self, group_ids, rows, peers, n_groups) -> tuple:
+        m = len(rows)
+        if m == 0 or n_groups == 0:
+            return np.zeros(n_groups + 1, np.int64), np.zeros(0, np.int64)
+        rank_extent = int(rows.max()) + 1
+        stride = int(peers.max()) + 1
+        if rank_extent > (1 << 31) or stride > (1 << PAIR_CODE_SHIFT):
+            raise ValueError(
+                f"rank/peer ids ({rank_extent}, {stride}) exceed the fixed "
+                f"pair-code encoding"
+            )
+        comp = (group_ids * rank_extent + rows) * stride + peers
+        with self._enable_x64():
+            uniq = np.asarray(self._jnp.unique(comp))
+        return _decode_pair_codes(uniq, n_groups, rank_extent, stride)
 
 
 # ---------------------------------------------------------------------------

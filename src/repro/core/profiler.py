@@ -39,11 +39,26 @@ count/byte path is **exact**, so profiles are bit-identical across backends.
 Host NumPy keeps the O(rows) scatters/orderings; the backend owns the
 O(G x S x Rmax) weight-grid matmuls and the peer-set dedup that dominate at
 high rank counts.
+
+Live monitoring (see :mod:`repro.core.streaming`): batch ``from_recorder``
+has an incremental twin — :meth:`CommPatternProfiler.incremental` returns a
+``StreamingProfiler`` holding a ``(row, multiplicity)`` watermark into the
+recorder's TraceBuffer; each ``update()`` re-reduces only the rows recorded
+since the watermark (through the same backend kernels) and yields the delta
+as an associative/commutative mergeable ``ProfileSummary`` shard, so
+concurrent sweep workers can publish partial profiles that an aggregator
+(:mod:`repro.benchpark.aggregator`) merges in any order into profiles
+byte-identical to the batch reduction.  :func:`trace_observer` installs a
+thread-local hook that lets a harness intercept :func:`profile_traced`'s
+recorder (e.g. to profile incrementally and ship shards mid-run) without
+any app-code change.
 """
 
 from __future__ import annotations
 
 import json
+import threading
+from contextlib import contextmanager
 from dataclasses import asdict, dataclass, field
 from typing import Callable, Optional, Union
 
@@ -227,6 +242,26 @@ class CommPatternProfiler:
                 rec, name=name, replication=replication, meta=meta
             )
         raise ValueError(f"unknown profiler impl: {impl!r}")
+
+    @staticmethod
+    def incremental(
+        rec: RegionRecorder,
+        *,
+        backend: Union[ReduceBackend, str, None] = None,
+    ):
+        """Incremental mode: a ``StreamingProfiler`` over ``rec``.
+
+        Holds a ``(row, multiplicity)`` watermark into the recorder's
+        TraceBuffer; each ``update()`` reduces only the newly recorded
+        rows (same backend kernels as the batch path) and returns the
+        delta as a mergeable ``ProfileSummary`` shard.  ``profile()``
+        collapses the running summary into a CommProfile byte-identical
+        to :meth:`from_recorder` over the same events.  See
+        :mod:`repro.core.streaming` for the merge contract.
+        """
+        from repro.core.streaming import StreamingProfiler
+
+        return StreamingProfiler(rec, backend=backend)
 
     # -- segment-reduced implementation (default) ---------------------------
 
@@ -617,6 +652,32 @@ class HloCollectiveProfiler:
         return rows
 
 
+_observer_tls = threading.local()
+
+
+@contextmanager
+def trace_observer(cb: Callable):
+    """Install a thread-local hook over :func:`profile_traced`.
+
+    Within the scope, every ``profile_traced`` call hands its finished
+    recorder to ``cb(rec, name=..., replication=..., meta=...)`` *instead
+    of* reducing it through the batch path.  The callback may return a
+    :class:`CommProfile` (used as the result — e.g. built via
+    :meth:`CommPatternProfiler.incremental` with shards shipped to a live
+    aggregator along the way) or ``None`` to fall through to the batch
+    ``from_recorder`` reduction.  Hooks nest; the innermost wins.  The
+    benchpark runner's ``live_dir`` mode is the canonical user: it streams
+    every sweep point's trace through the incremental profiler and
+    publishes the resulting shards without any app-code change.
+    """
+    prev = getattr(_observer_tls, "cb", None)
+    _observer_tls.cb = cb
+    try:
+        yield
+    finally:
+        _observer_tls.cb = prev
+
+
 def profile_traced(
     fn: Callable,
     *args,
@@ -631,9 +692,18 @@ def profile_traced(
     the communication structure of an SPMD JAX program is fully visible at
     trace time.  ``fn`` must use the instrumented collectives from
     ``repro.core.collectives`` inside its shard_map regions.
+
+    A :func:`trace_observer` hook, when installed, is offered the recorder
+    first and may supply the profile (live/incremental harnesses); a
+    ``None`` return falls through to the batch reduction.
     """
     with recording() as rec:
         jax.eval_shape(fn, *args, **kwargs)
+    cb = getattr(_observer_tls, "cb", None)
+    if cb is not None:
+        prof = cb(rec, name=name, replication=replication, meta=meta)
+        if prof is not None:
+            return prof
     return CommPatternProfiler.from_recorder(
         rec, name=name, replication=replication, meta=meta
     )

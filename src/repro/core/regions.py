@@ -135,6 +135,19 @@ bit-identical int64 results; the store itself never depends on which
 backend reduces it.  See the backend module docstring for the exactness
 guarantees (f64-exact / limb-decomposed matmuls under jax x64) and for
 when the Pallas segmented-reduce kernel engages.
+
+Live monitoring: watermark semantics
+------------------------------------
+
+The buffer is append-only, but the multiplicity collapse means the *last*
+row can still grow after it is read, so streaming consumers
+(:mod:`repro.core.streaming`) cursor with :meth:`TraceBuffer.watermark` —
+a ``(row, multiplicity)`` pair, not a bare row count: every row below
+``row`` is fully consumed and ``multiplicity`` events of row ``row``
+itself are.  Deltas taken against successive watermarks partition the
+logical event stream exactly (no overlap, no gap), which is what makes
+the incremental profiler's merged shards bit-identical to the batch
+reduction.
 """
 
 from __future__ import annotations
@@ -657,6 +670,22 @@ class TraceBuffer:
     @property
     def largest(self) -> np.ndarray:
         return self._largest.view()
+
+    def watermark(self) -> tuple:
+        """Current ``(row, multiplicity)`` high-water mark for streaming.
+
+        Identical consecutive events collapse into the **last** row by
+        bumping its multiplicity, so a bare row count is not a stable
+        cursor — the last row may grow after being read.  Incremental
+        consumers (:mod:`repro.core.streaming`) therefore track the pair:
+        everything below ``row`` plus ``multiplicity`` events of row
+        ``row`` itself has been consumed.  For an empty buffer this is
+        ``(0, 0)``; otherwise ``(n_rows - 1, multiplicity[-1])``.
+        """
+        n = self.n_rows
+        if n == 0:
+            return (0, 0)
+        return (n - 1, int(self._mult._data[n - 1]))
 
     def storage_nbytes(self) -> int:
         """Live buffer memory: row columns + the struct table's slabs.

@@ -45,6 +45,15 @@ keyword on ``group_by`` / ``agg`` / ``pivot``, default from
 ``REPRO_BACKEND``) with identical grouping on every backend; object-dtype
 and masked key columns always factorize host-side.
 
+Live monitoring: frames can be built **mid-sweep**.  The streaming layer
+(:mod:`repro.core.streaming` + :mod:`repro.benchpark.aggregator`) merges
+profile shards while workers are still tracing, and
+``SweepAggregator.frame`` emits a partial Frame whose rows carry the
+ingest watermark as ordinary meta columns (``meta_ingest_shards`` /
+``meta_ingest_total`` / ``meta_complete``) — downstream group-bys and
+pivots need no special casing, and a consumer can always separate
+converged rows from in-flight ones by filtering on ``meta_complete``.
+
 Derived metrics mirror the paper's §V analysis:
   bandwidth   bytes sent per second per process (Fig. 5/6 left axes)
   msg_rate    messages sent per second per process (Fig. 5/6 right axes)

@@ -1,0 +1,303 @@
+"""SweepAggregator: atomic shard publish, crash tolerance, live parity.
+
+Covers the aggregator half of the streaming tentpole: O_EXCL + atomic
+rename shard publication, ingest of partial shard sets (a lost/withheld
+shard degrades the served view, never corrupts it — partial frames carry
+the ingest watermark in meta columns), bit-identical convergence once a
+late shard arrives, corrupt-file skipping, the finished-profile shard
+kind (what cache hits publish), and the end-to-end acceptance criterion:
+a process-pool ``run_experiment(live_dir=...)`` sweep over all three apps
+produces profiles byte-identical (``to_json()``) to the batch path, both
+as returned by the runner and as merged by the aggregator.  Runs under
+the ambient ``REPRO_BACKEND`` so the CI jax tier-1 leg covers the jax
+side.
+"""
+
+import os
+import pickle
+import shutil
+
+import pytest
+
+from test_profiler_parity import _random_recorder
+
+from repro.benchpark.aggregator import (
+    SweepAggregator,
+    publish_shard,
+    shard_filename,
+)
+from repro.benchpark.runner import point_key, run_experiment
+from repro.benchpark.spec import ExperimentSpec, ScalePoint
+from repro.core.profiler import CommPatternProfiler
+from repro.core.streaming import ProfileSummary
+
+
+def _point_shards(seed, n_shards=3):
+    """A point's batch profile + its stream cut into n_shards deltas."""
+    rec = _random_recorder(seed)
+    batch = CommPatternProfiler.from_recorder(rec, name=f"pt{seed}")
+    sp = CommPatternProfiler.incremental(rec)
+    n = rec.buffer.n_rows
+    deltas = [sp.update((n * (i + 1)) // n_shards) for i in range(n_shards)]
+    tail = sp.update()
+    if tail.n_events or tail.regions or tail.instances:
+        deltas.append(tail)
+    return batch, deltas
+
+
+def _publish_all(root, point, deltas, name):
+    for i, d in enumerate(deltas):
+        publish_shard(
+            root, point=point, seq=i, total=len(deltas), summary=d, name=name
+        )
+
+
+# ---------------------------------------------------------------------------
+# Publish / ingest round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_publish_ingest_roundtrip(tmp_path):
+    root = str(tmp_path)
+    batch, deltas = _point_shards(7)
+    _publish_all(root, "pt7", deltas, batch.name)
+    agg = SweepAggregator(root)
+    assert agg.ingest() == len(deltas)
+    assert agg.ingest() == 0  # idempotent
+    assert agg.points() == ["pt7"]
+    assert agg.watermark("pt7") == (len(deltas), len(deltas))
+    assert agg.complete("pt7") and agg.complete()
+    assert agg.profile("pt7").to_json() == batch.to_json()
+
+
+def test_shard_filename_contract():
+    assert shard_filename("kripke-x-00064", 2, 5) == "kripke-x-00064.0002of0005.shard"
+    with pytest.raises(ValueError):
+        shard_filename("p", 5, 5)
+    with pytest.raises(ValueError):
+        shard_filename("p", -1, 5)
+    with pytest.raises(ValueError):
+        publish_shard("/nonexistent", point="p", seq=0, total=1)  # no payload
+    with pytest.raises(ValueError):
+        publish_shard(
+            "/nonexistent",
+            point="p",
+            seq=0,
+            total=2,  # a finished profile must be the only shard
+            profile_json="{}",
+        )
+
+
+def test_profile_kind_shard(tmp_path):
+    """Cache hits ship finished JSON; the aggregator serves it verbatim."""
+    root = str(tmp_path)
+    batch, _ = _point_shards(3)
+    publish_shard(
+        root,
+        point="cached-pt",
+        seq=0,
+        total=1,
+        profile_json=batch.to_json(),
+        name=batch.name,
+        meta=batch.meta,
+    )
+    agg = SweepAggregator(root)
+    assert agg.ingest() == 1
+    assert agg.complete("cached-pt")
+    assert agg.profile("cached-pt").to_json() == batch.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Shard loss: degrade, never corrupt; converge when the shard arrives
+# ---------------------------------------------------------------------------
+
+
+def test_withheld_shard_partial_then_convergence(tmp_path):
+    root = str(tmp_path / "shards")
+    hold = str(tmp_path / "held")
+    os.makedirs(hold)
+    batch, deltas = _point_shards(19, n_shards=4)
+    _publish_all(root, "pt19", deltas, batch.name)
+    withheld = shard_filename("pt19", 1, len(deltas))
+    shutil.move(os.path.join(root, withheld), os.path.join(hold, withheld))
+
+    agg = SweepAggregator(root)
+    assert agg.ingest() == len(deltas) - 1
+    assert agg.watermark("pt19") == (len(deltas) - 1, len(deltas))
+    assert not agg.complete("pt19") and not agg.complete()
+
+    # the partial view is a well-formed profile over the arrived events
+    partial = agg.profile("pt19")
+    arrived = [d for i, d in enumerate(deltas) if i != 1]
+    expect = ProfileSummary.empty()
+    for d in arrived:
+        expect = expect.merge(d)
+    assert partial.to_json() == expect.finalize(name=batch.name).to_json()
+    assert sum(d.n_events for d in arrived) < sum(d.n_events for d in deltas)
+
+    # the partial frame is tagged with the ingest watermark
+    frame = agg.frame(include_partial=True)
+    csv = frame.to_csv()
+    header = csv.splitlines()[0].split(",")
+    assert "meta_ingest_shards" in header
+    assert "meta_ingest_total" in header
+    assert "meta_complete" in header
+    assert agg.frame(include_partial=False).to_csv().count("\n") <= 1
+
+    # the late shard arrives: bit-identical convergence
+    shutil.move(os.path.join(hold, withheld), os.path.join(root, withheld))
+    assert agg.ingest() == 1
+    assert agg.complete("pt19")
+    assert agg.profile("pt19").to_json() == batch.to_json()
+    # watermark tags live on frame copies only — profile() stays pristine
+    assert "ingest_shards" not in agg.profile("pt19").meta
+    assert agg.frame(include_partial=False).to_csv().count("\n") > 1
+
+
+def test_corrupt_shard_skipped_and_retried(tmp_path):
+    root = str(tmp_path)
+    batch, deltas = _point_shards(5, n_shards=2)
+    for i, d in enumerate(deltas[:-1]):
+        publish_shard(
+            root, point="pt5", seq=i, total=len(deltas), summary=d, name=batch.name
+        )
+    bad = os.path.join(root, shard_filename("pt5", len(deltas) - 1, len(deltas)))
+    with open(bad, "wb") as f:
+        f.write(b"torn write / not a pickle")
+    agg = SweepAggregator(root)
+    got = agg.ingest()
+    assert got == len(deltas) - 1  # the corrupt one is skipped
+    assert not agg.complete("pt5")
+    # foreign files are ignored entirely
+    with open(os.path.join(root, "notes.txt"), "w") as f:
+        f.write("hi")
+    assert agg.ingest() == 0
+    # the writer retries with a good copy (atomic overwrite) -> converges
+    publish_shard(
+        root,
+        point="pt5",
+        seq=len(deltas) - 1,
+        total=len(deltas),
+        summary=deltas[-1],
+        name=batch.name,
+    )
+    assert agg.ingest() == 1
+    assert agg.profile("pt5").to_json() == batch.to_json()
+
+
+def test_publish_is_atomic_no_temp_left(tmp_path):
+    root = str(tmp_path)
+    _, deltas = _point_shards(2, n_shards=1)
+    publish_shard(root, point="p", seq=0, total=1, summary=deltas[0])
+    names = os.listdir(root)
+    assert names == [shard_filename("p", 0, 1)]
+    with open(os.path.join(root, names[0]), "rb") as f:
+        payload = pickle.load(f)
+    assert payload["kind"] == "summary"
+
+
+def test_aggregator_restart_rebuilds_from_directory(tmp_path):
+    """All state is in the directory: a fresh aggregator (new process
+    after a crash) serves the same view."""
+    root = str(tmp_path)
+    batch, deltas = _point_shards(29)
+    _publish_all(root, "pt29", deltas, batch.name)
+    a1 = SweepAggregator(root)
+    a1.ingest()
+    a2 = SweepAggregator(root)  # restart
+    a2.ingest()
+    assert a1.profile("pt29").to_json() == a2.profile("pt29").to_json()
+
+
+# ---------------------------------------------------------------------------
+# End to end: three-app process-pool live sweep == batch, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def _tiny_specs():
+    return [
+        ExperimentSpec(
+            name="agg-kripke",
+            app="kripke",
+            scaling="weak",
+            points=[ScalePoint((2, 2, 1)), ScalePoint((2, 2, 2))],
+            app_params={"nx": 4, "ny": 4, "nz": 4, "n_octants": 1},
+            system="test",
+        ),
+        ExperimentSpec(
+            name="agg-amg",
+            app="amg",
+            scaling="weak",
+            points=[ScalePoint((2, 2, 1))],
+            app_params={"nx": 8, "ny": 8, "nz": 8},
+            system="test",
+        ),
+        ExperimentSpec(
+            name="agg-laghos",
+            app="laghos",
+            scaling="strong",
+            points=[ScalePoint((2, 2, 1))],
+            app_params={"nx": 32, "ny": 32, "n_steps": 1},
+            system="test",
+        ),
+    ]
+
+
+def test_live_process_sweep_matches_batch(tmp_path):
+    live_root = str(tmp_path / "live")
+    batch = {}
+    for spec in _tiny_specs():
+        profs = run_experiment(spec, verbose=False, executor="serial")
+        for (pt, _), prof in zip(spec.configs(), profs):
+            batch[point_key(spec, pt)] = prof
+
+    agg = SweepAggregator(live_root)
+    live = {}
+    for spec in _tiny_specs():
+        profs = run_experiment(
+            spec,
+            verbose=False,
+            executor="process",
+            max_workers=2,
+            live_dir=live_root,
+            live_shards=3,
+        )
+        agg.ingest()  # mid-sweep ingest must never break anything
+        for (pt, _), prof in zip(spec.configs(), profs):
+            live[point_key(spec, pt)] = prof
+
+    agg.ingest()
+    assert agg.complete(), agg.watermark()
+    assert sorted(agg.points()) == sorted(batch)
+    for key, ref in batch.items():
+        assert live[key].to_json() == ref.to_json(), key
+        assert agg.profile(key).to_json() == ref.to_json(), key
+    frame = agg.frame()
+    csv = frame.to_csv()
+    assert "meta_complete" in csv.splitlines()[0]
+    assert len(csv.splitlines()) > len(batch)  # header + >=1 row per point
+
+
+def test_live_serial_sweep_with_cache_hits(tmp_path):
+    """Cache-hit points publish finished-JSON shards; parity still holds."""
+    spec = _tiny_specs()[0]
+    cache_dir = str(tmp_path / "cache")
+    live_root = str(tmp_path / "live")
+    first = run_experiment(
+        spec, verbose=False, executor="serial", cache_dir=cache_dir
+    )
+    second = run_experiment(
+        spec,
+        verbose=False,
+        executor="serial",
+        cache_dir=cache_dir,
+        live_dir=live_root,
+    )
+    agg = SweepAggregator(live_root)
+    agg.ingest()
+    assert agg.complete()
+    for (pt, _), a, b in zip(spec.configs(), first, second):
+        key = point_key(spec, pt)
+        assert agg.watermark(key) == (1, 1)  # one finished-profile shard
+        assert a.to_json() == b.to_json()
+        assert agg.profile(key).to_json() == a.to_json()

@@ -1,0 +1,310 @@
+"""Incremental (watermark/delta) profiling must equal batch, bit for bit.
+
+The streaming layer (``repro.core.streaming``) re-reduces only the
+TraceBuffer rows recorded since a ``(row, multiplicity)`` watermark and
+merges the mergeable delta summaries into a running profile.  These tests
+pin the tentpole contract: for any chunking of the stream — including
+chunks that land *inside* a multiplicity-collapsed run, and buffers that
+keep growing between updates — the finalized profile is byte-identical
+(``to_json()``) to ``CommPatternProfiler.from_recorder`` over the same
+events, on random streams, on all three app paths, and on every available
+reduction backend.  The ``trace_observer`` hook mechanics (intercept /
+fall-through / nesting) are covered here too.
+"""
+
+import numpy as np
+import pytest
+
+from proptest import given, settings, st
+from test_profiler_parity import (
+    _random_coll_event,
+    _random_p2p_event,
+    _random_recorder,
+)
+
+from repro.apps.stencil import Decomp3D
+from repro.core.backend import resolve_backend
+from repro.core.profiler import (
+    CommPatternProfiler,
+    CommProfile,
+    trace_observer,
+)
+from repro.core.regions import RegionRecorder
+from repro.core.streaming import (
+    ProfileSummary,
+    StreamingProfiler,
+    merge_tree,
+)
+
+BACKENDS = [
+    pytest.param("numpy", id="numpy"),
+    pytest.param("jax", id="jax"),
+]
+
+
+def _backend_or_skip(name):
+    be = resolve_backend(name)
+    if be.name != name:
+        pytest.skip(f"backend {name!r} unavailable here")
+    return be
+
+
+def _stream_profile(rec, cuts, backend=None, **kw):
+    sp = CommPatternProfiler.incremental(rec, backend=backend)
+    assert isinstance(sp, StreamingProfiler)
+    for c in cuts:
+        sp.update(int(c))
+    return sp.profile(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Random streams
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_incremental_equals_batch_on_random_streams(seed):
+    rec = _random_recorder(seed)
+    repl = (seed % 3) + 1
+    batch = CommPatternProfiler.from_recorder(rec, name="p", replication=repl)
+    rng = np.random.default_rng(seed)
+    n = rec.buffer.n_rows
+    cuts = np.sort(rng.integers(0, n + 1, size=int(rng.integers(0, 6))))
+    live = _stream_profile(rec, cuts, name="p", replication=repl)
+    assert live.to_json() == batch.to_json()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_incremental_backend_parity(backend):
+    _backend_or_skip(backend)
+    for seed in (3, 17):
+        rec = _random_recorder(seed)
+        batch = CommPatternProfiler.from_recorder(rec, name="p")
+        live = _stream_profile(
+            rec, np.linspace(0, rec.buffer.n_rows, 5).astype(int),
+            backend=backend, name="p",
+        )
+        assert live.to_json() == batch.to_json()
+
+
+def test_empty_recorder():
+    rec = RegionRecorder()
+    sp = CommPatternProfiler.incremental(rec)
+    delta = sp.update()
+    assert delta.n_events == 0 and not delta.regions and not delta.instances
+    assert sp.watermark == (0, 0)
+    prof = sp.profile(name="profile")
+    assert prof.to_json() == CommPatternProfiler.from_recorder(rec).to_json()
+
+
+def test_instances_only_recorder():
+    rec = RegionRecorder()
+    rec.enter("setup")
+    rec.enter("setup")
+    rec.enter("solve")
+    live = _stream_profile(rec, [], name="p")
+    assert live.to_json() == CommPatternProfiler.from_recorder(
+        rec, name="p"
+    ).to_json()
+    assert live.regions["setup"].instances == 2
+
+
+# ---------------------------------------------------------------------------
+# Watermark semantics: the last row can keep growing
+# ---------------------------------------------------------------------------
+
+
+def test_boundary_row_growth_between_updates():
+    """An update mid-run of identical events must not lose the growth."""
+    import random
+
+    rng = random.Random(7)
+    rec = RegionRecorder()
+    rec.enter("r")
+    ev = _random_p2p_event(rng, "r", 6)
+    for _ in range(4):
+        rec.record(ev)  # collapses into one row, multiplicity 4
+    assert rec.buffer.n_rows == 1 and rec.buffer.n_events == 4
+
+    sp = CommPatternProfiler.incremental(rec)
+    d1 = sp.update()
+    assert d1.n_events == 4
+    assert sp.watermark == (0, 4) == rec.buffer.watermark()
+    for _ in range(3):
+        rec.record(ev)  # same row grows to multiplicity 7
+    d2 = sp.update()
+    assert d2.n_events == 3  # only the growth, not a re-count
+    assert sp.watermark == (0, 7)
+    # interleave growth with fresh rows and a mid-buffer cut
+    rec.record(_random_coll_event(rng, "r", 6))
+    rec.record(ev)
+    sp.update(1)
+    sp.update()
+    assert sp.watermark == rec.buffer.watermark()
+
+    batch = CommPatternProfiler.from_recorder(rec, name="p")
+    assert sp.profile(name="p").to_json() == batch.to_json()
+
+
+def test_repeated_and_backward_updates_are_noops():
+    rec = _random_recorder(11)
+    sp = CommPatternProfiler.incremental(rec)
+    sp.update()
+    wm = sp.watermark
+    before = sp.summary.n_events
+    for cut in (0, 1, rec.buffer.n_rows):  # stale cursors cannot rewind
+        d = sp.update(cut)
+        assert d.n_events == 0 and not d.regions
+    assert sp.watermark == wm and sp.summary.n_events == before
+
+
+def test_late_instance_entries_ride_the_next_delta():
+    rec = _random_recorder(23)
+    sp = CommPatternProfiler.incremental(rec)
+    sp.update()
+    rec.enter("late_phase")
+    rec.enter("quiet")  # bump an already-seen region
+    d = sp.update()
+    assert d.instances.get("late_phase") == 1
+    assert d.instances.get("quiet") == 1
+    batch = CommPatternProfiler.from_recorder(rec, name="p")
+    assert sp.profile(name="p").to_json() == batch.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Delta summaries merge back into the running summary
+# ---------------------------------------------------------------------------
+
+
+def test_deltas_partition_the_stream():
+    rec = _random_recorder(5)
+    n = rec.buffer.n_rows
+    sp = CommPatternProfiler.incremental(rec)
+    deltas = [sp.update(c) for c in np.linspace(0, n, 7).astype(int)]
+    assert sum(d.n_events for d in deltas) == rec.buffer.n_events
+    rebuilt = merge_tree(deltas)
+    assert rebuilt.n_events == sp.summary.n_events
+    assert (
+        rebuilt.finalize(name="p").to_json()
+        == sp.summary.finalize(name="p").to_json()
+        == CommPatternProfiler.from_recorder(rec, name="p").to_json()
+    )
+
+
+def test_merge_empty_identity():
+    rec = _random_recorder(2)
+    sp = CommPatternProfiler.incremental(rec)
+    sp.update()
+    s = sp.summary
+    for merged in (s.merge(ProfileSummary.empty()), ProfileSummary.empty().merge(s)):
+        assert merged.finalize(name="p").to_json() == s.finalize(name="p").to_json()
+    assert merge_tree([]).finalize(name="p").to_json() == ProfileSummary(
+    ).finalize(name="p").to_json()
+
+
+def test_merge_does_not_mutate_operands():
+    a = CommPatternProfiler.incremental(_random_recorder(31))
+    b = CommPatternProfiler.incremental(_random_recorder(32))
+    a.update()
+    b.update()
+    ja = a.summary.finalize(name="p").to_json()
+    jb = b.summary.finalize(name="p").to_json()
+    a.summary.merge(b.summary)
+    assert a.summary.finalize(name="p").to_json() == ja
+    assert b.summary.finalize(name="p").to_json() == jb
+
+
+# ---------------------------------------------------------------------------
+# App-path parity (the acceptance criterion) via the trace_observer hook
+# ---------------------------------------------------------------------------
+
+
+def _app_live_parity(profile_fn, cfg, backend=None):
+    batch = profile_fn(cfg)
+    seen = {}
+
+    def observer(rec, *, name, replication, meta):
+        sp = CommPatternProfiler.incremental(rec, backend=backend)
+        for c in np.linspace(0, rec.buffer.n_rows, 6).astype(int):
+            sp.update(int(c))
+        seen["watermark"] = sp.watermark
+        return sp.profile(name=name, replication=replication, meta=meta)
+
+    with trace_observer(observer):
+        live = profile_fn(cfg)
+    assert seen["watermark"][0] >= 0  # the hook actually ran
+    assert live.to_json() == batch.to_json()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kripke_live_parity(backend):
+    from repro.apps.kripke import KripkeConfig, profile
+
+    _backend_or_skip(backend)
+    cfg = KripkeConfig(
+        decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4, n_octants=2,
+        fuse_messages=False,
+    )
+    _app_live_parity(profile, cfg, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_amg_live_parity(backend):
+    from repro.apps.amg import AMGConfig, profile
+
+    _backend_or_skip(backend)
+    _app_live_parity(profile, AMGConfig(decomp=Decomp3D(2, 2, 2)), backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_laghos_live_parity(backend):
+    from repro.apps.laghos import LaghosConfig, profile
+
+    _backend_or_skip(backend)
+    _app_live_parity(
+        profile, LaghosConfig(decomp=Decomp3D(2, 2, 1), nx=32, ny=32, n_steps=1),
+        backend,
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace_observer mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_observer_none_falls_through():
+    from repro.apps.kripke import KripkeConfig, profile
+
+    cfg = KripkeConfig(decomp=Decomp3D(2, 2, 1), nx=4, ny=4, nz=4)
+    batch = profile(cfg)
+    calls = []
+
+    def observer(rec, **kw):
+        calls.append(rec.buffer.n_events)
+        return None  # decline: batch path must run
+
+    with trace_observer(observer):
+        prof = profile(cfg)
+    assert calls and calls[0] > 0
+    assert prof.to_json() == batch.to_json()
+
+
+def test_observer_result_wins_and_scope_restores():
+    from repro.apps.kripke import KripkeConfig, profile
+
+    cfg = KripkeConfig(decomp=Decomp3D(2, 2, 1), nx=4, ny=4, nz=4)
+    sentinel = CommProfile(name="sentinel", n_ranks=0)
+
+    def outer(rec, **kw):
+        return None
+
+    def inner(rec, **kw):
+        return sentinel
+
+    with trace_observer(outer):
+        with trace_observer(inner):  # innermost wins
+            assert profile(cfg) is sentinel
+        prof = profile(cfg)  # outer declined: batch profile again
+        assert prof is not sentinel and prof.regions
+    assert profile(cfg) is not sentinel

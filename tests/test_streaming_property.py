@@ -1,0 +1,159 @@
+"""Merge is commutative + associative: any shard order/tree, same bytes.
+
+Property tests (via the ``proptest`` shim — real hypothesis when
+installed) over random event streams: the stream is cut into random
+contiguous watermark deltas (shards), and *every* way of combining them —
+shuffled orders, left/right folds, random binary merge trees, the
+balanced ``merge_tree`` — must finalize to the identical profile
+``to_json()`` bytes, which in turn must equal the batch ``from_recorder``
+reduction.  This is the "proven equivalent by construction tests" leg of
+the streaming tentpole: associativity + commutativity + batch equality
+together mean shard arrival order in the aggregator can never change a
+result.
+"""
+
+import random
+
+import numpy as np
+
+from proptest import given, settings, st
+from test_profiler_parity import _random_recorder
+
+from repro.core.profiler import CommPatternProfiler
+from repro.core.streaming import ProfileSummary, merge_tree
+
+
+def _shards(rec, rng, max_cuts=6):
+    """Cut the recorder's stream into contiguous watermark deltas."""
+    sp = CommPatternProfiler.incremental(rec)
+    n = rec.buffer.n_rows
+    cuts = sorted(rng.sample(range(n + 1), k=min(rng.randint(0, max_cuts), n + 1)))
+    deltas = [sp.update(c) for c in cuts]
+    deltas.append(sp.update())
+    return [d for d in deltas if d.n_events or d.regions or d.instances]
+
+
+def _random_tree(items, rng):
+    """Fold ``items`` with a random binary merge tree."""
+    if not items:
+        return ProfileSummary.empty()
+    work = list(items)
+    while len(work) > 1:
+        i = rng.randrange(len(work) - 1)
+        j = rng.randrange(i + 1, len(work))
+        b = work.pop(j)
+        a = work.pop(i)
+        work.insert(rng.randrange(len(work) + 1), a.merge(b))
+    return work[0]
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_any_shard_order_and_tree_shape_reduce_identically(seed):
+    rng = random.Random(seed)
+    rec = _random_recorder(seed)
+    repl = (seed % 3) + 1
+    ref = CommPatternProfiler.from_recorder(
+        rec, name="p", replication=repl
+    ).to_json()
+
+    shards = _shards(rec, rng)
+    variants = []
+    for k in range(4):  # shuffled orders x random tree shapes
+        order = list(shards)
+        rng.shuffle(order)
+        variants.append(_random_tree(order, rng))
+    variants.append(merge_tree(shards))  # the aggregator's balanced tree
+    variants.append(merge_tree(reversed(shards)))
+    acc = ProfileSummary.empty()  # left fold
+    for s in shards:
+        acc = acc.merge(s)
+    variants.append(acc)
+    acc = ProfileSummary.empty()  # right fold
+    for s in reversed(shards):
+        acc = s.merge(acc)
+    variants.append(acc)
+
+    for v in variants:
+        assert v.finalize(name="p", replication=repl).to_json() == ref
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_merge_commutes_and_associates_pairwise(seed):
+    rng = random.Random(seed ^ 0x5EED)
+    shards = _shards(_random_recorder(seed), rng)
+    while len(shards) < 3:  # pad with neutral elements; laws must still hold
+        shards.append(ProfileSummary.empty())
+    a, b, c = shards[0], shards[1], shards[2]
+
+    def j(s):
+        return s.finalize(name="p").to_json()
+
+    assert j(a.merge(b)) == j(b.merge(a))
+    assert j(a.merge(b).merge(c)) == j(a.merge(b.merge(c)))
+
+
+def test_cross_stream_merge_is_order_independent():
+    """Shards of *different* points merged as one pool (aggregation-tree
+    interior nodes see this shape when a tree spans heterogeneous rank
+    extents — peer-code sets and rank vectors must pad/union cleanly)."""
+    rng = random.Random(99)
+    pool = []
+    for seed in (1, 2, 3):
+        pool += _shards(_random_recorder(seed), rng)
+    ref = merge_tree(pool).finalize(name="pool").to_json()
+    for _ in range(5):
+        rng.shuffle(pool)
+        assert _random_tree(pool, rng).finalize(name="pool").to_json() == ref
+
+
+@given(st.integers(0, 10**5))
+@settings(max_examples=15, deadline=None)
+def test_shard_pickle_roundtrip_preserves_merge(seed):
+    """Shards cross process boundaries pickled; bytes must survive."""
+    import pickle
+
+    rng = random.Random(seed)
+    rec = _random_recorder(seed)
+    shards = _shards(rec, rng)
+    rt = [pickle.loads(pickle.dumps(s)) for s in shards]
+    assert (
+        merge_tree(rt).finalize(name="p").to_json()
+        == CommPatternProfiler.from_recorder(rec, name="p").to_json()
+    )
+
+
+def test_region_order_stability_across_merge_orders():
+    """finalize orders event regions by first appearance regardless of the
+    merge order the shards arrived in (first_row min-merges)."""
+    rng = random.Random(4)
+    rec = _random_recorder(12)
+    shards = _shards(rec, rng)
+    ref_regions = list(
+        CommPatternProfiler.from_recorder(rec, name="p").regions
+    )
+    for _ in range(4):
+        rng.shuffle(shards)
+        got = list(merge_tree(shards).finalize(name="p").regions)
+        # event regions (ordered by first_row) must match the batch order;
+        # instance-only extras may permute but to_json() sorts keys anyway
+        event_set = {
+            r for s in shards for r in s.regions
+        }
+        assert [r for r in got if r in event_set] == [
+            r for r in ref_regions if r in event_set
+        ]
+
+
+def test_padding_merge_numpy_types():
+    """Merged vectors stay int64/bool after ragged-extent unions."""
+    rng = random.Random(8)
+    shards = _shards(_random_recorder(21), rng)
+    merged = merge_tree(shards)
+    for rs in merged.regions.values():
+        assert rs.sends.dtype == np.int64
+        assert rs.part.dtype == np.bool_
+        assert rs.dest_codes.dtype == np.int64
+        assert np.all(np.diff(rs.dest_codes) > 0)  # sorted unique
+        assert np.all(np.diff(rs.src_codes) > 0)
