@@ -49,7 +49,7 @@ def run_figures(backend: str | None = None) -> None:
 
 
 def run_smoke(out_dir: str, backend: str | None = None) -> None:
-    """CI smoke: paper-scale cache sweep + a 4096-rank three-app sweep.
+    """CI smoke: paper-scale cache sweep + an 8192-rank four-app sweep.
 
     First, the paper's 64..512-rank kripke experiment runs twice: the
     first pass traces under the process-pool executor and populates the
@@ -60,12 +60,17 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
     backend (jax when this run used numpy and vice versa, skipped when
     only one backend is importable) and must also be byte-identical —
     the cross-backend exactness contract from ``repro.core.backend``,
-    asserted end to end.  Then the structure-interned trace store's regime
-    is exercised: every ``SCALE_EXPERIMENTS`` app sweeps its 2048- and
-    4096-rank points and the aggregated frame lands in
-    ``scale_frame.csv``.  Profile JSONs plus the Thicket-frame CSVs land
-    in ``out_dir`` for the workflow to upload as artifacts.
+    asserted end to end.  Then the lazily-materialized trace store's
+    regime is exercised: every ``SCALE_EXPERIMENTS`` app (the paper's
+    three plus the beatnik global-communication stressor) sweeps its
+    points up to 8192 ranks and the aggregated frame lands in
+    ``scale_frame.csv``; the 32k+ points stay perf-marked/offline
+    (tests/test_trace_scale.py).  Peak RSS is recorded to
+    ``scale_peak_rss.txt`` with a soft threshold from
+    ``REPRO_SMOKE_RSS_SOFT_MB``.  Profile JSONs plus the Thicket-frame
+    CSVs land in ``out_dir`` for the workflow to upload as artifacts.
     """
+    import resource
     import time
     from dataclasses import replace
 
@@ -126,14 +131,14 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
     with open(frame_path, "w") as f:
         f.write(frame.to_csv())
 
-    # 4096-rank three-app sweep: the structure-interned buffer keeps
-    # trace memory O(unique_structs x n_ranks + events), so rank counts
-    # 4-8x past the paper's tables complete inside the CI budget.
+    # 8192-rank four-app sweep: struct payloads are generator fingerprints
+    # materialized lazily per reduction, so rank counts 16x past the
+    # paper's tables complete inside the CI budget.
     t3 = time.perf_counter()
     scale_profiles = []
     for sname, sspec in SCALE_EXPERIMENTS.items():
-        pts = tuple(p for p in sspec.points if p.n_ranks <= 4096)
-        assert any(p.n_ranks == 4096 for p in pts), sname
+        pts = tuple(p for p in sspec.points if p.n_ranks <= 8192)
+        assert any(p.n_ranks == 8192 for p in pts), sname
         scale_profiles += run_experiment(
             replace(sspec, points=pts),
             out_dir=out_dir,
@@ -144,10 +149,25 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
     t4 = time.perf_counter()
     scale_frame = Frame.from_profiles(scale_profiles)
     assert len(scale_frame) >= len(scale_profiles)
-    assert any(prof.n_ranks == 4096 for prof in scale_profiles)
+    assert any(prof.n_ranks == 8192 for prof in scale_profiles)
+    assert any(prof.meta.get("app") == "beatnik" for prof in scale_profiles)
     scale_path = os.path.join(out_dir, "scale_frame.csv")
     with open(scale_path, "w") as f:
         f.write(scale_frame.to_csv())
+
+    # Peak RSS of the whole smoke (ru_maxrss is KiB on Linux): recorded as
+    # an artifact next to scale_frame.csv, soft-gated so a memory
+    # regression in the scale sweep fails loudly rather than silently
+    # inflating the CI runner.
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    rss_path = os.path.join(out_dir, "scale_peak_rss.txt")
+    with open(rss_path, "w") as f:
+        f.write(f"peak_rss_mb={peak_mb:.1f}\n")
+    soft_mb = float(os.environ.get("REPRO_SMOKE_RSS_SOFT_MB", "4096"))
+    assert peak_mb <= soft_mb, (
+        f"scale smoke peak RSS {peak_mb:.0f} MiB exceeds the soft "
+        f"threshold {soft_mb:.0f} MiB (REPRO_SMOKE_RSS_SOFT_MB)"
+    )
 
     cross_msg = (
         f"cross-backend pass ({used} vs {other}) {t_x1 - t_x0:.1f}s, "
@@ -163,8 +183,9 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
         f"{cross_msg}"
         f"aggregated frame {len(frame)} rows x {len(frame.columns())} cols "
         f"-> {frame_path}; "
-        f"scale sweep ({len(scale_profiles)} points up to 4096 ranks) "
-        f"{t4 - t3:.1f}s -> {scale_path}"
+        f"scale sweep ({len(scale_profiles)} points up to 8192 ranks) "
+        f"{t4 - t3:.1f}s -> {scale_path}; "
+        f"peak RSS {peak_mb:.0f} MiB (soft cap {soft_mb:.0f}) -> {rss_path}"
     )
 
 

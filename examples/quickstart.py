@@ -18,6 +18,14 @@ Every reduction below runs on the swappable backend from
 ``Frame.group_by``/``agg``/``pivot``) to move the per-region weight
 matmuls onto jax.jit — profiles stay byte-identical to the NumPy
 reference either way.
+
+Traces that outgrow RAM are handled by the store itself: unique
+communication structures intern as rank-extent-normalized
+``(generator, extent)`` fingerprints (dense per-rank slabs materialize
+lazily per reduction, so 131072-rank sweeps stay megabyte-scale), and
+setting ``REPRO_TRACE_SPILL_BYTES=<bytes>`` caps the row columns'
+in-RAM footprint by spilling growth past it to mmap-backed temp files —
+profiles, streamed deltas, and pickles are unaffected bit for bit.
 """
 
 import os
@@ -116,8 +124,13 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as shard_dir:
         for i, d in enumerate(shards):
             publish_shard(
-                shard_dir, point="kripke-00064", seq=i, total=len(shards),
-                summary=d, name=live.name, meta=live.meta,
+                shard_dir,
+                point="kripke-00064",
+                seq=i,
+                total=len(shards),
+                summary=d,
+                name=live.name,
+                meta=live.meta,
             )
         agg = SweepAggregator(shard_dir)
         agg.ingest()

@@ -1,0 +1,189 @@
+"""Beatnik analog — Z-model interface dynamics with global far-field coupling.
+
+Beatnik (Stewart & Bridges, PAPERS.md) benchmarks Rayleigh–Taylor interface
+dynamics whose *cutoff/far-field* force evaluation couples every rank to
+every other rank — the adversarial opposite of kripke/amg/laghos's localized
+halo traffic, and the worst case for a structure-interning trace store: its
+communication structure *mutates per step* (particle migration shifts data
+an increasing rank distance each step), so almost nothing dedups.
+
+This analog keeps that communication signature on a 2-D interface grid:
+
+  halo_exchange      ghost exchange of the interface height (local BR term)
+  vorticity_compute  pure-compute vortex-sheet strength update
+  far_field          all-gather of a subsampled interface over *all* ranks
+                     (the global far-field force — every rank couples)
+  migrate            whole-shard ppermute whose shift distance/axis changes
+                     every step (structure mutates; interning cannot help)
+  reduce_norm        global interface-energy psum (convergence diagnostic)
+  main               whole step loop
+
+Weak-scaling config: ``nx``/``ny`` are *per-rank* interface points (the
+global grid grows with the decomposition).  The distributed step is
+arithmetically identical to the single-domain reference in
+:func:`reference_steps`: the far-field subsample union matches the global
+``[::k, ::k]`` stride exactly when ``k`` divides the local extents (asserted
+in the config), and shard migration is a global ``jnp.roll`` by whole local
+tiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.apps.stencil import Decomp3D, halo_exchange, pad_with_halo
+from repro.core import collectives as coll, comm_region, compat, profile_traced
+from repro.core.profiler import CommProfile
+
+AXES_2D = ("x", "y")
+
+
+@dataclass(frozen=True)
+class BeatnikConfig:
+    """Weak-scaling config: nx/ny are per-rank interface points."""
+
+    decomp: Decomp3D = field(default_factory=lambda: Decomp3D(2, 2, 1))
+    nx: int = 32  # per-rank interface points (weak scaling)
+    ny: int = 32
+    atwood: float = 0.5  # Atwood number (density contrast)
+    dt: float = 0.05
+    far_subsample: int = 8  # far-field samples every k-th point per axis
+    n_steps: int = 4
+    dtype: str = "float32"
+
+    @property
+    def global_shape(self) -> tuple:
+        return (self.nx * self.decomp.px, self.ny * self.decomp.py)
+
+    def __post_init__(self):
+        assert self.decomp.pz == 1, "beatnik interface is 2-D"
+        k = self.far_subsample
+        # subsample-union == global stride requires k | local extents
+        assert self.nx % k == 0 and self.ny % k == 0
+
+
+def _migration(cfg: BeatnikConfig, step: int) -> tuple:
+    """(axis index, rank shift) of the step's migration permute.
+
+    The axis alternates per step and the shift distance cycles through
+    ``1..n-1``, so consecutive steps (and revisits of the same axis) issue
+    *different* permutations — each is a fresh structure in the trace.
+    """
+    axis = step % 2
+    n = cfg.decomp.shape[axis]
+    s = 1 + step % (n - 1) if n > 1 else 0
+    return axis, s
+
+
+def zmodel_step(z, w, cfg: BeatnikConfig, step: int):
+    """One Z-model-flavored step.  Runs inside shard_map."""
+    # --- local Birkhoff-Rott term: halo exchange + surface Laplacian ---
+    with comm_region("halo_exchange"):
+        ghosts = halo_exchange(z, cfg.decomp, dims=(0, 1))
+        zp = pad_with_halo(z, ghosts, dims=(0, 1))
+    with comm_region("vorticity_compute"):
+        lap = zp[2:, 1:-1] + zp[:-2, 1:-1] + zp[1:-1, 2:] + zp[1:-1, :-2] - 4.0 * z
+        w = w + cfg.dt * cfg.atwood * lap
+
+    # --- far-field force: every rank gathers every rank's subsample ---
+    with comm_region("far_field"):
+        k = cfg.far_subsample
+        far_pts = coll.all_gather(z[::k, ::k], AXES_2D)
+        far = jnp.mean(far_pts)
+    z = z + cfg.dt * (w + cfg.atwood * (far - z))
+
+    # --- interface migration: whole-shard shift, new structure per step ---
+    axis, s = _migration(cfg, step)
+    if s:
+        n = cfg.decomp.shape[axis]
+        perm = [(i, (i + s) % n) for i in range(n)]
+        with comm_region("migrate"):
+            z = coll.ppermute(z, AXES_2D[axis], perm)
+            w = coll.ppermute(w, AXES_2D[axis], perm)
+
+    # --- global diagnostic ---
+    with comm_region("reduce_norm"):
+        nrm = coll.psum(jnp.sum(z * z), AXES_2D)
+    return z, w, nrm
+
+
+def run_steps(cfg: BeatnikConfig, mesh):
+    """jit-able driver over global arrays (shards dims 0,1)."""
+    spec = P("x", "y")
+
+    def run(state):
+        def inner(state):
+            z, w = state
+            with comm_region("main"):
+                nrms = []
+                for step in range(cfg.n_steps):
+                    z, w, nrm = zmodel_step(z, w, cfg, step)
+                    nrms.append(nrm)
+                return (z, w), jnp.stack(nrms)
+
+        return compat.shard_map(
+            inner, mesh=mesh, in_specs=((spec, spec),), out_specs=((spec, spec), P())
+        )(state)
+
+    return run
+
+
+def reference_steps(cfg: BeatnikConfig):
+    """Single-domain oracle of the same decomposed algorithm.
+
+    Mirrors the distributed step on the undecomposed global grid:
+    Dirichlet-zero ghosts at the physical boundary (matching
+    ``pad_with_halo``), the identical far-field subsample stride, and shard
+    migration as a global roll by whole local tiles.
+    """
+    lnx, lny = cfg.nx, cfg.ny
+    k = cfg.far_subsample
+
+    def run(state):
+        z, w = state
+        nrms = []
+        for step in range(cfg.n_steps):
+            zp = jnp.pad(z, 1)
+            lap = zp[2:, 1:-1] + zp[:-2, 1:-1] + zp[1:-1, 2:] + zp[1:-1, :-2] - 4.0 * z
+            w = w + cfg.dt * cfg.atwood * lap
+            far = jnp.mean(z[::k, ::k])
+            z = z + cfg.dt * (w + cfg.atwood * (far - z))
+            axis, s = _migration(cfg, step)
+            if s:
+                z = jnp.roll(z, s * (lnx, lny)[axis], axis=axis)
+                w = jnp.roll(w, s * (lnx, lny)[axis], axis=axis)
+            nrms.append(jnp.sum(z * z))
+        return (z, w), jnp.stack(nrms)
+
+    return run
+
+
+def make_state(cfg: BeatnikConfig):
+    """Deterministic single-mode initial interface (global arrays)."""
+    gx, gy = cfg.global_shape
+    x, y = jnp.meshgrid(
+        jnp.linspace(0.0, 1.0, gx), jnp.linspace(0.0, 1.0, gy), indexing="ij"
+    )
+    z = 0.1 * jnp.sin(2.0 * jnp.pi * x) * jnp.cos(2.0 * jnp.pi * y)
+    w = jnp.zeros_like(z)
+    return (z.astype(cfg.dtype), w.astype(cfg.dtype))
+
+
+def profile(
+    cfg: BeatnikConfig, *, name: str = "beatnik", meta: dict | None = None
+) -> CommProfile:
+    """Communication profile of one run at cfg's scale (trace-only)."""
+    mesh = cfg.decomp.make_mesh(abstract=True)
+    gx, gy = cfg.global_shape
+    sds = jax.ShapeDtypeStruct((gx, gy), cfg.dtype)
+    with cfg.decomp.topology():
+        return profile_traced(
+            run_steps(cfg, mesh),
+            (sds, sds),
+            name=name,
+            meta=dict(meta or {}, app="beatnik", decomp=cfg.decomp.shape),
+        )

@@ -33,13 +33,14 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.apps.stencil import AXIS_NAMES, Decomp3D, bwd_perm, fwd_perm
+from repro.core import collectives as coll, comm_region, compat, profile_traced
+from repro.core.profiler import CommProfile
+from repro.core.regions import tag_structure
 
 # Sweep order interleaves opposing corners so that even a 2-octant run
 # exercises both directions of an axis (paper §IV-A: interior ranks have 6
 # communication partners, corner ranks 3).
 OCTANT_ORDER = (7, 0, 6, 1, 5, 2, 4, 3)
-from repro.core import collectives as coll, comm_region, compat, profile_traced
-from repro.core.profiler import CommProfile
 
 
 @dataclass(frozen=True)
@@ -47,17 +48,17 @@ class KripkeConfig:
     """Weak-scaling config: zones are per-rank (paper smallest 16x32x32)."""
 
     decomp: Decomp3D = field(default_factory=lambda: Decomp3D(2, 2, 2))
-    nx: int = 16          # per-rank zones
+    nx: int = 16  # per-rank zones
     ny: int = 32
     nz: int = 32
     n_dirsets: int = 6
-    n_groupsets: int = 6   # 6 x 6 = 36 messages per phase (paper §IV-A)
+    n_groupsets: int = 6  # 6 x 6 = 36 messages per phase (paper §IV-A)
     dirs_per_set: int = 4
     groups_per_set: int = 4
     sigma_t: float = 1.0
-    w: tuple = (0.4, 0.35, 0.25)   # directional weights (wx, wy, wz)
-    n_octants: int = 1             # sweep corners to run (1..8)
-    fuse_messages: bool = True     # TPU-native message aggregation
+    w: tuple = (0.4, 0.35, 0.25)  # directional weights (wx, wy, wz)
+    n_octants: int = 1  # sweep corners to run (1..8)
+    fuse_messages: bool = True  # TPU-native message aggregation
     dtype: str = "float32"
 
     @property
@@ -66,18 +67,16 @@ class KripkeConfig:
 
     @property
     def angular(self) -> tuple:
-        return (self.n_dirsets, self.n_groupsets,
-                self.dirs_per_set, self.groups_per_set)
+        return (
+            self.n_dirsets, self.n_groupsets, self.dirs_per_set, self.groups_per_set
+        )
 
 
 def _octant_signs(octant: int) -> tuple:
-    return (1 if octant & 1 else -1,
-            1 if octant & 2 else -1,
-            1 if octant & 4 else -1)
+    return (1 if octant & 1 else -1, 1 if octant & 2 else -1, 1 if octant & 4 else -1)
 
 
-def _axis_recurrence(src, inflow, axis: int, w: float, sig: float,
-                     sign: int):
+def _axis_recurrence(src, inflow, axis: int, w: float, sig: float, sign: int):
     """psi_i = a * psi_{i-1} + b_i with a = w/(sig+w), b = src/(sig+w);
     descending directions sweep the axis in reverse.  ``inflow`` enters at
     the upwind end."""
@@ -90,8 +89,7 @@ def _axis_recurrence(src, inflow, axis: int, w: float, sig: float,
         A2, B2 = c2
         return A1 * A2, A2 * B1 + B2
 
-    Acum, Bcum = lax.associative_scan(combine, (A, b), axis=axis,
-                                      reverse=(sign < 0))
+    Acum, Bcum = lax.associative_scan(combine, (A, b), axis=axis, reverse=(sign < 0))
     return Acum * inflow + Bcum
 
 
@@ -113,8 +111,7 @@ def _local_sweep(q, in_x, in_y, in_z, cfg: KripkeConfig, signs=(1, 1, 1)):
         idx[axis] = slice(-1, None) if sign > 0 else slice(0, 1)
         return p[tuple(idx)]
 
-    return (psi, out_face(psi, 2, sx), out_face(psi, 3, sy),
-            out_face(psi, 4, sz))
+    return (psi, out_face(psi, 2, sx), out_face(psi, 3, sy), out_face(psi, 4, sz))
 
 
 @lru_cache(maxsize=None)
@@ -133,21 +130,30 @@ def _active_pairs(dc: Decomp3D, stage: int, axis: int, signs):
     octant revisiting the stage reuses the cached array (the recording
     path fingerprints it without mutating), so the pair set is built once
     per unique (decomp, stage, axis, signs).
+
+    The result is tagged (``tag_structure``) with the generator key
+    ``("kripke-plane", stage, axis, signs[axis])`` under extent
+    ``dc.shape`` — the pair set depends on the *axis* sign only, so
+    octants sharing a direction along ``axis`` normalize to one struct
+    even though lru_cache holds distinct arrays per full sign tuple.
     """
     sizes = dc.shape
     step = 1 if signs[axis] > 0 else -1
+    gen = ("kripke-plane", int(stage), int(axis), int(signs[axis]))
     c = stage if signs[axis] > 0 else sizes[axis] - 1 - stage
     nc = c + step
     if not (0 <= c < sizes[axis] and 0 <= nc < sizes[axis]):
-        return np.zeros((0, 2), np.int64)
+        return tag_structure(np.zeros((0, 2), np.int64), gen, sizes)
     strides = (sizes[1] * sizes[2], sizes[2], 1)
     others = [i for i in range(3) if i != axis]
     oa, ob = others
-    base = (np.arange(sizes[oa], dtype=np.int64)[:, None] * strides[oa]
-            + np.arange(sizes[ob], dtype=np.int64)[None, :] * strides[ob]
-            ).reshape(-1)
+    base = (
+        np.arange(sizes[oa], dtype=np.int64)[:, None] * strides[oa]
+        + np.arange(sizes[ob], dtype=np.int64)[None, :] * strides[ob]
+    ).reshape(-1)
     src = base + c * strides[axis]
-    return np.stack([src, src + step * strides[axis]], axis=1)
+    out = np.stack([src, src + step * strides[axis]], axis=1)
+    return tag_structure(np.ascontiguousarray(out), gen, sizes)
 
 
 def _send_downwind(face, axis: int, cfg: KripkeConfig, stage: int, signs):
@@ -165,8 +171,9 @@ def _send_downwind(face, axis: int, cfg: KripkeConfig, stage: int, signs):
     for ds in range(nds):
         rows = []
         for gs in range(ngs):
-            msg = coll.ppermute(face[ds:ds + 1, gs:gs + 1], axis_name,
-                                perm, record_pairs=rec)
+            msg = coll.ppermute(
+                face[ds : ds + 1, gs : gs + 1], axis_name, perm, record_pairs=rec
+            )
             rows.append(msg)
         cols.append(jnp.concatenate(rows, axis=1))
     return jnp.concatenate(cols, axis=0)
@@ -184,14 +191,12 @@ def sweep_octant(q, cfg: KripkeConfig, octant: int = 7):
     """
     dc = cfg.decomp
     signs = _octant_signs(octant)
-    coords = {0: lax.axis_index("x"), 1: lax.axis_index("y"),
-              2: lax.axis_index("z")}
+    coords = {0: lax.axis_index("x"), 1: lax.axis_index("y"), 2: lax.axis_index("z")}
 
     psi = q
     for axis in (0, 1, 2):
         n = dc.shape[axis]
-        t = coords[axis] if signs[axis] > 0 \
-            else n - 1 - coords[axis]
+        t = coords[axis] if signs[axis] > 0 else n - 1 - coords[axis]
         fshape = list(psi.shape)
         fshape[2 + axis] = 1
         in_face = jnp.zeros(tuple(fshape), psi.dtype)
@@ -201,8 +206,7 @@ def sweep_octant(q, cfg: KripkeConfig, octant: int = 7):
             with comm_region("solve"):
                 cand, out_face = _axis_solve(psi, in_face, axis, cfg, signs)
             new_psi = jnp.where(active, cand, new_psi)
-            out_face = jnp.where(active, out_face,
-                                 jnp.zeros_like(out_face))
+            out_face = jnp.where(active, out_face, jnp.zeros_like(out_face))
             if stage == n - 1:
                 break
             with comm_region("sweep_comm"):
@@ -217,8 +221,7 @@ def sweep_octant(q, cfg: KripkeConfig, octant: int = 7):
 def _axis_solve(src, inflow, axis: int, cfg: KripkeConfig, signs):
     """One axis of the operator-split recurrence + its downwind face."""
     sign = signs[axis]
-    psi = _axis_recurrence(src, inflow, 2 + axis, cfg.w[axis],
-                           cfg.sigma_t, sign)
+    psi = _axis_recurrence(src, inflow, 2 + axis, cfg.w[axis], cfg.sigma_t, sign)
     idx = [slice(None)] * psi.ndim
     idx[2 + axis] = slice(-1, None) if sign > 0 else slice(0, 1)
     return psi, psi[tuple(idx)]
@@ -253,8 +256,9 @@ def distributed_sweep(cfg: KripkeConfig, mesh):
                 for o in range(cfg.n_octants):
                     out = out + sweep_octant(q, cfg, OCTANT_ORDER[o])
                 return out
-        return compat.shard_map(inner, mesh=mesh, in_specs=spec,
-                                out_specs=spec)(q)
+
+        return compat.shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec)(q)
+
     return run
 
 
@@ -269,24 +273,36 @@ def reference_sweep(cfg: KripkeConfig):
         in_z = jnp.zeros(shape[:4] + (1,) + shape[5:], q.dtype)
         out = jnp.zeros_like(q)
         for o in range(cfg.n_octants):
-            psi, *_ = _local_sweep(q, in_x, in_y, in_z, single,
-                                   _octant_signs(OCTANT_ORDER[o]))
+            psi, *_ = _local_sweep(
+                q, in_x, in_y, in_z, single, _octant_signs(OCTANT_ORDER[o])
+            )
             out = out + psi
         return out
+
     return run
 
 
-def profile(cfg: KripkeConfig, *, name: str = "kripke",
-            meta: dict | None = None) -> CommProfile:
+def profile(
+    cfg: KripkeConfig, *, name: str = "kripke", meta: dict | None = None
+) -> CommProfile:
     """Communication profile of one sweep at cfg's scale (trace-only)."""
     mesh = cfg.decomp.make_mesh(abstract=True)
     q = jax.ShapeDtypeStruct(
-        (cfg.n_dirsets, cfg.n_groupsets,
-         cfg.nx * cfg.decomp.px, cfg.ny * cfg.decomp.py,
-         cfg.nz * cfg.decomp.pz,
-         cfg.dirs_per_set, cfg.groups_per_set), cfg.dtype)
+        (
+            cfg.n_dirsets,
+            cfg.n_groupsets,
+            cfg.nx * cfg.decomp.px,
+            cfg.ny * cfg.decomp.py,
+            cfg.nz * cfg.decomp.pz,
+            cfg.dirs_per_set,
+            cfg.groups_per_set,
+        ),
+        cfg.dtype,
+    )
     with cfg.decomp.topology():
-        return profile_traced(distributed_sweep(cfg, mesh), q,
-                              name=name,
-                              meta=dict(meta or {}, app="kripke",
-                                        decomp=cfg.decomp.shape))
+        return profile_traced(
+            distributed_sweep(cfg, mesh),
+            q,
+            name=name,
+            meta=dict(meta or {}, app="kripke", decomp=cfg.decomp.shape),
+        )

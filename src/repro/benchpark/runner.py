@@ -105,6 +105,8 @@ def _flops_estimate(app: str, cfg) -> float:
     if app == "laghos":
         lx, ly = cfg.local_shape
         return 40.0 * lx * ly * cfg.n_steps
+    if app == "beatnik":
+        return 30.0 * cfg.nx * cfg.ny * cfg.n_steps
     raise ValueError(app)
 
 
@@ -136,6 +138,7 @@ _FINGERPRINT_MODULES = (
     "repro.core.topology",
     "repro.apps.stencil",
     "repro.apps.amg",
+    "repro.apps.beatnik",
     "repro.apps.kripke",
     "repro.apps.laghos",
 )
@@ -500,12 +503,13 @@ def _trace_point(
     (cache hits publish their finished JSON as one shard).
     Returns ``(pt, profile, cached)``.
     """
-    from repro.apps import amg, kripke, laghos
+    from repro.apps import amg, beatnik, kripke, laghos
 
     profile_fns = {
         "kripke": kripke.profile,
         "amg": amg.profile,
         "laghos": laghos.profile,
+        "beatnik": beatnik.profile,
     }
     meta = {
         "app": spec.app,

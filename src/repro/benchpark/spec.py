@@ -8,11 +8,13 @@ devices needed thanks to AbstractMesh), and stores CommProfile JSONs.
 
 The paper's own experiments (Table III) ship as ``PAPER_EXPERIMENTS``
 (64..512 ranks, the published Dane/Tioga rows).  ``SCALE_EXPERIMENTS``
-extends each app into the structure-interned trace store's regime —
-2048 / 4096 / 8192 ranks — now that buffer memory is
-O(unique_structs x n_ranks + events) rather than O(events x n_ranks)
-(see ``repro.core.regions``); the CI benchmark smoke runs the three apps
-at up to 4096 ranks from these specs.
+extends each app into the lazily-materialized trace store's regime —
+2048 through 131072 ranks — now that struct payloads are
+rank-extent-normalized generator fingerprints materialized per reduction
+(see ``repro.core.regions``); the CI benchmark smoke runs the apps at up
+to 8192 ranks from these specs, and the 32k+ points stay perf-marked /
+offline.  The ``beatnik`` app (global far-field coupling, per-step
+structure mutation) rides along as the interning worst case.
 """
 
 from __future__ import annotations
@@ -36,7 +38,7 @@ class ScalePoint:
 @dataclass(frozen=True)
 class ExperimentSpec:
     name: str
-    app: str  # kripke | amg | laghos
+    app: str  # kripke | amg | laghos | beatnik
     scaling: str  # weak | strong
     points: tuple  # ScalePoints
     app_params: dict = field(default_factory=dict)
@@ -46,6 +48,7 @@ class ExperimentSpec:
 
     def configs(self):
         from repro.apps.amg import AMGConfig
+        from repro.apps.beatnik import BeatnikConfig
         from repro.apps.kripke import KripkeConfig
         from repro.apps.laghos import LaghosConfig
 
@@ -61,6 +64,8 @@ class ExperimentSpec:
                 if self.scaling == "strong":
                     pass  # global size fixed in app_params
                 cfg = LaghosConfig(decomp=dc, **params)
+            elif self.app == "beatnik":
+                cfg = BeatnikConfig(decomp=dc, **self.app_params)
             else:
                 raise ValueError(self.app)
             out.append((pt, cfg))
@@ -131,17 +136,21 @@ PAPER_EXPERIMENTS = {
 
 
 # ---------------------------------------------------------------------------
-# Beyond-paper scale: 2048 / 4096 / 8192 ranks.  z stays <= 8 wide so the
+# Beyond-paper scale: 2048 through 131072 ranks.  z stays <= 8 wide so the
 # AMG hierarchy bottoms out exactly like the published Dane rows (the
 # gathered coarse level is reached at global z = 8); kripke traces the
 # TPU-native fused message path, one octant, so the traced graph grows
-# with stage count, not message count.
+# with stage count, not message count.  CI smokes up to 8192; the 32k+
+# points are the perf-marked offline regime (tests/test_trace_scale.py).
 # ---------------------------------------------------------------------------
 
 _SCALE_POINTS_3D = (
     ScalePoint((16, 16, 8)),  # 2048
     ScalePoint((32, 16, 8)),  # 4096
     ScalePoint((32, 32, 8)),  # 8192
+    ScalePoint((64, 64, 8)),  # 32768
+    ScalePoint((128, 64, 8)),  # 65536
+    ScalePoint((128, 128, 8)),  # 131072
 )
 
 SCALE_EXPERIMENTS = {
@@ -167,7 +176,24 @@ SCALE_EXPERIMENTS = {
             ScalePoint((64, 32, 1)),  # 2048
             ScalePoint((64, 64, 1)),  # 4096
             ScalePoint((128, 64, 1)),  # 8192
+            ScalePoint((256, 128, 1)),  # 32768
+            ScalePoint((256, 256, 1)),  # 65536
+            ScalePoint((512, 256, 1)),  # 131072
         ),
         app_params=dict(nx=512, ny=512, n_steps=2),
+    ),
+    # The interning worst case: global far-field collectives couple every
+    # rank and the migration permute mutates per step — almost nothing
+    # dedups, keeping the lazy-materialization fast path honest.
+    "beatnik-weak-scale": ExperimentSpec(
+        name="beatnik-weak-scale",
+        app="beatnik",
+        scaling="weak",
+        points=(
+            ScalePoint((32, 64, 1)),  # 2048
+            ScalePoint((64, 64, 1)),  # 4096
+            ScalePoint((128, 64, 1)),  # 8192
+        ),
+        app_params=dict(nx=32, ny=32, n_steps=4),
     ),
 }

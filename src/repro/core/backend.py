@@ -88,6 +88,18 @@ _BITMAP_CELLS_CAP = 1 << 26
 #: the full (group, rank, peer) code space.
 _BITMAP_WORK_FACTOR = 64
 
+#: Past this rank extent the sort-based fallback first *compacts* the rank
+#: and peer id spaces (``np.unique`` sketch of the ids actually present) and
+#: re-decides the strategy on the compacted extents: structured traces touch
+#: a thin slice of the rank space per struct (a kripke plane, a halo face),
+#: so the dense scatter paths usually re-engage where the raw code space was
+#: hopelessly sparse — see the ``("hybrid", 0)`` branch of
+#: :func:`_dedup_strategy`.
+_SKETCH_RANK_EXTENT = 1 << 16
+
+#: Low PAIR_CODE_SHIFT bits of a fixed pair code (the peer field).
+_PAIR_CODE_MASK = (1 << 32) - 1
+
 
 # ---------------------------------------------------------------------------
 # Shared host-side kernels (every backend uses these)
@@ -165,25 +177,56 @@ def _dedup_strategy(n_groups: int, rank_extent: int, stride: int, m: int) -> tup
     Returns ``("bitmap", n_groups)`` for one dense scatter over the whole
     (group, rank, peer) code space, ``("chunked", groups_per_chunk)`` for
     dense scatters over group chunks whose bitmaps stay under
-    :data:`_BITMAP_CELLS_CAP` cells, or ``("unique", 0)`` for the
-    sort-based path.  Dense scatters touch every cell, so they only run
-    when the code space is within :data:`_BITMAP_WORK_FACTOR` cells per
-    pair; the chunking keeps peak allocation bounded at rank counts where
-    the historical single bitmap (``cells = G * Rmax * stride``, with
-    ``stride ~ Rmax``) grew quadratically.  All three paths produce
-    identical counts.
+    :data:`_BITMAP_CELLS_CAP` cells, ``("hybrid", 0)`` to compact the
+    rank/peer id spaces first and re-decide on the compacted extents
+    (engages past :data:`_SKETCH_RANK_EXTENT` ranks, where the raw code
+    space is hopelessly sparse but the ids actually present are usually a
+    thin structured slice), or ``("unique", 0)`` for the sort-based path.
+    Dense scatters touch every cell, so they only run when the code space
+    is within :data:`_BITMAP_WORK_FACTOR` cells per pair; the chunking
+    keeps peak allocation bounded at rank counts where the historical
+    single bitmap (``cells = G * Rmax * stride``, with ``stride ~ Rmax``)
+    grew quadratically.  All paths produce identical counts.
     """
     per_group = int(rank_extent) * int(stride)
     cells = int(n_groups) * per_group
     if m == 0 or cells == 0:
         return ("unique", 0)
+    sparse_fallback = (
+        ("hybrid", 0) if rank_extent > _SKETCH_RANK_EXTENT else ("unique", 0)
+    )
     if cells > _BITMAP_WORK_FACTOR * m:
-        return ("unique", 0)
+        return sparse_fallback
     if cells <= _BITMAP_CELLS_CAP:
         return ("bitmap", int(n_groups))
     if per_group <= _BITMAP_CELLS_CAP:
         return ("chunked", max(1, _BITMAP_CELLS_CAP // per_group))
-    return ("unique", 0)
+    return sparse_fallback
+
+
+def _compact_ids(col: np.ndarray) -> tuple:
+    """Presence-mask id compaction: ``(uniq, compacted)``, no sort.
+
+    One boolean scatter over the id range plus a lookup-table gather —
+    O(m + extent) where ``np.unique`` would sort in O(m log m); the extent
+    term is a byte per id, trivial even at millions of ranks.  ``uniq`` is
+    ascending and ``uniq[compacted] == col`` elementwise, so codes built
+    from the compacted ids stay monotone in the original ids and dedup
+    results translate back by a gather without re-sorting.
+    """
+    mask = np.zeros(int(col.max()) + 1, bool)
+    mask[col] = True
+    uniq = np.flatnonzero(mask)
+    lut = np.zeros(len(mask), np.int64)
+    lut[uniq] = np.arange(len(uniq), dtype=np.int64)
+    return uniq, lut[col]
+
+
+def _compact_pairs(rows: np.ndarray, peers: np.ndarray) -> tuple:
+    """Id-space sketch of both pair columns: unique ids + compacted cols."""
+    urows, rows_c = _compact_ids(rows)
+    upeers, peers_c = _compact_ids(peers)
+    return urows, rows_c, upeers, peers_c
 
 
 def _pair_counts_numpy(
@@ -209,6 +252,17 @@ def _pair_counts_numpy(
     if strategy is None:
         strategy = _dedup_strategy(n_groups, rank_extent, int(stride), m)
     kind, chunk = strategy
+    if kind == "hybrid":
+        urows, rows_c, upeers, peers_c = _compact_pairs(rows, peers)
+        sub = _dedup_strategy(n_groups, len(urows), len(upeers), m)
+        if sub[0] == "hybrid":  # compaction exhausted — sort the small codes
+            sub = ("unique", 0)
+        compact = _pair_counts_numpy(
+            group_ids, rows_c, peers_c, n_groups, len(urows), strategy=sub
+        )
+        counts = np.zeros((n_groups, rank_extent), np.int64)
+        counts[:, urows] = compact
+        return counts
     if kind == "unique":
         codes = (group_ids * rank_extent + rows) * stride + peers
         uniq = np.unique(codes)
@@ -290,6 +344,20 @@ def _pair_codes_numpy(
     if strategy is None:
         strategy = _dedup_strategy(n_groups, rank_extent, stride, m)
     kind, chunk = strategy
+    if kind == "hybrid":
+        urows, rows_c, upeers, peers_c = _compact_pairs(rows, peers)
+        sub = _dedup_strategy(n_groups, len(urows), len(upeers), m)
+        if sub[0] == "hybrid":  # compaction exhausted — sort the small codes
+            sub = ("unique", 0)
+        indptr, codes_c = _pair_codes_numpy(
+            group_ids, rows_c, peers_c, n_groups, strategy=sub
+        )
+        # Gather through the sorted id tables: monotone in (rank, peer), so
+        # per-group code order survives the translation un-sorted.
+        codes = (urows[codes_c >> PAIR_CODE_SHIFT] << PAIR_CODE_SHIFT) | (
+            upeers[codes_c & _PAIR_CODE_MASK]
+        )
+        return indptr, codes
     if kind == "unique":
         comp = (group_ids * rank_extent + rows) * stride + peers
         uniq = np.unique(comp)
@@ -681,6 +749,13 @@ class JaxBackend(ReduceBackend):
         m = len(rows)
         if m == 0 or rank_extent == 0 or n_groups == 0:
             return np.zeros((n_groups, rank_extent), np.int64)
+        if rank_extent > _SKETCH_RANK_EXTENT:
+            # Host-side sketch/chunked hybrid: at this extent the id
+            # compaction + dense scatter beats a device sort of the raw
+            # codes (and is bit-identical by the backend contract).
+            return _pair_counts_numpy(
+                group_ids, rows, peers, n_groups, rank_extent, strategy=("hybrid", 0)
+            )
         stride = np.int64(int(peers.max()) + 1)
         codes = (group_ids * rank_extent + rows) * stride + peers
         with self._enable_x64():
@@ -698,6 +773,10 @@ class JaxBackend(ReduceBackend):
             raise ValueError(
                 f"rank/peer ids ({rank_extent}, {stride}) exceed the fixed "
                 f"pair-code encoding"
+            )
+        if rank_extent > _SKETCH_RANK_EXTENT:
+            return _pair_codes_numpy(
+                group_ids, rows, peers, n_groups, strategy=("hybrid", 0)
             )
         comp = (group_ids * rank_extent + rows) * stride + peers
         with self._enable_x64():

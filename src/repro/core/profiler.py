@@ -24,7 +24,11 @@ Extensions over the paper (TPU-native):
 
 Both profilers in this module run on the same grouped segment-reduction
 kernels (``segment_spans`` / ``block_reduce`` / ``segment_reduce``):
-:class:`CommPatternProfiler` reduces the traced-layer ``TraceBuffer``, and
+:class:`CommPatternProfiler` reduces the traced-layer ``TraceBuffer``
+through its ``structs.reduction_view()`` — one flat eager layout whether
+the struct table stores materialized slabs or lazy ``(generator,
+extent)`` fingerprints (the default; slabs expand once per reduction and
+cache per append version, see :mod:`repro.core.regions`) — and
 :class:`HloCollectiveProfiler` reduces the compiled-layer
 ``repro.core.hlo.HloCollectiveBuffer`` into per-region ``layer="hlo"``
 rows for ``thicket.Frame`` — one ordering pass, one block reduction per
@@ -304,8 +308,12 @@ class CommPatternProfiler:
 
         tab = buf.structs
         S = tab.n_structs
-        lens = tab.rank_lens
-        indptr = tab.rank_indptr()
+        # One materialized view per profile call: lazy (generator-payload)
+        # tables build their flat slabs here and cache them on the table
+        # until the next append; eager tables alias live columns for free.
+        view = tab.reduction_view()
+        lens = view.rank_lens
+        indptr = view.rank_indptr()
         Rmax = int(lens.max()) if S else 0
         sid = buf.struct_ids
         mult = buf.multiplicity
@@ -348,7 +356,7 @@ class CommPatternProfiler:
                 grid.reshape(-1)[flat_pos] = col[src_idx]
                 return grid
 
-            part_i = layout(tab.participants).astype(np.int64)
+            part_i = layout(view.participants).astype(np.int64)
             wc = np.zeros((G, S), np.int64)
             wb = np.zeros((G, S), np.int64)
             wcm = np.zeros((G, S), np.int64)
@@ -360,11 +368,11 @@ class CommPatternProfiler:
                 wcb, (g_of_row[is_coll], sid[is_coll]), mult[is_coll] * scale[is_coll]
             )
 
-            sends_g = be.matmul(wc, layout(tab.sends))
-            recvs_g = be.matmul(wc, layout(tab.recvs))
-            bsent_g = be.matmul(wb, layout(tab.bsent_units))
-            brecv_g = be.matmul(wb, layout(tab.brecv_units))
-            cbytes_g = be.matmul(wcb, layout(tab.bsent_units))
+            sends_g = be.matmul(wc, layout(view.sends))
+            recvs_g = be.matmul(wc, layout(view.recvs))
+            bsent_g = be.matmul(wb, layout(view.bsent_units))
+            brecv_g = be.matmul(wb, layout(view.brecv_units))
+            cbytes_g = be.matmul(wcb, layout(view.bsent_units))
             part_g = be.matmul((wc > 0).astype(np.int64), part_i) > 0
             cpart_g = be.matmul((wcm > 0).astype(np.int64), part_i) > 0
 
@@ -407,10 +415,10 @@ class CommPatternProfiler:
             return be.pair_counts(gp, rows, peers, G, Rmax)
 
         dests_g = distinct_grid(
-            tab.dest_rows, tab.dest_peers, tab.dest_lens, tab.dest_indptr()
+            view.dest_rows, view.dest_peers, view.dest_lens, view.dest_indptr()
         )
         srcs_g = distinct_grid(
-            tab.src_rows, tab.src_peers, tab.src_lens, tab.src_indptr()
+            view.src_rows, view.src_peers, view.src_lens, view.src_indptr()
         )
 
         # Per-row scalar columns reduce to per-region scalars directly

@@ -74,9 +74,33 @@ collapse into one row at record time, so ``n_rows <= n_events``):
   point-to-point appends this is simply ``nbytes`` when the event has any
   pair and 0 otherwise.
 
-Struct-table schema (``S`` unique structures; struct ``s`` spans
-``rank_indptr()[s]:rank_indptr()[s + 1]`` of the dense slabs and
-``dest_indptr()`` / ``src_indptr()`` runs of the CSR pair columns):
+Struct-table schema (``S`` unique structures).  The table has two modes:
+
+* **eager** (``TraceBuffer(intern=False)`` reference layout, and
+  ``materialize=True``): every struct's dense slabs and CSR pair columns
+  are materialized at append time — struct ``s`` spans
+  ``rank_indptr()[s]:rank_indptr()[s + 1]`` of the dense slabs and
+  ``dest_indptr()`` / ``src_indptr()`` runs of the CSR pair columns;
+* **lazy** (the default interned layout): the table stores only the
+  per-struct scalars plus the struct's *generating payload* (the
+  canonical pair array for point-to-point structures, the flattened
+  member array for collectives, the explicit vectors for raw adapter
+  events), and the dense ``(S, Rmax)`` slab grids are **materialized per
+  reduction** via :meth:`StructTable.reduction_view` — built once,
+  cached, and invalidated by the next append.  The flat column
+  properties below (``sends`` .. ``src_peers``) transparently read
+  through the cached view, so every consumer sees the same layout in
+  both modes.
+
+Interning is **rank-extent-normalized** where the producer cooperates:
+arrays tagged with :func:`tag_structure` (topology pair/group expansions,
+kripke's wavefront planes) fingerprint by their ``(generator, extent)``
+key — an O(1) dict probe — instead of hashing the raw payload bytes, so
+the same halo stencil at 512 and 65536 ranks costs one key comparison per
+event rather than O(pairs) fingerprint bytes.  Untagged arrays fall back
+to the content fingerprint (``tobytes``) unchanged.
+
+Flat (eager/materialized) column schema:
 
 * ``rank_lens`` — int64 extent of the dense per-rank slab (the event's
   ``n_ranks``);
@@ -136,6 +160,22 @@ backend reduces it.  See the backend module docstring for the exactness
 guarantees (f64-exact / limb-decomposed matmuls under jax x64) and for
 when the Pallas segmented-reduce kernel engages.
 
+Spill-to-mmap (``REPRO_TRACE_SPILL_BYTES``)
+-------------------------------------------
+
+Row columns grow without bound on long traces.  When a spill threshold is
+set (``TraceBuffer(spill_bytes=...)`` or the ``REPRO_TRACE_SPILL_BYTES``
+environment variable), the buffer's nine row columns share a
+:class:`_SpillPool`: the first growth that would push their combined
+in-RAM capacity past the threshold reallocates that column as an
+``np.memmap`` over a private temp file (amortized doubling growth via
+``truncate``), and the column stays file-backed from then on.  Appends,
+multiplicity bumps (``add_last``), watermarks, and streaming deltas are
+unchanged — a memmap is an ndarray.  Pickles copy the live prefix back
+into plain arrays (spill state is process-local; the receiving process
+re-spills on its own growth), and the temp directory is removed when the
+buffer is garbage collected.
+
 Live monitoring: watermark semantics
 ------------------------------------
 
@@ -153,12 +193,22 @@ reduction.
 from __future__ import annotations
 
 import contextlib
+import os
+import shutil
+import sys
+import tempfile
 import threading
+import weakref
 from dataclasses import dataclass
 from typing import Iterator, Mapping, Optional
 
 import jax
 import numpy as np
+
+#: Environment knob: row columns of a :class:`TraceBuffer` spill to
+#: file-backed (np.memmap) storage once their combined in-RAM footprint
+#: would exceed this many bytes (0 / unset disables spilling).
+TRACE_SPILL_ENV = "REPRO_TRACE_SPILL_BYTES"
 
 #: Prefix used inside jax.named_scope so HLO metadata can be recognized as a
 #: communication region (rather than an ordinary profiling scope).
@@ -192,6 +242,49 @@ def _as_pair_array(pairs) -> np.ndarray:
     if not isinstance(pairs, np.ndarray):
         pairs = np.asarray(list(pairs), np.int64)
     return np.ascontiguousarray(pairs.astype(np.int64, copy=False)).reshape(-1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Generator tags — rank-extent-normalized structure fingerprints
+# ---------------------------------------------------------------------------
+
+#: id(array) -> (generator, extent, weakref).  Weak so the registry never
+#: extends an array's lifetime (producer memos own their arrays); the dead
+#: entry is dropped by the weakref callback, and the identity check in
+#: :func:`structure_tag` guards the id()-reuse race besides.
+_TAGS: dict = {}
+
+
+def _drop_tag(key: int):
+    _TAGS.pop(key, None)
+
+
+def tag_structure(arr: np.ndarray, generator: tuple, extent: tuple) -> np.ndarray:
+    """Register a structure array's ``(generator, extent)`` fingerprint.
+
+    ``generator`` names *how* the array was produced (e.g. ``("axis-perm",
+    axis, perm_key)`` for a topology pair expansion, ``("kripke-plane",
+    stage, axis, sign)`` for a sweep wavefront) and ``extent`` pins the
+    rank-space it was produced *for* (topology sizes, decomp shape).
+    Together they must determine the array contents exactly — two arrays
+    carrying the same key are interned to the same struct without their
+    bytes ever being compared.  Producers call this once per memoized
+    array; :class:`StructTable` then fingerprints repeat appends with an
+    O(1) identity probe instead of an O(payload) ``tobytes`` hash.
+
+    Returns ``arr`` unchanged (tag-and-return convenience).
+    """
+    key = id(arr)
+    _TAGS[key] = (generator, extent, weakref.ref(arr, lambda _r: _drop_tag(key)))
+    return arr
+
+
+def structure_tag(arr: np.ndarray) -> Optional[tuple]:
+    """The ``(generator, extent)`` key of a tagged array, or None."""
+    hit = _TAGS.get(id(arr))
+    if hit is not None and hit[2]() is arr:
+        return (hit[0], hit[1])
+    return None
 
 
 def p2p_structure(pairs, n: int) -> tuple:
@@ -233,20 +326,43 @@ class Column:
     :class:`TraceBuffer` below and the compiled-layer
     ``repro.core.hlo.HloCollectiveBuffer`` both lay their per-event /
     per-op columns out of these.
+
+    A column registered with a :class:`_SpillPool` reallocates its backing
+    onto an ``np.memmap`` (amortized file growth via ``truncate``) once the
+    pool's in-RAM budget is exhausted, and stays file-backed from then on;
+    unregistered columns (the default) never touch the filesystem.
     """
 
-    __slots__ = ("_data", "_n")
+    __slots__ = ("_data", "_n", "_pool", "_spill_path")
 
     def __init__(self, dtype, capacity: int = 64):
         self._data = np.zeros(capacity, dtype)
         self._n = 0
+        self._pool = None
+        self._spill_path = None
 
     def __len__(self) -> int:
         return self._n
 
+    @property
+    def spilled(self) -> bool:
+        """Whether the backing currently lives in a spill file."""
+        return isinstance(self._data, np.memmap)
+
+    def capacity_nbytes(self) -> int:
+        """Allocated capacity bytes (live prefix + growth headroom)."""
+        return self._data.size * self._data.dtype.itemsize
+
     def _grow_to(self, need: int) -> None:
         if need > self._data.size:
-            grown = np.zeros(max(need, self._data.size * 2), self._data.dtype)
+            cap = max(need, self._data.size * 2)
+            pool = self._pool
+            if pool is not None and pool.should_spill(
+                self, cap * self._data.dtype.itemsize
+            ):
+                grown = pool.allocate(self, cap, self._data.dtype)
+            else:
+                grown = np.zeros(cap, self._data.dtype)
             grown[: self._n] = self._data[: self._n]
             self._data = grown
 
@@ -274,18 +390,94 @@ class Column:
         """Live-prefix storage bytes (growth headroom excluded)."""
         return self._n * self._data.dtype.itemsize
 
-    # compact pickles: drop the unused growth capacity
+    # compact pickles: drop the unused growth capacity.  A spilled column
+    # round-trips as a plain in-RAM array (np.asarray collapses the memmap);
+    # spill state is process-local and rebuilt by the owning buffer.
     def __getstate__(self) -> tuple:
-        return (self._data[: self._n].copy(),)
+        return (np.asarray(self._data[: self._n]).copy(),)
 
     def __setstate__(self, state) -> None:
         (data,) = state
         self._data = data
         self._n = data.size
+        self._pool = None
+        self._spill_path = None
 
 
 #: Backwards-compatible private alias (pre-PR-4 name).
 _Column = Column
+
+
+class _SpillPool:
+    """Shared spill budget for one buffer's row columns.
+
+    Tracks the combined in-RAM capacity of its registered columns; the
+    growth that would push it past ``threshold`` bytes moves that column to
+    an ``np.memmap`` over a private temp file (see :meth:`Column._grow_to`).
+    Once spilled a column keeps growing in its file — mixing a column's
+    backing between RAM and disk would invalidate live views mid-append.
+    The temp directory is created lazily on the first spill and removed by
+    a ``weakref.finalize`` when the pool (i.e. its buffer) is collected.
+
+    Pickles carry only the threshold: spill state is process-local, and the
+    receiving buffer re-registers its columns (in-RAM after the round-trip)
+    so they re-spill on their own growth.
+    """
+
+    def __init__(self, threshold: int) -> None:
+        self.threshold = int(threshold)
+        self._columns: list = []
+        self._dir: Optional[str] = None
+        self._seq = 0
+        self._finalizer = None
+
+    def register(self, col: Column) -> None:
+        col._pool = self
+        self._columns.append(col)
+
+    def ram_nbytes(self) -> int:
+        """Combined allocated capacity of the unspilled registered columns."""
+        return sum(c.capacity_nbytes() for c in self._columns if not c.spilled)
+
+    def spilled_nbytes(self) -> int:
+        """Live bytes currently resident in spill files."""
+        return sum(c.storage_nbytes() for c in self._columns if c.spilled)
+
+    def should_spill(self, col: Column, new_nbytes: int) -> bool:
+        if self.threshold <= 0:
+            return False
+        if col.spilled:
+            return True  # grow in place in the file
+        return (
+            self.ram_nbytes() - col.capacity_nbytes() + new_nbytes
+            > self.threshold
+        )
+
+    def allocate(self, col: Column, count: int, dtype) -> np.ndarray:
+        """Grow ``col``'s spill file to ``count`` items and map it."""
+        if self._dir is None:
+            self._dir = tempfile.mkdtemp(prefix="repro-trace-spill-")
+            self._finalizer = weakref.finalize(
+                self, shutil.rmtree, self._dir, ignore_errors=True
+            )
+        if col._spill_path is None:
+            col._spill_path = os.path.join(self._dir, f"col{self._seq}.bin")
+            self._seq += 1
+            with open(col._spill_path, "wb"):
+                pass
+        with open(col._spill_path, "r+b") as f:
+            f.truncate(count * np.dtype(dtype).itemsize)
+        return np.memmap(col._spill_path, dtype=dtype, mode="r+", shape=(count,))
+
+    def __getstate__(self) -> dict:
+        return {"threshold": self.threshold}
+
+    def __setstate__(self, state) -> None:
+        self.threshold = state["threshold"]
+        self._columns = []
+        self._dir = None
+        self._seq = 0
+        self._finalizer = None
 
 
 class Interner:
@@ -318,6 +510,14 @@ class Interner:
             self._ids[value] = code
         return code
 
+    def memory_bytes(self) -> int:
+        """Approximate live bytes: table + id dict + one copy of each value
+        (the dict key and list entry are the same object)."""
+        total = sys.getsizeof(self.values) + sys.getsizeof(self._ids)
+        for v in self.values:
+            total += sys.getsizeof(v)
+        return total
+
     # compact pickles: the id dict rebuilds from the table.  The value
     # list is adopted as-is (not copied) so owners that alias it — the
     # buffers' ``region_names`` etc. — keep seeing appends after a
@@ -331,23 +531,114 @@ class Interner:
         self._ids = {v: i for i, v in enumerate(values)}
 
 
-class StructTable:
-    """Content-fingerprinted store of unique communication structures.
+#: Struct kinds (the lazy table's per-struct payload discriminator).
+_KIND_P2P = 0
+_KIND_COLL = 1
+_KIND_RAW = 2
 
-    Each unique ``(pairs, n)`` point-to-point structure / ``(groups, n)``
-    communicator structure / raw adapter event payload is stored **once**
-    (dense per-rank slabs + CSR peer-set pair columns — see the module
-    docstring for the column schema); :class:`TraceBuffer` rows reference
-    structs by id.  ``intern_*`` fingerprints the raw array bytes and
-    skips :func:`p2p_structure` (and the dense scatters) entirely on a
-    hit; ``insert_*`` bypass the fingerprint table (the ``intern=False``
-    reference layout, one struct per event).
+_EMPTY_I64 = np.zeros(0, np.int64)
+
+
+def _as_member_array(groups) -> np.ndarray:
+    """Canonical contiguous flat int64 member array (fingerprintable)."""
+    return np.ascontiguousarray(np.asarray(groups, np.int64).reshape(-1))
+
+
+def _cat(parts: list, dtype) -> np.ndarray:
+    if not parts:
+        return np.zeros(0, dtype)
+    return np.concatenate(parts).astype(dtype, copy=False)
+
+
+class StructView:
+    """One materialized flat view of a :class:`StructTable`.
+
+    Exposes exactly the eager column layout (see the module docstring's
+    flat schema): struct ``s`` spans ``rank_indptr()[s]:rank_indptr()[s+1]``
+    of the dense slabs and ``dest_indptr()`` / ``src_indptr()`` runs of the
+    CSR pair columns.  For an eager table the arrays alias the live column
+    prefixes (zero copy); for a lazy table they are expanded from the
+    generating payloads and cached by the table until its next append.
     """
 
-    def __init__(self) -> None:
+    _FIELDS = (
+        "rank_lens",
+        "dest_lens",
+        "src_lens",
+        "sends",
+        "recvs",
+        "bsent_units",
+        "brecv_units",
+        "participants",
+        "dest_rows",
+        "dest_peers",
+        "src_rows",
+        "src_peers",
+    )
+
+    __slots__ = _FIELDS + ("_rank_indptr", "_dest_indptr", "_src_indptr")
+
+    def __init__(self, **cols) -> None:
+        for name in self._FIELDS:
+            setattr(self, name, cols[name])
+        self._rank_indptr = None
+        self._dest_indptr = None
+        self._src_indptr = None
+
+    def rank_indptr(self) -> np.ndarray:
+        """int64[S + 1] slab boundaries of the dense per-rank columns."""
+        if self._rank_indptr is None:
+            self._rank_indptr = _indptr(self.rank_lens)
+        return self._rank_indptr
+
+    def dest_indptr(self) -> np.ndarray:
+        if self._dest_indptr is None:
+            self._dest_indptr = _indptr(self.dest_lens)
+        return self._dest_indptr
+
+    def src_indptr(self) -> np.ndarray:
+        if self._src_indptr is None:
+            self._src_indptr = _indptr(self.src_lens)
+        return self._src_indptr
+
+    def storage_nbytes(self) -> int:
+        return sum(getattr(self, name).nbytes for name in self._FIELDS)
+
+
+class StructTable:
+    """Fingerprinted store of unique communication structures.
+
+    Each unique ``(pairs, n)`` point-to-point structure / ``(groups, n)``
+    communicator structure / raw adapter event payload is stored **once**;
+    :class:`TraceBuffer` rows reference structs by id.  ``intern_*``
+    fingerprint the incoming structure — by ``(generator, extent)`` key
+    for arrays tagged via :func:`tag_structure` (O(1) identity probe on
+    repeats), by raw payload bytes otherwise — and skip
+    :func:`p2p_structure` (and the dense scatters) entirely on a hit;
+    ``insert_*`` bypass the fingerprint table (the ``intern=False``
+    reference layout, one struct per event).
+
+    ``lazy=True`` (the interned :class:`TraceBuffer` default) stores only
+    each struct's generating payload and expands the flat slab/pair-column
+    layout on demand through :meth:`reduction_view` — see the module
+    docstring's two-mode schema.  ``lazy=False`` materializes at append
+    time (the reference layout, byte-compatible with the pre-lazy store).
+    """
+
+    def __init__(self, lazy: bool = False) -> None:
+        self._lazy = bool(lazy)
         self._fp: dict = {}
+        # Process-local (id(array), n) -> struct id fast path for tagged
+        # producer arrays (dropped from pickles; ids don't travel).
+        self._id_memo: dict = {}
+        self._version = 0
+        self._view_cache: Optional[tuple] = None  # (version, StructView)
         # Per-struct scalar columns.
         self._rank_len = Column(np.int64)
+        self._struct_kind = Column(np.int8)
+        # Generating payloads, one entry per struct (None when eager).
+        self._payload: list = []
+        # Eagerly-materialized columns (empty in lazy mode).
         self._dest_len = Column(np.int64)
         self._src_len = Column(np.int64)
         # Dense per-rank slabs (struct-major).
@@ -362,7 +653,11 @@ class StructTable:
         self._src_rows = Column(np.int64)
         self._src_peers = Column(np.int64)
 
-    # -- column views (live prefixes, read-only) ----------------------------
+    # -- flat views ----------------------------------------------------------
+    #
+    # Every consumer-facing column reads through reduction_view(), so lazy
+    # and eager tables expose one identical layout; in eager mode the view
+    # aliases the live column prefixes (no copy).
 
     @property
     def n_structs(self) -> int:
@@ -374,62 +669,153 @@ class StructTable:
 
     @property
     def dest_lens(self) -> np.ndarray:
-        return self._dest_len.view()
+        return self.reduction_view().dest_lens
 
     @property
     def src_lens(self) -> np.ndarray:
-        return self._src_len.view()
+        return self.reduction_view().src_lens
 
     @property
     def sends(self) -> np.ndarray:
-        return self._sends.view()
+        return self.reduction_view().sends
 
     @property
     def recvs(self) -> np.ndarray:
-        return self._recvs.view()
+        return self.reduction_view().recvs
 
     @property
     def bsent_units(self) -> np.ndarray:
-        return self._bsent_unit.view()
+        return self.reduction_view().bsent_units
 
     @property
     def brecv_units(self) -> np.ndarray:
-        return self._brecv_unit.view()
+        return self.reduction_view().brecv_units
 
     @property
     def participants(self) -> np.ndarray:
-        return self._participants.view()
+        return self.reduction_view().participants
 
     @property
     def dest_rows(self) -> np.ndarray:
-        return self._dest_rows.view()
+        return self.reduction_view().dest_rows
 
     @property
     def dest_peers(self) -> np.ndarray:
-        return self._dest_peers.view()
+        return self.reduction_view().dest_peers
 
     @property
     def src_rows(self) -> np.ndarray:
-        return self._src_rows.view()
+        return self.reduction_view().src_rows
 
     @property
     def src_peers(self) -> np.ndarray:
-        return self._src_peers.view()
+        return self.reduction_view().src_peers
 
     def rank_indptr(self) -> np.ndarray:
         """int64[S + 1] slab boundaries of the dense per-rank columns."""
-        return _indptr(self.rank_lens)
+        return self.reduction_view().rank_indptr()
 
     def dest_indptr(self) -> np.ndarray:
-        return _indptr(self.dest_lens)
+        return self.reduction_view().dest_indptr()
 
     def src_indptr(self) -> np.ndarray:
-        return _indptr(self.src_lens)
+        return self.reduction_view().src_indptr()
+
+    def reduction_view(self) -> StructView:
+        """The flat eager layout of this table, cached per append version.
+
+        Lazy tables expand their generating payloads (one
+        :func:`p2p_structure` / member scatter per unique struct — O(unique
+        structs x n_ranks) work and memory, paid once per reduction, not
+        per event); eager tables wrap their live columns with no copy.
+        """
+        hit = self._view_cache
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        if self._lazy:
+            view = self._materialize()
+        else:
+            view = StructView(
+                rank_lens=self._rank_len.view(),
+                dest_lens=self._dest_len.view(),
+                src_lens=self._src_len.view(),
+                sends=self._sends.view(),
+                recvs=self._recvs.view(),
+                bsent_units=self._bsent_unit.view(),
+                brecv_units=self._brecv_unit.view(),
+                participants=self._participants.view(),
+                dest_rows=self._dest_rows.view(),
+                dest_peers=self._dest_peers.view(),
+                src_rows=self._src_rows.view(),
+                src_peers=self._src_peers.view(),
+            )
+        self._view_cache = (self._version, view)
+        return view
+
+    def _materialize(self) -> StructView:
+        """Expand the generating payloads into the flat eager layout.
+
+        Bit-identical to the eager append path by construction: p2p
+        payloads run the same :func:`p2p_structure`, collective payloads
+        the same member scatter, raw payloads are stored pre-expanded.
+        """
+        sends, recvs, bsent, brecv, parts = [], [], [], [], []
+        drows, dpeers, srows, speers = [], [], [], []
+        kinds = self._struct_kind.view()
+        lens = self._rank_len.view()
+        n_structs = len(lens)
+        dlen = np.zeros(n_structs, np.int64)
+        slen = np.zeros(n_structs, np.int64)
+        for s in range(n_structs):
+            n = int(lens[s])
+            payload = self._payload[s]
+            kind = int(kinds[s])
+            if kind == _KIND_P2P:
+                sv, rv, dr, dp, sr, sp = p2p_structure(payload, n)
+                bs, br = sv, rv
+                pt = np.ones(n, bool)
+            elif kind == _KIND_COLL:
+                unit = np.zeros(n, np.int64)
+                unit[payload] = 1
+                sv = rv = np.zeros(n, np.int64)
+                bs = br = unit
+                pt = unit.astype(bool)
+                dr = dp = sr = sp = _EMPTY_I64
+            else:  # _KIND_RAW: explicit vectors, stored pre-expanded
+                sv, rv, bs, br, pt, dr, dp, sr, sp = payload
+            sends.append(sv)
+            recvs.append(rv)
+            bsent.append(bs)
+            brecv.append(br)
+            parts.append(pt)
+            drows.append(dr)
+            dpeers.append(dp)
+            srows.append(sr)
+            speers.append(sp)
+            dlen[s] = len(dr)
+            slen[s] = len(sr)
+        return StructView(
+            rank_lens=lens,
+            dest_lens=dlen,
+            src_lens=slen,
+            sends=_cat(sends, np.int64),
+            recvs=_cat(recvs, np.int64),
+            bsent_units=_cat(bsent, np.int64),
+            brecv_units=_cat(brecv, np.int64),
+            participants=_cat(parts, bool),
+            dest_rows=_cat(drows, np.int64),
+            dest_peers=_cat(dpeers, np.int64),
+            src_rows=_cat(srows, np.int64),
+            src_peers=_cat(speers, np.int64),
+        )
 
     def storage_nbytes(self) -> int:
-        """Live storage bytes across every column (fingerprint keys excluded)."""
+        """Live storage bytes: scalar columns, eager slabs/pair columns, and
+        lazy generating payloads (fingerprint keys and the cached reduction
+        view excluded — see :meth:`memory_bytes` for full accounting)."""
         cols = (
             self._rank_len,
+            self._struct_kind,
             self._dest_len,
             self._src_len,
             self._sends,
@@ -442,31 +828,127 @@ class StructTable:
             self._src_rows,
             self._src_peers,
         )
-        return sum(c.storage_nbytes() for c in cols)
+        return sum(c.storage_nbytes() for c in cols) + self._payload_nbytes()
+
+    def _payload_nbytes(self) -> int:
+        total = 0
+        for p in self._payload:
+            if p is None:
+                continue
+            if isinstance(p, np.ndarray):
+                total += p.nbytes
+            else:
+                total += sum(a.nbytes for a in p)
+        return total
+
+    def memory_bytes(self) -> int:
+        """In-RAM bytes actually allocated by this table: full column
+        capacities (growth headroom included), generating payloads, the
+        fingerprint / id-memo tables, and the cached reduction view."""
+        cols = (
+            self._rank_len,
+            self._struct_kind,
+            self._dest_len,
+            self._src_len,
+            self._sends,
+            self._recvs,
+            self._bsent_unit,
+            self._brecv_unit,
+            self._participants,
+            self._dest_rows,
+            self._dest_peers,
+            self._src_rows,
+            self._src_peers,
+        )
+        total = sum(c.capacity_nbytes() for c in cols)
+        total += self._payload_nbytes()
+        total += sys.getsizeof(self._fp) + sys.getsizeof(self._id_memo)
+        for key in self._fp:
+            total += sys.getsizeof(key)
+            total += sum(sys.getsizeof(p) for p in key if isinstance(p, bytes))
+        hit = self._view_cache
+        if self._lazy and hit is not None:
+            total += hit[1].storage_nbytes()
+        return total
+
+    # -- pickling ------------------------------------------------------------
+    # The id-memo (process-local array identities) and the materialization
+    # cache drop from pickles; the fingerprint table — its (generator,
+    # extent) keys are plain tuples — and the payloads travel, so a
+    # round-tripped table keeps memoizing.
+
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        state["_id_memo"] = {}
+        state["_view_cache"] = None
+        return state
+
+    def __setstate__(self, state) -> None:
+        self.__dict__.update(state)
 
     # -- interning / insertion ----------------------------------------------
 
-    def intern_p2p(self, pairs: np.ndarray, n: int) -> int:
+    def intern_p2p(self, pairs, n: int) -> int:
         """Struct id of a (pairs, n) point-to-point structure (memoized).
 
-        ``pairs`` must be the canonical contiguous (P, 2) int64 array
-        (see ``_as_pair_array``); on a fingerprint hit no structure is
-        recomputed and no slab is appended.
+        Arrays tagged via :func:`tag_structure` fingerprint by their
+        ``(generator, extent)`` key — repeats cost one id() probe, and the
+        payload bytes are never hashed; untagged input is canonicalized
+        and content-fingerprinted (``tobytes``).  On any fingerprint hit
+        no structure is recomputed and no slab is appended.
         """
-        key = (0, int(n), pairs.tobytes())
+        tag = structure_tag(pairs) if isinstance(pairs, np.ndarray) else None
+        if tag is not None:
+            mkey = (id(pairs), int(n))
+            hit = self._id_memo.get(mkey)
+            if hit is not None and hit[1] is pairs:
+                return hit[0]
+            key = (0, int(n), tag)
+        else:
+            pairs = _as_pair_array(pairs)
+            key = (0, int(n), pairs.tobytes())
+            mkey = None
         sid = self._fp.get(key)
         if sid is None:
-            sid = self.insert_p2p(pairs, n)
+            pairs = _as_pair_array(pairs)
+            if self._lazy:
+                sid = self._append_lazy(n=n, kind=_KIND_P2P, payload=pairs)
+            else:
+                sid = self.insert_p2p(pairs, n)
             self._fp[key] = sid
+        if mkey is not None:
+            self._id_memo[mkey] = (sid, pairs)
         return sid
 
-    def intern_collective(self, members: np.ndarray, n: int) -> int:
-        """Struct id of a (group members, n) collective structure (memoized)."""
-        key = (1, int(n), members.tobytes())
+    def intern_collective(self, members, n: int) -> int:
+        """Struct id of a (group members, n) collective structure (memoized).
+
+        Accepts the producer's group array as-is — ``(n_groups,
+        group_size)`` from ``topology.groups`` or an already-flat member
+        array; tagged group arrays take the ``(generator, extent)`` fast
+        path like p2p pairs.
+        """
+        tag = structure_tag(members) if isinstance(members, np.ndarray) else None
+        if tag is not None:
+            mkey = (id(members), int(n))
+            hit = self._id_memo.get(mkey)
+            if hit is not None and hit[1] is members:
+                return hit[0]
+            key = (1, int(n), tag)
+        else:
+            members = _as_member_array(members)
+            key = (1, int(n), members.tobytes())
+            mkey = None
         sid = self._fp.get(key)
         if sid is None:
-            sid = self.insert_collective(members, n)
+            members = _as_member_array(members)
+            if self._lazy:
+                sid = self._append_lazy(n=n, kind=_KIND_COLL, payload=members)
+            else:
+                sid = self.insert_collective(members, n)
             self._fp[key] = sid
+        if mkey is not None:
+            self._id_memo[mkey] = (sid, members)
         return sid
 
     def intern_event(self, ev: "RegionEvent") -> int:
@@ -486,7 +968,24 @@ class StructTable:
         )
         sid = self._fp.get(key)
         if sid is None:
-            sid = self.insert_event(ev)
+            if self._lazy:
+                ranks = np.arange(ev.n_ranks, dtype=np.int64)
+                payload = (
+                    np.asarray(ev.sends, np.int64),
+                    np.asarray(ev.recvs, np.int64),
+                    np.asarray(ev.bytes_sent, np.int64),
+                    np.asarray(ev.bytes_recv, np.int64),
+                    np.asarray(ev.participants, bool),
+                    np.repeat(ranks, np.diff(ev.dest_indptr)),
+                    np.asarray(ev.dest_indices, np.int64),
+                    np.repeat(ranks, np.diff(ev.src_indptr)),
+                    np.asarray(ev.src_indices, np.int64),
+                )
+                sid = self._append_lazy(
+                    n=ev.n_ranks, kind=_KIND_RAW, payload=payload
+                )
+            else:
+                sid = self.insert_event(ev)
             self._fp[key] = sid
         return sid
 
@@ -494,6 +993,7 @@ class StructTable:
         sends, recvs, drows, dpeers, srows, speers = p2p_structure(pairs, n)
         return self._append(
             n=n,
+            kind=_KIND_P2P,
             sends=sends,
             recvs=recvs,
             bsent_unit=sends,
@@ -506,12 +1006,14 @@ class StructTable:
         )
 
     def insert_collective(self, members: np.ndarray, n: int) -> int:
+        members = _as_member_array(members)
         unit = np.zeros(n, np.int64)
         unit[members] = 1
         zero = np.zeros(n, np.int64)
         empty = np.zeros(0, np.int64)
         return self._append(
             n=n,
+            kind=_KIND_COLL,
             sends=zero,
             recvs=zero,
             bsent_unit=unit,
@@ -527,6 +1029,7 @@ class StructTable:
         ranks = np.arange(ev.n_ranks, dtype=np.int64)
         return self._append(
             n=ev.n_ranks,
+            kind=_KIND_RAW,
             sends=ev.sends,
             recvs=ev.recvs,
             bsent_unit=ev.bytes_sent,
@@ -538,10 +1041,19 @@ class StructTable:
             src_peers=ev.src_indices,
         )
 
+    def _append_lazy(self, *, n: int, kind: int, payload) -> int:
+        sid = len(self._rank_len)
+        self._rank_len.push(n)
+        self._struct_kind.push(kind)
+        self._payload.append(payload)
+        self._version += 1
+        return sid
+
     def _append(
         self,
         *,
         n: int,
+        kind: int,
         sends: np.ndarray,
         recvs: np.ndarray,
         bsent_unit: np.ndarray,
@@ -552,8 +1064,15 @@ class StructTable:
         src_rows: np.ndarray,
         src_peers: np.ndarray,
     ) -> int:
+        if self._lazy:
+            raise ValueError(
+                "insert_* appends the materialized layout; this StructTable "
+                "is lazy (generator payloads) — use intern_* instead"
+            )
         sid = len(self._rank_len)
         self._rank_len.push(n)
+        self._struct_kind.push(kind)
+        self._payload.append(None)
         self._dest_len.push(len(dest_rows))
         self._src_len.push(len(src_rows))
         self._sends.extend(sends)
@@ -565,6 +1084,7 @@ class StructTable:
         self._dest_peers.extend(dest_peers)
         self._src_rows.extend(src_rows)
         self._src_peers.extend(src_peers)
+        self._version += 1
         return sid
 
 
@@ -589,11 +1109,36 @@ class TraceBuffer:
     append inserts a fresh struct row (no fingerprint lookup, no
     multiplicity collapse) — same logical stream, O(events x n_ranks)
     memory; the perf suite measures interned against it.
+
+    ``materialize`` controls the struct table's slab layout when interning:
+    the default (False) stores generating payloads and expands dense slabs
+    lazily per reduction; ``materialize=True`` restores the eager interned
+    layout (the PR-5 baseline the scale perf suite measures against).
+    ``spill_bytes`` (default from ``REPRO_TRACE_SPILL_BYTES``; 0 disables)
+    caps the row columns' in-RAM footprint — growth past it spills to
+    file-backed arrays (see the module docstring's spill section).
     """
 
-    def __init__(self, intern: bool = True) -> None:
+    def __init__(
+        self,
+        intern: bool = True,
+        *,
+        materialize: Optional[bool] = None,
+        spill_bytes: Optional[int] = None,
+    ) -> None:
         self._intern = bool(intern)
-        self.structs = StructTable()
+        if materialize is None:
+            materialize = not self._intern
+        # The insert_* reference path appends materialized slabs, so an
+        # intern=False buffer is always eager regardless of materialize.
+        self._materialize = bool(materialize) or not self._intern
+        self.structs = StructTable(lazy=not self._materialize)
+        if spill_bytes is None:
+            try:
+                spill_bytes = int(os.environ.get(TRACE_SPILL_ENV) or 0)
+            except ValueError:
+                spill_bytes = 0
+        self._spill = _SpillPool(int(spill_bytes)) if int(spill_bytes) > 0 else None
         # Interning tables (shared Interner); the *_names attributes alias
         # the interners' id-ordered value tables, so existing consumers
         # keep indexing plain lists.
@@ -616,6 +1161,32 @@ class TraceBuffer:
         self._mult = Column(np.int64)
         self._largest = Column(np.int64)
         self._n_events = 0
+        if self._spill is not None:
+            for col in self._row_columns():
+                self._spill.register(col)
+
+    def _row_columns(self) -> tuple:
+        return (
+            self._region,
+            self._path,
+            self._kind,
+            self._axis,
+            self._is_coll,
+            self._struct,
+            self._nbytes,
+            self._mult,
+            self._largest,
+        )
+
+    # Spill state is process-local: unpickled columns arrive in-RAM, so the
+    # pool (which travels threshold-only) re-adopts them here and they
+    # re-spill on their own growth.
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        pool = self.__dict__.get("_spill")
+        if pool is not None:
+            for col in self._row_columns():
+                pool.register(col)
 
     # -- interning ----------------------------------------------------------
 
@@ -688,24 +1259,41 @@ class TraceBuffer:
         return (n - 1, int(self._mult._data[n - 1]))
 
     def storage_nbytes(self) -> int:
-        """Live buffer memory: row columns + the struct table's slabs.
+        """Live buffer memory: row columns + the struct table's storage.
 
-        (Distinct from the :attr:`nbytes` *column* — the per-row byte
-        scale of the ISSUE schema; storage accounting is always the
-        ``storage_nbytes`` spelling on Column/StructTable/TraceBuffer.)
+        Counts live-prefix bytes wherever they reside (RAM or spill file);
+        see :meth:`memory_bytes` for the in-RAM-allocation view and
+        :meth:`spilled_nbytes` for the file-backed share.  (Distinct from
+        the :attr:`nbytes` *column* — the per-row byte scale of the ISSUE
+        schema; storage accounting is always the ``storage_nbytes``
+        spelling on Column/StructTable/TraceBuffer.)
         """
-        cols = (
-            self._region,
-            self._path,
-            self._kind,
-            self._axis,
-            self._is_coll,
-            self._struct,
-            self._nbytes,
-            self._mult,
-            self._largest,
-        )
+        cols = self._row_columns()
         return sum(c.storage_nbytes() for c in cols) + self.structs.storage_nbytes()
+
+    def spilled_nbytes(self) -> int:
+        """Live row-column bytes currently resident in spill files (0 when
+        spilling is disabled or the threshold was never crossed)."""
+        return self._spill.spilled_nbytes() if self._spill is not None else 0
+
+    def memory_bytes(self) -> int:
+        """In-RAM bytes actually allocated by this buffer.
+
+        Unlike :meth:`storage_nbytes` (live-prefix data bytes), this
+        accounts what the process is really holding: full row-column
+        capacities (growth headroom included, spilled columns excluded —
+        their bytes are on disk, see :meth:`spilled_nbytes`), the struct
+        table's columns / generating payloads / fingerprint + memo tables /
+        cached reduction view, and the string-interning tables.
+        """
+        total = 0
+        for col in self._row_columns():
+            if not col.spilled:
+                total += col.capacity_nbytes()
+        total += self.structs.memory_bytes()
+        for interner in (self._regions, self._paths, self._kinds, self._axes):
+            total += interner.memory_bytes()
+        return total
 
     # -- appends (the hot recording path; no per-rank/per-event Python) -----
 
@@ -770,13 +1358,20 @@ class TraceBuffer:
         SPMD execution model: the permute runs on every rank, including ranks
         with no active pair this call).  The pair array is fingerprinted:
         repeated structures intern to one :class:`StructTable` entry and
-        skip :func:`p2p_structure` entirely.
+        skip :func:`p2p_structure` entirely.  Canonical (P, 2) ndarrays are
+        passed through untouched so tagged producer arrays keep their
+        identity (the O(1) fingerprint fast path).
         """
-        pairs = _as_pair_array(pairs)
+        if not (
+            isinstance(pairs, np.ndarray)
+            and pairs.ndim == 2
+            and pairs.shape[1] == 2
+        ):
+            pairs = _as_pair_array(pairs)
         if self._intern:
             sid = self.structs.intern_p2p(pairs, n)
         else:
-            sid = self.structs.insert_p2p(pairs, n)
+            sid = self.structs.insert_p2p(_as_pair_array(pairs), n)
         # Every message of the event is nbytes, so the largest single
         # message is nbytes exactly whenever any pair exists.
         self._append_row(
@@ -806,13 +1401,16 @@ class TraceBuffer:
         ``groups`` is the ``(n_groups, group_size)`` global-rank array from
         ``topology.groups`` (or ``arange(n)[None, :]`` for a flat axis); each
         member rank sends/receives ``per_rank_bytes`` ring-equivalent bytes.
-        The flattened member array is fingerprinted like the p2p pairs.
+        The member array is fingerprinted like the p2p pairs — by
+        ``(generator, extent)`` key when the group array is tagged, by the
+        flattened member bytes otherwise.
         """
-        members = np.ascontiguousarray(np.asarray(groups, np.int64).reshape(-1))
         if self._intern:
-            sid = self.structs.intern_collective(members, n)
+            sid = self.structs.intern_collective(groups, n)
         else:
-            sid = self.structs.insert_collective(members, n)
+            sid = self.structs.insert_collective(
+                _as_member_array(groups), n
+            )
         self._append_row(
             region=region,
             region_path=region_path,

@@ -333,6 +333,9 @@ def _summarize_rows(
     g_of_row = gid_of_rid[rids]
 
     tab = buf.structs
+    # One materialized view per delta: lazy tables build (and cache) their
+    # flat slabs here; eager tables alias live columns for free.
+    view = tab.reduction_view()
     sid = buf.struct_ids[rows]
     scale = buf.nbytes[rows]
     is_coll = buf.is_collective[rows].astype(bool)
@@ -342,8 +345,8 @@ def _summarize_rows(
     sub, sid_pos = np.unique(sid, return_inverse=True)
     sid_pos = sid_pos.reshape(-1).astype(_I64)
     S = len(sub)
-    lens = tab.rank_lens[sub]
-    indptr = tab.rank_indptr()
+    lens = view.rank_lens[sub]
+    indptr = view.rank_indptr()
     Rmax = int(lens.max()) if S else 0
     if Rmax > MAX_RANK:
         raise ValueError(
@@ -371,7 +374,7 @@ def _summarize_rows(
             grid.reshape(-1)[flat_pos] = col[src_idx]
             return grid
 
-        part_i = layout(tab.participants).astype(_I64)
+        part_i = layout(view.participants).astype(_I64)
         wc = np.zeros((G, S), _I64)
         wb = np.zeros((G, S), _I64)
         wcm = np.zeros((G, S), _I64)
@@ -382,11 +385,11 @@ def _summarize_rows(
         np.add.at(
             wcb, (g_of_row[is_coll], sid_pos[is_coll]), w[is_coll] * scale[is_coll]
         )
-        sends_g = be.matmul(wc, layout(tab.sends))
-        recvs_g = be.matmul(wc, layout(tab.recvs))
-        bsent_g = be.matmul(wb, layout(tab.bsent_units))
-        brecv_g = be.matmul(wb, layout(tab.brecv_units))
-        cbytes_g = be.matmul(wcb, layout(tab.bsent_units))
+        sends_g = be.matmul(wc, layout(view.sends))
+        recvs_g = be.matmul(wc, layout(view.recvs))
+        bsent_g = be.matmul(wb, layout(view.bsent_units))
+        brecv_g = be.matmul(wb, layout(view.brecv_units))
+        cbytes_g = be.matmul(wcb, layout(view.bsent_units))
         part_g = be.matmul((wc > 0).astype(_I64), part_i) > 0
         cpart_g = be.matmul((wcm > 0).astype(_I64), part_i) > 0
 
@@ -418,10 +421,10 @@ def _summarize_rows(
         return be.pair_codes(gp, rows_col[gather], peers_col[gather], G)
 
     dptr, dcodes = peer_codes(
-        tab.dest_rows, tab.dest_peers, tab.dest_lens, tab.dest_indptr()
+        view.dest_rows, view.dest_peers, view.dest_lens, view.dest_indptr()
     )
     sptr, scodes = peer_codes(
-        tab.src_rows, tab.src_peers, tab.src_lens, tab.src_indptr()
+        view.src_rows, view.src_peers, view.src_lens, view.src_indptr()
     )
 
     coll_counts = np.zeros(G, _I64)

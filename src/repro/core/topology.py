@@ -28,6 +28,15 @@ the identical halo and timestep patterns every step), so each distinct
 ``(axis, perm)`` / axis-set key broadcasts once and every later call is a
 dict hit.  The cached arrays are shared — callers must treat them as
 read-only (the recording paths only fingerprint and reduce them).
+
+Each memoized array is also **tagged** with its rank-extent-normalized
+generator fingerprint (:func:`repro.core.regions.tag_structure`): the
+generator names the logical pattern (axis + permutation shape, or the
+communicator axis set) and the extent pins the topology's named sizes, so
+the trace store's :class:`~repro.core.regions.StructTable` interns repeat
+appends with an O(1) identity probe instead of hashing O(n_ranks) payload
+bytes — and the *key* stays the same structure at every scale, which is
+what the generator form normalizes.
 """
 
 from __future__ import annotations
@@ -38,6 +47,8 @@ import threading
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
+
+from repro.core.regions import tag_structure
 
 
 class Topology:
@@ -55,6 +66,10 @@ class Topology:
         # (axis, perm) / axis-set expansion memos (see module docstring)
         self._pairs_memo: dict = {}
         self._groups_memo: dict = {}
+        # Generator-tag extent: names + sizes pin the rank space exactly
+        # (the same axis name at a different position or size is a
+        # different structure), so equal keys imply equal arrays.
+        self._extent = (tuple(self.names), tuple(self.sizes))
 
     def rank(self, coords: Sequence[int]) -> int:
         return sum(c * s for c, s in zip(coords, self.strides))
@@ -102,6 +117,7 @@ class Topology:
         # (B, P, 2): every other-axes combo x every permutation pair.
         out = base[:, None, None] + perm_arr[None, :, :] * stride
         out = np.ascontiguousarray(out.reshape(-1, 2))
+        out = tag_structure(out, ("axis-perm",) + key, self._extent)
         self._pairs_memo[key] = out
         return out
 
@@ -121,6 +137,7 @@ class Topology:
         outer = self._axis_offsets(others)  # (n_groups,)
         inner = self._axis_offsets(pos)  # (group_size,)
         out = np.ascontiguousarray(outer[:, None] + inner[None, :])
+        out = tag_structure(out, ("axis-groups", key), self._extent)
         self._groups_memo[key] = out
         return out
 

@@ -1,4 +1,9 @@
-"""The paper's three benchmarks: comm-pattern findings + numerics."""
+"""The paper's benchmarks: comm-pattern findings + numerics.
+
+Covers the paper's three apps (kripke / amg / laghos) plus the
+Beatnik-style global-communication mini-app that stresses the trace
+substrate's worst case (all-rank far-field coupling, per-step structure
+mutation)."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -6,9 +11,11 @@ import numpy as np
 from helpers import run_with_devices
 
 from repro.apps.amg import AMGConfig, make_rhs, profile as amg_profile, solve
+from repro.apps.beatnik import BeatnikConfig, _migration, profile as beatnik_profile
 from repro.apps.kripke import KripkeConfig, profile as kripke_profile
-from repro.apps.laghos import (LaghosConfig, make_state,
-                               profile as laghos_profile, run_steps)
+from repro.apps.laghos import (
+    LaghosConfig, make_state, profile as laghos_profile, run_steps
+)
 from repro.apps.stencil import Decomp3D
 
 
@@ -16,10 +23,12 @@ from repro.apps.stencil import Decomp3D
 # Kripke — paper §IV-A findings
 # ---------------------------------------------------------------------------
 
+
 def test_kripke_corner_vs_interior_partners():
     """Corner ranks have 3 communication partners, interior 6 (paper)."""
-    cfg = KripkeConfig(decomp=Decomp3D(4, 4, 4), nx=4, ny=4, nz=4,
-                       n_octants=2, fuse_messages=False)
+    cfg = KripkeConfig(
+        decomp=Decomp3D(4, 4, 4), nx=4, ny=4, nz=4, n_octants=2, fuse_messages=False
+    )
     p = kripke_profile(cfg)
     sc = p.regions["sweep_comm"]
     assert sc.dest_ranks == (3, 6)
@@ -28,8 +37,9 @@ def test_kripke_corner_vs_interior_partners():
 
 def test_kripke_36_messages_per_phase():
     """6 dirsets x 6 groupsets = 36 messages to each partner per phase."""
-    cfg = KripkeConfig(decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4,
-                       n_octants=1, fuse_messages=False)
+    cfg = KripkeConfig(
+        decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4, n_octants=1, fuse_messages=False
+    )
     p = kripke_profile(cfg)
     sc = p.regions["sweep_comm"]
     # the first corner rank sends 36 msgs to each of its 3 partners
@@ -79,6 +89,7 @@ def test_kripke_distributed_matches_reference_8ranks():
 # AMG — paper §IV-B findings
 # ---------------------------------------------------------------------------
 
+
 def test_amg_bytes_decrease_with_level():
     """Paper Fig 2: fine levels carry the most data."""
     p = amg_profile(AMGConfig(decomp=Decomp3D(2, 2, 2)))
@@ -93,19 +104,17 @@ def test_amg_coarse_level_involves_everyone():
     fine = p.regions["mg_level_0"]
     coarse = p.regions["coarse_solve"]
     assert fine.dest_ranks[1] <= 6
-    assert coarse.coll >= 1          # gather involves the full communicator
+    assert coarse.coll >= 1  # gather involves the full communicator
     assert coarse.coll_bytes[1] > 0
 
 
 def test_amg_vcycle_converges():
-    cfg = AMGConfig(decomp=Decomp3D(1, 1, 1), nx=16, ny=16, nz=16,
-                    n_cycles=1)
+    cfg = AMGConfig(decomp=Decomp3D(1, 1, 1), nx=16, ny=16, nz=16, n_cycles=1)
     mesh = cfg.decomp.make_mesh()
     f = make_rhs(cfg)
     run = solve(cfg, mesh)
     _, r1 = run(f)
-    cfg4 = AMGConfig(decomp=Decomp3D(1, 1, 1), nx=16, ny=16, nz=16,
-                     n_cycles=4)
+    cfg4 = AMGConfig(decomp=Decomp3D(1, 1, 1), nx=16, ny=16, nz=16, n_cycles=4)
     _, r4 = solve(cfg4, mesh)(f)
     assert float(r4) < float(r1) < float(jnp.sqrt((f * f).sum()))
 
@@ -132,12 +141,12 @@ def test_amg_distributed_matches_reference_8ranks():
 # Laghos — paper §IV-C findings
 # ---------------------------------------------------------------------------
 
+
 def test_laghos_strong_scaling_bytes_per_rank_decrease():
     """Paper: data volume per rank goes down as scale goes up (strong)."""
     b = {}
-    for px in (4, 8, 16):   # interior ranks exist from 4x4 up
-        cfg = LaghosConfig(decomp=Decomp3D(px, px, 1), nx=64, ny=64,
-                           n_steps=1)
+    for px in (4, 8, 16):  # interior ranks exist from 4x4 up
+        cfg = LaghosConfig(decomp=Decomp3D(px, px, 1), nx=64, ny=64, n_steps=1)
         b[px] = laghos_profile(cfg).regions["halo_exchange"].bytes_sent[1]
     assert b[4] > b[8] > b[16]
 
@@ -177,3 +186,73 @@ def test_laghos_energy_stays_finite():
     out, dts = run_steps(cfg, mesh)(make_state(cfg))
     assert bool(jnp.isfinite(out["e"]).all())
     assert bool((np.asarray(dts) > 0).all())
+
+
+# ---------------------------------------------------------------------------
+# Beatnik — global far-field coupling + per-step structure mutation
+# ---------------------------------------------------------------------------
+
+
+def test_beatnik_far_field_couples_all_ranks():
+    """The far-field all-gather involves every rank, every step — the
+    adversarial opposite of the halo apps' constant-degree traffic."""
+    cfg = BeatnikConfig(
+        decomp=Decomp3D(4, 4, 1), nx=8, ny=8, far_subsample=8, n_steps=2
+    )
+    p = beatnik_profile(cfg)
+    ff = p.regions["far_field"]
+    assert ff.coll == cfg.n_steps
+    assert set(ff.kinds) == {"all_gather"}
+    # every rank contributes bytes to the global gather
+    assert all(b > 0 for b in ff.coll_bytes)
+
+
+def test_beatnik_migration_mutates_structure_per_step():
+    """The migration permute's (axis, shift) never repeats within an axis
+    cycle, so consecutive steps intern fresh structures (the dedup worst
+    case the lazy store is benchmarked against)."""
+    cfg = BeatnikConfig(
+        decomp=Decomp3D(4, 4, 1), nx=8, ny=8, far_subsample=8, n_steps=6
+    )
+    seen = [_migration(cfg, s) for s in range(cfg.n_steps)]
+    assert len(set(seen)) == len(seen)  # all distinct
+    assert {axis for axis, _ in seen} == {0, 1}
+    p = beatnik_profile(cfg)
+    mig = p.regions["migrate"]
+    # two permutes (z and w) per migrating step
+    assert mig.total_sends == 2 * cfg.n_steps * cfg.decomp.n_ranks
+
+
+def test_beatnik_single_rank_axis_skips_migration():
+    """A 1-wide migration axis has nowhere to shift: _migration degrades
+    to a no-op instead of a self-permute."""
+    cfg = BeatnikConfig(
+        decomp=Decomp3D(4, 1, 1), nx=8, ny=8, far_subsample=8, n_steps=4
+    )
+    assert _migration(cfg, 1) == (1, 0)  # y axis is 1 wide
+    p = beatnik_profile(cfg)
+    mig = p.regions["migrate"]
+    # only the even (x-axis) steps migrate
+    assert mig.total_sends == 2 * (cfg.n_steps // 2) * cfg.decomp.n_ranks
+
+
+def test_beatnik_distributed_matches_reference_8ranks():
+    run_with_devices("""
+        import numpy as np
+        from repro.apps.beatnik import (BeatnikConfig, make_state, run_steps,
+                                        reference_steps)
+        from repro.apps.stencil import Decomp3D
+        cfg = BeatnikConfig(decomp=Decomp3D(4, 2, 1), nx=8, ny=8,
+                            far_subsample=8, n_steps=3)
+        mesh = cfg.decomp.make_mesh()
+        state = make_state(cfg)
+        (z, w), nrms = run_steps(cfg, mesh)(state)
+        (zr, wr), nrms_ref = reference_steps(cfg)(state)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(zr),
+                                   rtol=5e-5, atol=5e-6)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(wr),
+                                   rtol=5e-5, atol=5e-6)
+        np.testing.assert_allclose(np.asarray(nrms), np.asarray(nrms_ref),
+                                   rtol=1e-4)
+        print("OK")
+    """)

@@ -285,7 +285,10 @@ def test_dedup_strategy_small_dense_uses_bitmap():
 def test_dedup_strategy_sparse_uses_unique():
     # the historical failure mode: G * Rmax * stride blows past any cap
     # while only a handful of pairs exist.  cells/pair >> work factor.
-    assert _dedup_strategy(4, 100_000, 100_000, 1_000) == ("unique", 0)
+    # Within the sketch extent that falls back to the sort; past it the
+    # id spaces are compacted first (hybrid).
+    assert _dedup_strategy(4, 50_000, 50_000, 1_000) == ("unique", 0)
+    assert _dedup_strategy(4, 100_000, 100_000, 1_000) == ("hybrid", 0)
 
 
 def test_dedup_strategy_large_but_dense_chunks():
@@ -361,6 +364,91 @@ def test_pair_counts_profile_parity_at_high_rank_counts():
         group_ids, rows, peers, 4, rmax, strategy=("chunked", 1)
     )
     np.testing.assert_array_equal(auto, forced)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (compact-then-dedup) path past the sketch rank extent
+# ---------------------------------------------------------------------------
+
+
+def _structured_pairs(rng, n_groups, rank_extent, m, slice_len=512):
+    """Pairs whose ids occupy a thin structured slice of a huge extent —
+    the shape real >= 64k-rank traces produce (halo partners cluster)."""
+    group_ids = np.sort(rng.integers(0, n_groups, m)).astype(np.int64)
+    base = rng.integers(0, rank_extent - slice_len)
+    rows = (base + rng.integers(0, slice_len, m)).astype(np.int64)
+    peers = (base + rng.integers(0, slice_len, m)).astype(np.int64)
+    return group_ids, rows, peers
+
+
+def test_dedup_strategy_huge_extent_routes_to_hybrid():
+    rmax = B._SKETCH_RANK_EXTENT * 2
+    assert _dedup_strategy(4, rmax, rmax, 50_000) == ("hybrid", 0)
+    # at or below the sketch extent the sparse fallback stays sort-based
+    assert _dedup_strategy(4, B._SKETCH_RANK_EXTENT, 100_000, 1_000) == ("unique", 0)
+
+
+def test_compact_ids_roundtrip():
+    rng = np.random.default_rng(15)
+    col = rng.integers(0, 1 << 20, 5_000).astype(np.int64)
+    uniq, compact = B._compact_ids(col)
+    assert (np.diff(uniq) > 0).all()  # ascending, no duplicates
+    np.testing.assert_array_equal(uniq[compact], col)
+    assert int(compact.max()) == len(uniq) - 1
+
+
+def test_pair_counts_hybrid_matches_unique():
+    rng = np.random.default_rng(16)
+    rmax = 200_000
+    group_ids, rows, peers = _structured_pairs(rng, 6, rmax, 30_000)
+    want = _pair_counts_numpy(group_ids, rows, peers, 6, rmax, strategy=("unique", 0))
+    got = _pair_counts_numpy(group_ids, rows, peers, 6, rmax, strategy=("hybrid", 0))
+    np.testing.assert_array_equal(got, want)
+    # the auto strategy routes there on its own past the sketch extent
+    stride = int(peers.max()) + 1
+    assert _dedup_strategy(6, rmax, stride, len(rows)) == ("hybrid", 0)
+    np.testing.assert_array_equal(
+        _pair_counts_numpy(group_ids, rows, peers, 6, rmax), want
+    )
+
+
+def test_pair_codes_hybrid_sorted_and_identical():
+    from repro.core.backend import _pair_codes_numpy
+
+    rng = np.random.default_rng(17)
+    group_ids, rows, peers = _structured_pairs(rng, 5, 150_000, 20_000)
+    want_ptr, want_codes = _pair_codes_numpy(
+        group_ids, rows, peers, 5, strategy=("unique", 0)
+    )
+    got_ptr, got_codes = _pair_codes_numpy(
+        group_ids, rows, peers, 5, strategy=("hybrid", 0)
+    )
+    np.testing.assert_array_equal(got_ptr, want_ptr)
+    np.testing.assert_array_equal(got_codes, want_codes)
+    # the translated codes stay sorted within every group (merge contract)
+    for g in range(5):
+        seg = got_codes[got_ptr[g] : got_ptr[g + 1]]
+        assert (np.diff(seg) > 0).all()
+
+
+def test_jax_backend_delegates_past_sketch_extent():
+    """Past _SKETCH_RANK_EXTENT the jax backend must hand dedup to the
+    numpy hybrid (no device sort over a hopelessly sparse code space) and
+    stay bit-identical."""
+    rng = np.random.default_rng(18)
+    rmax = B._SKETCH_RANK_EXTENT * 4
+    group_ids, rows, peers = _structured_pairs(rng, 3, rmax, 10_000)
+    be = _jax_be()
+    np.testing.assert_array_equal(
+        be.pair_counts(group_ids, rows, peers, 3, rmax),
+        _pair_counts_numpy(group_ids, rows, peers, 3, rmax, strategy=("unique", 0)),
+    )
+    from repro.core.backend import _pair_codes_numpy
+
+    want = _pair_codes_numpy(group_ids, rows, peers, 3, strategy=("unique", 0))
+    got = be.pair_codes(group_ids, rows, peers, 3)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,16 @@ def test_laghos_bit_identical(make_backend):
     _app_parity(profile, cfg, make_backend)
 
 
+@pytest.mark.parametrize("make_backend", JAX_VARIANTS)
+def test_beatnik_bit_identical(make_backend):
+    from repro.apps.beatnik import BeatnikConfig, profile
+
+    cfg = BeatnikConfig(
+        decomp=Decomp3D(2, 2, 1), nx=8, ny=8, far_subsample=8, n_steps=3
+    )
+    _app_parity(profile, cfg, make_backend)
+
+
 # ---------------------------------------------------------------------------
 # Golden HLO corpus
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ from repro.core.regions import RegionEvent, RegionRecorder
 # Randomized event streams (legacy dicts -> from_dicts adapter)
 # ---------------------------------------------------------------------------
 
+
 def _random_p2p_event(rng, region, n):
     """A ppermute-like event with deliberately sparse/misaligned dicts.
 
@@ -41,33 +42,52 @@ def _random_p2p_event(rng, region, n):
     ranks = [r for r in range(n) if rng.random() < 0.7]
     sends = {r: rng.randint(0, 5) for r in ranks if rng.random() < 0.8}
     recvs = {r: rng.randint(0, 5) for r in ranks if rng.random() < 0.8}
-    extra = {r for r in range(n) if rng.random() < 0.2}   # outside ranks
-    dests = {r: {rng.randint(0, n - 1) for _ in range(rng.randint(0, 4))}
-             for r in list(sends) + list(extra)}
-    srcs = {r: {rng.randint(0, n - 1) for _ in range(rng.randint(0, 4))}
-            for r in list(recvs) + list(extra)}
-    bsent = {r: rng.randint(0, 1 << 16)
-             for r in list(sends) + list(extra) if rng.random() < 0.9}
-    brecv = {r: rng.randint(0, 1 << 16)
-             for r in list(recvs) + list(extra) if rng.random() < 0.9}
+    extra = {r for r in range(n) if rng.random() < 0.2}  # outside ranks
+    dests = {
+        r: {rng.randint(0, n - 1) for _ in range(rng.randint(0, 4))}
+        for r in list(sends) + list(extra)
+    }
+    srcs = {
+        r: {rng.randint(0, n - 1) for _ in range(rng.randint(0, 4))}
+        for r in list(recvs) + list(extra)
+    }
+    bsent = {
+        r: rng.randint(0, 1 << 16)
+        for r in list(sends) + list(extra)
+        if rng.random() < 0.9
+    }
+    brecv = {
+        r: rng.randint(0, 1 << 16)
+        for r in list(recvs) + list(extra)
+        if rng.random() < 0.9
+    }
     return RegionEvent.from_dicts(
-        region=region, region_path=(region,),
+        region=region,
+        region_path=(region,),
         kind=rng.choice(["ppermute", "send_recv"]),
-        sends_per_rank=sends, recvs_per_rank=recvs,
-        dest_ranks=dests, src_ranks=srcs,
-        bytes_sent=bsent, bytes_recv=brecv)
+        sends_per_rank=sends,
+        recvs_per_rank=recvs,
+        dest_ranks=dests,
+        src_ranks=srcs,
+        bytes_sent=bsent,
+        bytes_recv=brecv,
+    )
 
 
 def _random_coll_event(rng, region, n):
-    bsent = {r: rng.randint(1, 1 << 12) for r in range(n)
-             if rng.random() < 0.6}
+    bsent = {r: rng.randint(1, 1 << 12) for r in range(n) if rng.random() < 0.6}
     return RegionEvent.from_dicts(
-        region=region, region_path=(region,),
+        region=region,
+        region_path=(region,),
         kind=rng.choice(["psum", "all_gather", "pmin"]),
-        sends_per_rank={}, recvs_per_rank={},
-        dest_ranks={}, src_ranks={},
-        bytes_sent=bsent, bytes_recv=dict(bsent),
-        is_collective=1)
+        sends_per_rank={},
+        recvs_per_rank={},
+        dest_ranks={},
+        src_ranks={},
+        bytes_sent=bsent,
+        bytes_recv=dict(bsent),
+        is_collective=1,
+    )
 
 
 def _random_recorder(seed):
@@ -94,8 +114,7 @@ def _assert_profiles_equal(a: CommProfile, b: CommProfile):
     assert a.n_ranks == b.n_ranks
     assert list(a.regions) == list(b.regions)
     for rname in a.regions:
-        assert a.regions[rname].to_dict() == b.regions[rname].to_dict(), \
-            rname
+        assert a.regions[rname].to_dict() == b.regions[rname].to_dict(), rname
 
 
 def _roundtrip_recorder(rec: RegionRecorder) -> RegionRecorder:
@@ -103,10 +122,16 @@ def _roundtrip_recorder(rec: RegionRecorder) -> RegionRecorder:
     out = RegionRecorder()
     out.instances = dict(rec.instances)
     for ev in rec.events:
-        out.record(RegionEvent.from_dicts(
-            region=ev.region, region_path=ev.region_path, kind=ev.kind,
-            is_collective=ev.is_collective, axis_name=ev.axis_name,
-            **ev.to_dicts()))
+        out.record(
+            RegionEvent.from_dicts(
+                region=ev.region,
+                region_path=ev.region_path,
+                kind=ev.kind,
+                is_collective=ev.is_collective,
+                axis_name=ev.axis_name,
+                **ev.to_dicts(),
+            )
+        )
     return out
 
 
@@ -116,12 +141,14 @@ def test_parity_on_random_streams(seed):
     rec = _random_recorder(seed)
     repl = (seed % 3) + 1
     new = CommPatternProfiler.from_recorder(rec, name="p", replication=repl)
-    ref = CommPatternProfiler.from_recorder(rec, name="p", replication=repl,
-                                            impl="reference")
+    ref = CommPatternProfiler.from_recorder(
+        rec, name="p", replication=repl, impl="reference"
+    )
     _assert_profiles_equal(new, ref)
     # dict adapter round-trip must preserve the stats exactly
-    rt = CommPatternProfiler.from_recorder(_roundtrip_recorder(rec),
-                                           name="p", replication=repl)
+    rt = CommPatternProfiler.from_recorder(
+        _roundtrip_recorder(rec), name="p", replication=repl
+    )
     _assert_profiles_equal(new, rt)
 
 
@@ -135,6 +162,7 @@ def test_parity_empty_recorder():
 
 def test_unknown_impl_rejected():
     import pytest
+
     with pytest.raises(ValueError):
         CommPatternProfiler.from_recorder(RegionRecorder(), impl="magic")
 
@@ -143,8 +171,8 @@ def test_event_csr_canonical_form():
     """Production events: dense vectors zero outside participants, CSR rows
     sorted/unique, byte conservation between send and recv sides."""
     from repro.core import collectives as coll
-    ev = coll.build_p2p_event("ppermute", "x",
-                              [(0, 1), (1, 2), (0, 1), (2, 0)], 4, 64)
+
+    ev = coll.build_p2p_event("ppermute", "x", [(0, 1), (1, 2), (0, 1), (2, 0)], 4, 64)
     assert ev.n_ranks == 4 and bool(ev.participants.all())
     assert ev.sends.tolist() == [2, 1, 1, 0]
     assert ev.recvs.tolist() == [1, 2, 1, 0]
@@ -152,16 +180,19 @@ def test_event_csr_canonical_form():
     # duplicate (0, 1) pair collapses in the peer set
     assert ev.dest_indptr.tolist() == [0, 1, 2, 3, 3]
     assert ev.dest_indices.tolist() == [1, 2, 0]
-    for indptr, indices in ((ev.dest_indptr, ev.dest_indices),
-                            (ev.src_indptr, ev.src_indices)):
+    for indptr, indices in (
+        (ev.dest_indptr, ev.dest_indices),
+        (ev.src_indptr, ev.src_indices),
+    ):
         for r in range(ev.n_ranks):
-            row = indices[indptr[r]:indptr[r + 1]]
+            row = indices[indptr[r] : indptr[r + 1]]
             assert sorted(set(row.tolist())) == row.tolist()
 
 
 # ---------------------------------------------------------------------------
 # Real app profile paths (acceptance: kripke/amg/laghos reproduce exactly)
 # ---------------------------------------------------------------------------
+
 
 def _profile_with_impl(profile_fn, cfg, impl, events_out=None):
     orig = CommPatternProfiler.from_recorder
@@ -188,8 +219,7 @@ def _check_app(profile_fn, cfg):
     # from_dicts round-trip of the real recorded event stream
     (rec,) = recs
     assert rec.events, "app trace recorded no events"
-    rt = CommPatternProfiler.from_recorder(
-        _roundtrip_recorder(rec), name=new.name)
+    rt = CommPatternProfiler.from_recorder(_roundtrip_recorder(rec), name=new.name)
     for rname in new.regions:
         assert new.regions[rname].to_dict() == rt.regions[rname].to_dict()
     for ev in rec.events:
@@ -204,31 +234,45 @@ def _check_app(profile_fn, cfg):
     # reference layout replay (one struct row per event)
     plain = _replay(rec, intern=False)
     assert plain.buffer.structs.n_structs == buf.n_events
-    _assert_profiles_equal(
-        new, CommPatternProfiler.from_recorder(plain, name=new.name))
+    _assert_profiles_equal(new, CommPatternProfiler.from_recorder(plain, name=new.name))
 
 
 def test_parity_kripke_profile_path():
     from repro.apps.kripke import KripkeConfig, profile
-    _check_app(profile, KripkeConfig(decomp=Decomp3D(2, 2, 2),
-                                     nx=4, ny=4, nz=4, n_octants=2,
-                                     fuse_messages=False))
+
+    _check_app(
+        profile,
+        KripkeConfig(
+            decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4, n_octants=2, fuse_messages=False
+        ),
+    )
 
 
 def test_parity_amg_profile_path():
     from repro.apps.amg import AMGConfig, profile
+
     _check_app(profile, AMGConfig(decomp=Decomp3D(2, 2, 2)))
 
 
 def test_parity_laghos_profile_path():
     from repro.apps.laghos import LaghosConfig, profile
-    _check_app(profile, LaghosConfig(decomp=Decomp3D(2, 2, 1),
-                                     nx=32, ny=32, n_steps=1))
+
+    _check_app(profile, LaghosConfig(decomp=Decomp3D(2, 2, 1), nx=32, ny=32, n_steps=1))
+
+
+def test_parity_beatnik_profile_path():
+    from repro.apps.beatnik import BeatnikConfig, profile
+
+    _check_app(
+        profile,
+        BeatnikConfig(decomp=Decomp3D(2, 2, 1), nx=8, ny=8, far_subsample=8, n_steps=3),
+    )
 
 
 # ---------------------------------------------------------------------------
 # Columnar TraceBuffer path (the default from_recorder input)
 # ---------------------------------------------------------------------------
+
 
 def test_trace_buffer_columns_consistent():
     rec = _random_recorder(20260729)
@@ -249,9 +293,9 @@ def test_trace_buffer_columns_consistent():
     assert int(buf.region_ids.max()) < len(buf.region_names)
     # logical event views slice the struct slabs back exactly
     rptr = tab.rank_indptr()
+    csum = np.cumsum(buf.multiplicity)
     for i, ev in enumerate(rec.events):
-        s = int(buf.struct_ids[np.searchsorted(
-            np.cumsum(buf.multiplicity), i, side="right")])
+        s = int(buf.struct_ids[np.searchsorted(csum, i, side="right")])
         assert ev.n_ranks == int(tab.rank_lens[s])
         assert int(ev.dest_indptr[-1]) == int(tab.dest_lens[s])
         assert int(ev.src_indptr[-1]) == int(tab.src_lens[s])
@@ -262,6 +306,7 @@ def test_trace_buffer_columns_consistent():
 def _replay(rec: RegionRecorder, intern: bool) -> RegionRecorder:
     """Replay a recorder's logical event stream into a fresh buffer."""
     from repro.core.regions import TraceBuffer
+
     out = RegionRecorder()
     out.buffer = TraceBuffer(intern=intern)
     out.instances = dict(rec.instances)
@@ -298,19 +343,35 @@ def test_multiplicity_collapses_identical_consecutive_events():
     rec = RegionRecorder()
     rec.enter("sweep_comm")
     for _ in range(36):
-        rec.buffer.append_p2p(region="sweep_comm", region_path=("sweep_comm",),
-                              kind="ppermute", axis_name="x",
-                              pairs=pairs, n=4, nbytes=128)
+        rec.buffer.append_p2p(
+            region="sweep_comm",
+            region_path=("sweep_comm",),
+            kind="ppermute",
+            axis_name="x",
+            pairs=pairs,
+            n=4,
+            nbytes=128,
+        )
     # a different nbytes breaks the run (no collapse across it)
-    rec.buffer.append_p2p(region="sweep_comm", region_path=("sweep_comm",),
-                          kind="ppermute", axis_name="x",
-                          pairs=pairs, n=4, nbytes=256)
+    rec.buffer.append_p2p(
+        region="sweep_comm",
+        region_path=("sweep_comm",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=pairs,
+        n=4,
+        nbytes=256,
+    )
     for _ in range(5):
-        rec.buffer.append_collective(region="sweep_comm",
-                                     region_path=("sweep_comm",),
-                                     kind="psum", axis_name="x",
-                                     groups=np.arange(4)[None, :], n=4,
-                                     per_rank_bytes=96)
+        rec.buffer.append_collective(
+            region="sweep_comm",
+            region_path=("sweep_comm",),
+            kind="psum",
+            axis_name="x",
+            groups=np.arange(4)[None, :],
+            n=4,
+            per_rank_bytes=96,
+        )
     buf = rec.buffer
     assert buf.n_events == 42 and buf.n_rows == 3
     assert buf.multiplicity.tolist() == [36, 1, 5]
@@ -327,14 +388,20 @@ def test_multiplicity_collapses_identical_consecutive_events():
     # an uninterned replay of the logical stream agrees bit-identically
     plain = _replay(rec, intern=False)
     assert plain.buffer.n_rows == 42
-    _assert_profiles_equal(new, CommPatternProfiler.from_recorder(plain,
-                                                                  name="p"))
+    _assert_profiles_equal(new, CommPatternProfiler.from_recorder(plain, name="p"))
 
     # TraceBuffer(intern=False) never collapses nor dedups
     loose = TraceBuffer(intern=False)
     for _ in range(3):
-        loose.append_p2p(region="r", region_path=("r",), kind="ppermute",
-                         axis_name="x", pairs=pairs, n=4, nbytes=128)
+        loose.append_p2p(
+            region="r",
+            region_path=("r",),
+            kind="ppermute",
+            axis_name="x",
+            pairs=pairs,
+            n=4,
+            nbytes=128,
+        )
     assert loose.n_rows == 3 and loose.structs.n_structs == 3
 
 
@@ -344,10 +411,24 @@ def test_append_p2p_largest_degenerate_paths():
     computation in append_p2p)."""
     rec = RegionRecorder()
     rec.enter("r")
-    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
-                          axis_name="x", pairs=[], n=4, nbytes=64)
-    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
-                          axis_name="x", pairs=[], n=0, nbytes=64)
+    rec.buffer.append_p2p(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=[],
+        n=4,
+        nbytes=64,
+    )
+    rec.buffer.append_p2p(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=[],
+        n=0,
+        nbytes=64,
+    )
     assert rec.buffer.largest.tolist() == [0, 0]
     prof = CommPatternProfiler.from_recorder(rec, name="p")
     ref = CommPatternProfiler.from_recorder(rec, name="p", impl="reference")
@@ -355,9 +436,15 @@ def test_append_p2p_largest_degenerate_paths():
     assert prof.regions["r"].largest_send == 0
     assert prof.regions["r"].total_sends == 0
     # duplicated pairs still mean one message of nbytes each
-    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
-                          axis_name="x", pairs=[(0, 1), (0, 1)], n=4,
-                          nbytes=640)
+    rec.buffer.append_p2p(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=[(0, 1), (0, 1)],
+        n=4,
+        nbytes=640,
+    )
     assert int(rec.buffer.largest[-1]) == 640
     prof2 = CommPatternProfiler.from_recorder(rec, name="p")
     ref2 = CommPatternProfiler.from_recorder(rec, name="p", impl="reference")
@@ -374,23 +461,36 @@ def test_columnar_append_matches_materialized_events():
     groups = np.arange(4, dtype=np.int64)[None, :]
     rec_cols = RegionRecorder()
     rec_cols.enter("r")
-    rec_cols.buffer.append_p2p(region="r", region_path=("r",),
-                               kind="ppermute", axis_name="x",
-                               pairs=pairs, n=4, nbytes=64)
-    rec_cols.buffer.append_collective(region="r", region_path=("r",),
-                                     kind="psum", axis_name="x",
-                                     groups=groups, n=4, per_rank_bytes=96)
+    rec_cols.buffer.append_p2p(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=pairs,
+        n=4,
+        nbytes=64,
+    )
+    rec_cols.buffer.append_collective(
+        region="r",
+        region_path=("r",),
+        kind="psum",
+        axis_name="x",
+        groups=groups,
+        n=4,
+        per_rank_bytes=96,
+    )
     rec_evts = RegionRecorder()
     rec_evts.enter("r")
-    for ev in (coll.build_p2p_event("ppermute", "x", pairs, 4, 64),
-               coll.build_collective_event("psum", "x", groups, 4, 96)):
-        ev.region, ev.region_path = "r", ("r",)   # built outside comm_region
+    for ev in (
+        coll.build_p2p_event("ppermute", "x", pairs, 4, 64),
+        coll.build_collective_event("psum", "x", groups, 4, 96),
+    ):
+        ev.region, ev.region_path = "r", ("r",)  # built outside comm_region
         rec_evts.record(ev)
     a = CommPatternProfiler.from_recorder(rec_cols, name="p")
     b = CommPatternProfiler.from_recorder(rec_evts, name="p")
     _assert_profiles_equal(a, b)
-    ref = CommPatternProfiler.from_recorder(rec_cols, name="p",
-                                            impl="reference")
+    ref = CommPatternProfiler.from_recorder(rec_cols, name="p", impl="reference")
     _assert_profiles_equal(a, ref)
     for ea, eb in zip(rec_cols.events, rec_evts.events):
         np.testing.assert_array_equal(ea.sends, eb.sends)
@@ -419,6 +519,7 @@ def test_duck_typed_recorder_without_buffer():
 
 def test_buffer_pickles_between_processes():
     import pickle
+
     rec = _random_recorder(11)
     clone = pickle.loads(pickle.dumps(rec))
     a = CommPatternProfiler.from_recorder(rec, name="p")
@@ -436,21 +537,41 @@ def test_collapsed_buffer_pickle_keeps_fingerprints_and_multiplicity():
     rec = RegionRecorder()
     rec.enter("r")
     for _ in range(4):
-        rec.buffer.append_p2p(region="r", region_path=("r",),
-                              kind="ppermute", axis_name="x",
-                              pairs=pairs, n=4, nbytes=32)
+        rec.buffer.append_p2p(
+            region="r",
+            region_path=("r",),
+            kind="ppermute",
+            axis_name="x",
+            pairs=pairs,
+            n=4,
+            nbytes=32,
+        )
     buf = pickle.loads(pickle.dumps(rec.buffer))
     assert buf.n_rows == 1 and buf.n_events == 4
     assert buf.multiplicity.tolist() == [4]
-    buf.append_p2p(region="r", region_path=("r",), kind="ppermute",
-                   axis_name="x", pairs=pairs, n=4, nbytes=32)
+    buf.append_p2p(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=pairs,
+        n=4,
+        nbytes=32,
+    )
     assert buf.n_rows == 1 and buf.n_events == 5
     assert buf.structs.n_structs == 1
     clone = RegionRecorder()
     clone.buffer = buf
     clone.instances = dict(rec.instances)
-    rec.buffer.append_p2p(region="r", region_path=("r",), kind="ppermute",
-                          axis_name="x", pairs=pairs, n=4, nbytes=32)
+    rec.buffer.append_p2p(
+        region="r",
+        region_path=("r",),
+        kind="ppermute",
+        axis_name="x",
+        pairs=pairs,
+        n=4,
+        nbytes=32,
+    )
     a = CommPatternProfiler.from_recorder(rec, name="p")
     b = CommPatternProfiler.from_recorder(clone, name="p")
     _assert_profiles_equal(a, b)

@@ -82,8 +82,10 @@ def test_incremental_backend_parity(backend):
         rec = _random_recorder(seed)
         batch = CommPatternProfiler.from_recorder(rec, name="p")
         live = _stream_profile(
-            rec, np.linspace(0, rec.buffer.n_rows, 5).astype(int),
-            backend=backend, name="p",
+            rec,
+            np.linspace(0, rec.buffer.n_rows, 5).astype(int),
+            backend=backend,
+            name="p",
         )
         assert live.to_json() == batch.to_json()
 
@@ -243,8 +245,7 @@ def test_kripke_live_parity(backend):
 
     _backend_or_skip(backend)
     cfg = KripkeConfig(
-        decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4, n_octants=2,
-        fuse_messages=False,
+        decomp=Decomp3D(2, 2, 2), nx=4, ny=4, nz=4, n_octants=2, fuse_messages=False
     )
     _app_live_parity(profile, cfg, backend)
 
@@ -263,7 +264,20 @@ def test_laghos_live_parity(backend):
 
     _backend_or_skip(backend)
     _app_live_parity(
-        profile, LaghosConfig(decomp=Decomp3D(2, 2, 1), nx=32, ny=32, n_steps=1),
+        profile,
+        LaghosConfig(decomp=Decomp3D(2, 2, 1), nx=32, ny=32, n_steps=1),
+        backend,
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_beatnik_live_parity(backend):
+    from repro.apps.beatnik import BeatnikConfig, profile
+
+    _backend_or_skip(backend)
+    _app_live_parity(
+        profile,
+        BeatnikConfig(decomp=Decomp3D(2, 2, 1), nx=8, ny=8, far_subsample=8, n_steps=3),
         backend,
     )
 
