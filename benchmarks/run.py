@@ -24,6 +24,7 @@ def run_figures(backend: str | None = None) -> None:
     import fig4_laghos_strong
     import fig56_bw_msgrate
     import fig7_hlo_vs_traced
+    import fig8_halo_heatmap
     import roofline
     import table4_metrics
 
@@ -35,6 +36,7 @@ def run_figures(backend: str | None = None) -> None:
         ("fig4", fig4_laghos_strong),
         ("fig56", fig56_bw_msgrate),
         ("fig7", fig7_hlo_vs_traced),
+        ("fig8", fig8_halo_heatmap),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")
@@ -67,8 +69,11 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
     ``scale_frame.csv``; the 32k+ points stay perf-marked/offline
     (tests/test_trace_scale.py).  Peak RSS is recorded to
     ``scale_peak_rss.txt`` with a soft threshold from
-    ``REPRO_SMOKE_RSS_SOFT_MB``.  Profile JSONs plus the Thicket-frame
-    CSVs land in ``out_dir`` for the workflow to upload as artifacts.
+    ``REPRO_SMOKE_RSS_SOFT_MB``; the fig8 network-layer artifacts
+    (binned 8192-rank halo heatmap + modeled-fabric frame) ride along via
+    ``fig8_halo_heatmap.smoke_artifacts``.  Profile JSONs plus the
+    Thicket-frame CSVs land in ``out_dir`` for the workflow to upload as
+    artifacts.
     """
     import resource
     import time
@@ -155,6 +160,13 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
     with open(scale_path, "w") as f:
         f.write(scale_frame.to_csv())
 
+    # fig8 network-layer artifacts at the same 8192-rank regime: binned
+    # halo-exchange heatmap CSV/ASCII plus the modeled-fabric frame
+    # (O(unique structs) asserted inside).
+    import fig8_halo_heatmap
+
+    fig8_info = fig8_halo_heatmap.smoke_artifacts(out_dir, backend=backend)
+
     # Peak RSS of the whole smoke (ru_maxrss is KiB on Linux): recorded as
     # an artifact next to scale_frame.csv, soft-gated so a memory
     # regression in the scale sweep fails loudly rather than silently
@@ -185,6 +197,9 @@ def run_smoke(out_dir: str, backend: str | None = None) -> None:
         f"-> {frame_path}; "
         f"scale sweep ({len(scale_profiles)} points up to 8192 ranks) "
         f"{t4 - t3:.1f}s -> {scale_path}; "
+        f"fig8 network layer at 8192 ranks "
+        f"({fig8_info['total_sends']} sends / {fig8_info['n_structs']} "
+        f"structs); "
         f"peak RSS {peak_mb:.0f} MiB (soft cap {soft_mb:.0f}) -> {rss_path}"
     )
 

@@ -95,6 +95,41 @@ def main() -> None:
         f"{cfg.n_dirsets * cfg.n_groupsets} — paper's 36"
     )
 
+    print("\n== layer='network': modeled fabric cost + halo heatmap ==")
+    # The third analysis layer needs no devices either: each unique
+    # communication structure in the trace maps onto a parameterized
+    # fabric model (ring / fat-tree / dragonfly latency–bandwidth with
+    # link contention from overlapping peer pairs), giving per-region
+    # modeled wire time, hop counts, and congestion — O(unique structs),
+    # never per-event.  Fabric parameters are dataclass fields:
+    # FabricModel(name="ring", latency_s=1e-6, bandwidth_Bps=50e9).
+    from repro.core.network import FAT_TREE, RING, ascii_heatmap, peer_heatmap
+    from repro.core.profiler import trace_observer
+    from repro.core.reports import network_vs_traced
+    from repro.core.thicket import Frame
+
+    holder = {}
+
+    def keep_recorder(rec, *, name, replication, meta):
+        holder["rec"] = rec
+        return None  # fall through to the batch reduction
+
+    with trace_observer(keep_recorder):
+        prof64 = kripke_profile(cfg, name="kripke-64")
+    rec = holder["rec"]
+    heat = peer_heatmap(rec, region="sweep_comm", bins=16)
+    print(ascii_heatmap(heat, title="sweep_comm peer pairs (16x16 bins)"))
+    entries = [("kripke-64", 64, rec, fab) for fab in (RING, FAT_TREE)]
+    print(network_vs_traced([prof64], entries))
+    net = Frame.from_network(entries).where(region="sweep_comm")
+    for r in net:
+        print(
+            f"  {r['net_fabric']:9s} wire={r['net_wire_s']:.3e}s "
+            f"hops_max={r['net_hops_max']} congestion={r['net_congestion']:.2f}"
+        )
+    # benchmarks/fig8_halo_heatmap.py renders these heatmaps + modeled-
+    # congestion scaling for all four apps (CSV artifacts in CI).
+
     print("\n== Live monitoring: the same profile, streamed in deltas ==")
     # A sweep worker doesn't have to wait for the trace to finish: under a
     # trace_observer hook, profile() hands the recorder to the incremental

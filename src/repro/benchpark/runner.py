@@ -58,6 +58,7 @@ from __future__ import annotations
 import hashlib
 import importlib
 import json
+import multiprocessing
 import os
 import threading
 import time
@@ -81,6 +82,30 @@ LINK_BW = 50e9
 CACHE_DIR_ENV = "REPRO_PROFILE_CACHE_DIR"
 CACHE_MAX_BYTES_ENV = "REPRO_PROFILE_CACHE_MAX_BYTES"
 _DEFAULT_CACHE_MAX_BYTES = 512 * 1024 * 1024
+
+#: Start method for ``executor="process"`` pools.  The stdlib default on
+#: Linux is ``fork``, but this process has already imported (and usually
+#: used) JAX by the time a sweep starts, so forking its multithreaded
+#: runtime is a documented deadlock hazard (``RuntimeWarning: os.fork()
+#: ... likely lead to a deadlock``).  Workers rebuild all state from
+#: pickled args either way, so the start method cannot change results —
+#: sweeps stay byte-identical to serial on every method.
+POOL_START_METHOD_ENV = "REPRO_POOL_START_METHOD"
+
+
+def _pool_mp_context():
+    """Fork-safe multiprocessing context for process sweeps.
+
+    Defaults to ``forkserver`` (workers fork from a clean, JAX-free server
+    process); ``REPRO_POOL_START_METHOD`` overrides, and unknown /
+    unsupported names fall back to ``spawn`` — the portable always-safe
+    method — rather than erroring.
+    """
+    name = (os.environ.get(POOL_START_METHOD_ENV) or "forkserver").strip()
+    try:
+        return multiprocessing.get_context(name)
+    except ValueError:
+        return multiprocessing.get_context("spawn")
 
 
 def default_cache_dir() -> str:
@@ -480,6 +505,20 @@ def _make_live_observer(holder: dict, live_shards: int):
     return observer
 
 
+def app_profile_fns() -> dict:
+    """``{app_name: profile_fn}`` for every benchpark app (lazy import —
+    shared by the sweep runner and the figure scripts that re-trace single
+    points, e.g. ``benchmarks/fig8_halo_heatmap.py``)."""
+    from repro.apps import amg, beatnik, kripke, laghos
+
+    return {
+        "kripke": kripke.profile,
+        "amg": amg.profile,
+        "laghos": laghos.profile,
+        "beatnik": beatnik.profile,
+    }
+
+
 def _trace_point(
     spec: ExperimentSpec,
     pt,
@@ -503,14 +542,7 @@ def _trace_point(
     (cache hits publish their finished JSON as one shard).
     Returns ``(pt, profile, cached)``.
     """
-    from repro.apps import amg, beatnik, kripke, laghos
-
-    profile_fns = {
-        "kripke": kripke.profile,
-        "amg": amg.profile,
-        "laghos": laghos.profile,
-        "beatnik": beatnik.profile,
-    }
+    profile_fns = app_profile_fns()
     meta = {
         "app": spec.app,
         "scaling": spec.scaling,
@@ -650,7 +682,9 @@ def run_experiment(
             )
             for pt, cfg in points
         ]
-        with ProcessPoolExecutor(max_workers=max_workers) as ex:
+        with ProcessPoolExecutor(
+            max_workers=max_workers, mp_context=_pool_mp_context()
+        ) as ex:
             results = list(ex.map(_trace_point_in_worker, work))
         if cache:
             # mirror worker-local counters so caller-visible accounting

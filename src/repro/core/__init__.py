@@ -12,7 +12,13 @@ Public API:
                                columnar HloCollectiveBuffer (CollectiveOp /
                                parse_hlo_collectives* are its view adapters)
   Frame / reports            — Thicket-style analysis & paper-table emitters
-                               (two-layer: traced + hlo rows per region)
+                               (three-layer: traced + hlo + network rows
+                               per region)
+  FabricModel / peer_heatmap — modeled network layer: fabric latency-
+                               bandwidth models over unique communication
+                               structures (ring / fat-tree / dragonfly),
+                               per-region wire time / hops / congestion
+                               rows and the paper's halo-exchange heatmaps
   resolve_backend / use_backend — reduction-backend selection (numpy | jax;
                                default from REPRO_BACKEND, byte-identical
                                profiles across backends)
@@ -62,5 +68,18 @@ from repro.core.hlo import (  # noqa: F401
     summarize_collectives,
 )
 from repro.core import collectives  # noqa: F401
+from repro.core.network import (  # noqa: F401
+    DRAGONFLY,
+    FABRICS,
+    FAT_TREE,
+    RING,
+    FabricModel,
+    NetworkModeledProfiler,
+    ascii_heatmap,
+    heatmap_csv,
+    peer_heatmap,
+    struct_costs,
+    struct_fingerprints,
+)
 from repro.core.thicket import Frame, add_rate_metrics  # noqa: F401
 from repro.core import reports  # noqa: F401

@@ -148,6 +148,61 @@ def hlo_vs_traced(profiles: Iterable[CommProfile], hlo_entries) -> str:
     return "\n".join(out)
 
 
+def network_vs_traced(
+    profiles: Iterable[CommProfile], network_entries, hlo_entries=()
+) -> str:
+    """Three-layer per-region join: traced traffic vs modeled fabric cost.
+
+    Concatenates ``layer="traced"`` rows (instrumented collectives),
+    ``layer="network"`` rows (modeled wire time / hops / link congestion
+    from :mod:`repro.core.network` — ``network_entries`` is the
+    ``Frame.from_network`` tuple form), and optionally ``layer="hlo"`` rows
+    (``hlo_entries`` as in :func:`hlo_vs_traced`) into one frame, then
+    aggregates per (profile, region): the table the paper's heatmap figures
+    annotate, with each region's logical bytes beside what the fabric model
+    says they cost on the wire.
+    """
+    layers = [Frame.from_profiles(profiles), Frame.from_network(network_entries)]
+    if hlo_entries:
+        layers.append(Frame.from_hlo(hlo_entries))
+    both = Frame.concat(layers)
+
+    def total(values):
+        return sum(v for v in values if v)
+
+    def peak(values):
+        return max((v for v in values if v is not None), default=0.0)
+
+    out = [
+        "| Profile | Region | Traced bytes | Traced sends | HLO wire | "
+        "Net msgs | Net hops | Net max-link bytes | Net congestion | "
+        "Net wire s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    if len(both):
+        agg = both.agg(
+            ("profile", "region"),
+            {
+                "traced_bytes": ("total_bytes_sent", total),
+                "traced_sends": ("total_sends", total),
+                "hlo_wire": ("hlo_wire_bytes", total),
+                "net_msgs": ("net_msgs", total),
+                "net_hops": ("net_hops_total", total),
+                "net_linkmax": ("net_link_bytes_max", peak),
+                "net_congestion": ("net_congestion", peak),
+                "net_wire_s": ("net_wire_s", total),
+            },
+        )
+        for r in agg.sort("profile", "region"):
+            out.append(
+                f"| {r['profile']} | {r['region']} | {r['traced_bytes']} | "
+                f"{r['traced_sends']} | {r['hlo_wire']} | {r['net_msgs']} | "
+                f"{r['net_hops']} | {r['net_linkmax']} | "
+                f"{r['net_congestion']:.3f} | {r['net_wire_s']:.3e} |"
+            )
+    return "\n".join(out)
+
+
 def scaling_report(
     profiles: Iterable[CommProfile],
     region: str,
@@ -203,11 +258,20 @@ def bandwidth_msgrate_report(profiles: Iterable[CommProfile]) -> str:
 def ascii_scaling_plot(
     xs: list, ys: list, width: int = 60, height: int = 12, title: str = ""
 ) -> str:
-    """Terminal-friendly scaling plot (the paper's figures, ASCII edition)."""
+    """Terminal-friendly scaling plot (the paper's figures, ASCII edition).
+
+    Points are sorted by x before plotting, so unsorted sweep output (e.g.
+    completion-order rows) draws the same curve — and the axis labels are
+    the true x extremes, not whatever happened to be first/last.
+    """
     if not xs or not ys or max(ys) <= 0:
         return f"{title}: (no data)"
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    xs = [xs[i] for i in order]
+    ys = [ys[i] for i in order]
     lo, hi = min(ys), max(ys)
     span = (hi - lo) or 1.0
+    sampled = _resample(xs, ys, width)  # one resample per plot, not per row
     rows = []
     for level in range(height, -1, -1):
         thresh = lo + span * level / height
@@ -215,7 +279,7 @@ def ascii_scaling_plot(
             "*"
             if y >= thresh and (level == 0 or y < lo + span * (level + 1) / height)
             else " "
-            for y in _resample(xs, ys, width)
+            for y in sampled
         )
         rows.append(f"{thresh:10.3e} |{line}")
     axis = " " * 11 + "+" + "-" * width

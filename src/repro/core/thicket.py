@@ -32,12 +32,15 @@ Column order is first-appearance order, matching the legacy behavior.
 cross-run scaling studies; columns are unioned and dtypes re-unified, so
 sweeps with disjoint meta/region columns concatenate without loss.
 
-Frames are **two-layer**: :meth:`Frame.from_profiles` rows carry
+Frames are **three-layer**: :meth:`Frame.from_profiles` rows carry
 ``layer="traced"`` (application-layer traffic from the instrumented
-collectives) and :meth:`Frame.from_hlo` rows carry ``layer="hlo"``
-(compiler-inserted GSPMD traffic from the columnar HLO analyzer), joined
-per (profile, n_ranks, region) — the ``commr::`` scopes give both layers
-one region namespace (``reports.hlo_vs_traced``).  ``group_by`` / ``agg``
+collectives), :meth:`Frame.from_hlo` rows carry ``layer="hlo"``
+(compiler-inserted GSPMD traffic from the columnar HLO analyzer), and
+:meth:`Frame.from_network` rows carry ``layer="network"`` (modeled fabric
+costs — wire time, hops, link congestion — from
+:mod:`repro.core.network`), joined per (profile, n_ranks, region) — the
+``commr::`` scopes give every layer one region namespace
+(``reports.hlo_vs_traced`` / ``reports.network_vs_traced``).  ``group_by`` / ``agg``
 run vectorized: one factorize pass over composite key codes, no per-row
 dict materialization.  The factorize dispatches through the same
 :class:`~repro.core.backend.ReduceBackend` as the profilers (``backend=``
@@ -215,6 +218,34 @@ class Frame:
         return Frame(rows)
 
     @staticmethod
+    def from_network(entries) -> "Frame":
+        """Modeled-fabric rows: one per (profile, region), ``layer="network"``.
+
+        ``entries`` is an iterable of ``(profile_name, n_ranks, recorder,
+        fabric)`` or ``(profile_name, n_ranks, recorder, fabric, meta)``
+        tuples, where ``recorder`` is a finished
+        :class:`~repro.core.regions.RegionRecorder` (or its trace buffer)
+        and ``fabric`` a :class:`~repro.core.network.FabricModel` or fabric
+        name.  Rows share the join keys of :meth:`from_profiles`, so
+        ``Frame.concat`` stitches the third layer beside traced/hlo.
+        """
+        from repro.core.network import NetworkModeledProfiler
+
+        rows = []
+        for entry in entries:
+            name, n_ranks, rec, fabric, *rest = entry
+            rows.extend(
+                NetworkModeledProfiler.region_rows(
+                    rec,
+                    fabric=fabric,
+                    name=name,
+                    n_ranks=n_ranks,
+                    meta=rest[0] if rest else None,
+                )
+            )
+        return Frame(rows)
+
+    @staticmethod
     def from_records(path: str) -> "Frame":
         """Load a JSON list-of-dicts file (e.g. dry-run roofline records)."""
         with open(path) as f:
@@ -317,13 +348,28 @@ class Frame:
             keep &= m & hit
         return self._take(keep)
 
-    def with_column(self, name: str, fn: Callable[[dict], object]) -> "Frame":
+    def with_column(
+        self,
+        name: str,
+        fn: Callable[[dict], object],
+        present: Optional[Callable[[dict], bool]] = None,
+    ) -> "Frame":
+        """Derive a column row-wise; ``present(row)`` (default: always True)
+        clears the presence mask where the metric is undefined, so reports
+        render a gap instead of a fabricated value."""
         values = [fn(self._row(i)) for i in range(self._n)]
-        present = np.ones(self._n, bool)
+        if present is None:
+            mask_col = np.ones(self._n, bool)
+        else:
+            mask_col = np.fromiter(
+                (bool(present(self._row(i))) for i in range(self._n)),
+                bool,
+                count=self._n,
+            )
         cols = dict(self._cols)
         mask = dict(self._mask)
-        cols[name] = _infer_column(values, present)
-        mask[name] = present
+        cols[name] = _infer_column(values, mask_col)
+        mask[name] = mask_col
         return Frame._from_columns(cols, mask, self._n)
 
     def select(self, *cols: str) -> "Frame":
@@ -619,19 +665,26 @@ def add_rate_metrics(frame: Frame, seconds_col: str = "meta_seconds") -> Frame:
     """Add per-process bandwidth (B/s) and message rate (msgs/s).
 
     ``seconds_col`` must hold the per-step time estimate (roofline seconds
-    from the dry-run, or measured seconds where available).
+    from the dry-run, or measured seconds where available).  Rows whose
+    seconds are missing or zero get NaN cells with the presence mask
+    cleared — fig5/6-style tables show a gap there, never a fake ``0.0``
+    rate that reads as "measured no traffic".
     """
+
+    def has_seconds(r):
+        s = r.get(seconds_col)
+        return isinstance(s, (int, float)) and s > 0
 
     def bw(r):
         s, n = r.get(seconds_col) or 0.0, max(1, r.get("n_ranks", 1))
-        return (r.get("total_bytes_sent", 0) / n / s) if s else 0.0
+        return (r.get("total_bytes_sent", 0) / n / s) if s else float("nan")
 
     def rate(r):
         s, n = r.get(seconds_col) or 0.0, max(1, r.get("n_ranks", 1))
-        return (r.get("total_sends", 0) / n / s) if s else 0.0
+        return (r.get("total_sends", 0) / n / s) if s else float("nan")
 
-    frame = frame.with_column("bandwidth_Bps", bw)
-    return frame.with_column("msg_rate_per_s", rate)
+    frame = frame.with_column("bandwidth_Bps", bw, present=has_seconds)
+    return frame.with_column("msg_rate_per_s", rate, present=has_seconds)
 
 
 def scaling_table(frame: Frame, region: str, value: str = "total_bytes_sent") -> Frame:

@@ -2,6 +2,7 @@
 
 import os
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.benchpark.runner import CacheManifest, ProfileCache, run_experiment
@@ -181,23 +182,50 @@ def test_reset_manifest_over_full_directory_reanchors_and_evicts(tmp_path):
 
 def test_process_sweep_twice_reports_exact_accounting(tmp_path):
     """A process-pool sweep run twice: the shared manifest must account for
-    every worker's traffic exactly — 3 misses + 3 puts cold, 3 hits warm."""
+    every worker's traffic exactly — 3 misses + 3 puts cold, 3 hits warm.
+
+    Runs with fork-related warnings promoted to errors: the pool uses a
+    forkserver (or spawn) start method, so even with JAX's thread pools
+    live in this parent the sweep must not fork a multi-threaded process
+    (the ``os.fork() ... may lead to deadlocks`` RuntimeWarning).
+    """
+    try:
+        import jax  # noqa: F401  — make the parent multi-threaded for real
+    except ImportError:
+        pass
     root = str(tmp_path / "cache")
     cache = ProfileCache(root)
-    run_experiment(
-        _spec(), verbose=False, cache=cache, executor="process", max_workers=3
-    )
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*fork.*")
+        run_experiment(
+            _spec(), verbose=False, cache=cache, executor="process", max_workers=3
+        )
     m1 = cache.manifest.read()
     assert _counts(m1) == {"hits": 0, "misses": 3, "puts": 3, "evictions": 0}
     assert m1["put_bytes"] > 0
 
     cache2 = ProfileCache(root)
-    run_experiment(
-        _spec(), verbose=False, cache=cache2, executor="process", max_workers=3
-    )
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*fork.*")
+        run_experiment(
+            _spec(), verbose=False, cache=cache2, executor="process", max_workers=3
+        )
     m2 = cache2.manifest.read()
     assert _counts(m2) == {"hits": 3, "misses": 3, "puts": 3, "evictions": 0}
     assert m2["put_bytes"] == m1["put_bytes"]  # hits do not re-put
+
+
+def test_pool_start_method_env_override_and_fallback(monkeypatch):
+    """REPRO_POOL_START_METHOD selects the pool context; unknown names
+    fall back to spawn instead of crashing (or silently forking)."""
+    from repro.benchpark.runner import POOL_START_METHOD_ENV, _pool_mp_context
+
+    monkeypatch.delenv(POOL_START_METHOD_ENV, raising=False)
+    assert _pool_mp_context().get_start_method() == "forkserver"
+    monkeypatch.setenv(POOL_START_METHOD_ENV, "spawn")
+    assert _pool_mp_context().get_start_method() == "spawn"
+    monkeypatch.setenv(POOL_START_METHOD_ENV, "no-such-method")
+    assert _pool_mp_context().get_start_method() == "spawn"
 
 
 def test_run_experiment_emits_aggregated_frame_csv(tmp_path):

@@ -337,3 +337,67 @@ def test_rate_report_with_partial_meta_does_not_raise():
     del prof.meta["app"]
     md = bandwidth_msgrate_report([prof, _profile("ok", 4, [("halo", 20, 2)])])
     assert "bandwidth" in md.lower()
+
+
+# ---------------------------------------------------------------------------
+# Rate metrics: missing/zero seconds are a gap, never a fake 0.0
+# ---------------------------------------------------------------------------
+
+
+def test_add_rate_metrics_missing_seconds_is_gap_not_zero():
+    frame = Frame(
+        [
+            {
+                "p": "ok",
+                "meta_seconds": 0.5,
+                "total_bytes_sent": 100,
+                "total_sends": 10,
+            },
+            {"p": "absent", "total_bytes_sent": 7, "total_sends": 1},
+            {"p": "zero", "meta_seconds": 0.0, "total_bytes_sent": 7, "total_sends": 1},
+        ]
+    )
+    out = add_rate_metrics(frame)
+    for col, ok_val in (("bandwidth_Bps", 200.0), ("msg_rate_per_s", 20.0)):
+        vals, mask = out.column_array(col)
+        assert mask.tolist() == [True, False, False], col
+        assert vals[0] == ok_val, col
+        assert np.isnan(vals[1]) and np.isnan(vals[2]), col
+        # absent cells are omitted from row dicts and render empty, so the
+        # fig5/6 tables show a gap rather than "measured no traffic"
+        assert col not in out.rows[1] and col not in out.rows[2], col
+    md = out.to_markdown(cols=["p", "bandwidth_Bps"])
+    assert "| absent |  |" in md and "| zero |  |" in md
+    assert "| ok | 200" in md
+
+
+# ---------------------------------------------------------------------------
+# ascii_scaling_plot: unsorted sweep output + single-resample contract
+# ---------------------------------------------------------------------------
+
+
+def test_ascii_scaling_plot_sorts_unsorted_points():
+    from repro.core.reports import ascii_scaling_plot
+
+    xs, ys = [512, 64, 256, 128], [4.0, 1.0, 3.0, 2.0]
+    unsorted_plot = ascii_scaling_plot(xs, ys, title="t")
+    sorted_plot = ascii_scaling_plot(sorted(xs), sorted(ys), title="t")
+    assert unsorted_plot == sorted_plot
+    # x-axis labels are the true extremes, not whatever arrived first/last
+    xlab = unsorted_plot.splitlines()[-1]
+    assert xlab.strip().startswith("64") and xlab.rstrip().endswith("512")
+
+
+def test_ascii_scaling_plot_resamples_once(monkeypatch):
+    from repro.core import reports
+
+    calls = []
+    real = reports._resample
+
+    def counting(xs, ys, width):
+        calls.append(1)
+        return real(xs, ys, width)
+
+    monkeypatch.setattr(reports, "_resample", counting)
+    reports.ascii_scaling_plot([1, 2, 3], [1.0, 2.0, 3.0], height=12)
+    assert len(calls) == 1  # hoisted out of the per-level loop
