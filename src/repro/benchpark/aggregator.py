@@ -21,7 +21,13 @@ Aggregator lifecycle
    :meth:`SweepAggregator.ingest` whenever it likes; each call picks up
    newly published shards.  A file that fails to load (torn copy on a
    non-atomic filesystem, foreign junk) is *skipped and retried* on the
-   next ingest — it degrades the view, never corrupts it.
+   next ingest — up to ``REPRO_AGG_MAX_RETRIES`` failed loads (default
+   3), after which the file is **quarantined** to ``<root>/quarantine/``
+   and given up on — it degrades the view, never corrupts it and never
+   wedges ingest in a retry-forever loop.  Shards whose ``NNNNofNNNN``
+   total disagrees with the other shards of the same point (conflicting
+   publishers) are resolved by majority vote: the minority total's files
+   are quarantined and logged, the majority's are served.
 3. :meth:`SweepAggregator.frame` / :meth:`profile` serve the current view.
    Points with missing shards (a crashed worker, a sweep still running)
    produce well-formed **partial** profiles from the shards that did
@@ -43,19 +49,52 @@ recorder to stream).
 
 from __future__ import annotations
 
+import logging
 import os
 import pickle
 import re
 import threading
 from typing import Optional
 
+from repro.core.faultinject import maybe_fault
 from repro.core.profiler import CommProfile
 from repro.core.streaming import ProfileSummary, merge_tree
 from repro.core.thicket import Frame
 
+log = logging.getLogger(__name__)
+
 #: Shard filenames: ``<point>.<seq>of<total>.shard`` (zero-padded so a
 #: lexicographic listing is point-major, seq-ordered).
 _SHARD_RE = re.compile(r"^(?P<point>.+)\.(?P<seq>\d{4})of(?P<total>\d{4})\.shard$")
+
+#: Failed loads of one shard file before it is quarantined.
+AGG_MAX_RETRIES_ENV = "REPRO_AGG_MAX_RETRIES"
+_DEFAULT_AGG_MAX_RETRIES = 3
+
+_QUARANTINE_DIRNAME = "quarantine"
+_QUARANTINE_KEEP = 64
+
+
+def _quarantine_file(root: str, fname: str) -> Optional[str]:
+    """Atomically move ``root/fname`` into ``root/quarantine/`` (bounded
+    retention); returns the destination or None if the move lost a race."""
+    qdir = os.path.join(root, _QUARANTINE_DIRNAME)
+    dest = os.path.join(qdir, f"{fname}.{os.getpid()}.{threading.get_ident()}")
+    try:
+        os.makedirs(qdir, exist_ok=True)
+        os.replace(os.path.join(root, fname), dest)
+    except OSError:
+        return None  # someone else moved (or removed) it first
+    try:
+        names = sorted(
+            (os.stat(os.path.join(qdir, n)).st_mtime, n)
+            for n in os.listdir(qdir)
+        )
+        for _, n in names[: max(0, len(names) - _QUARANTINE_KEEP)]:
+            os.remove(os.path.join(qdir, n))
+    except OSError:
+        pass
+    return dest
 
 
 def shard_filename(point: str, seq: int, total: int) -> str:
@@ -113,16 +152,34 @@ def publish_shard(
             pass
         raise
     os.replace(tmp, path)  # atomic publish
+    if maybe_fault("shard_torn", point) is not None:
+        # chaos: tear the published file in place — exactly the artifact a
+        # non-atomic network filesystem (or a dying writer on one) leaves
+        try:
+            with open(path, "r+b") as f:
+                f.truncate(max(1, os.path.getsize(path) // 2))
+        except OSError:
+            pass
     return path
 
 
 class _PointState:
-    """Everything ingested so far for one sweep point."""
+    """Everything ingested so far for one sweep point.
+
+    ``votes`` counts ingested files per claimed ``NNNNofNNNN`` total;
+    ``total`` is the current majority (ties keep the incumbent), and only
+    majority-total shards are held in ``shards`` — see
+    :meth:`SweepAggregator.ingest` for the conflict-eviction protocol.
+    """
 
     def __init__(self, total: int):
         self.total = total
+        self.votes: dict = {}  # claimed total -> distinct-file count
+        self.voted: set = set()  # fnames already counted in ``votes``
         self.shards: dict = {}  # seq -> ProfileSummary
+        self.files: dict = {}  # seq -> fname (for minority eviction)
         self.final_json: Optional[str] = None  # kind="profile" payload
+        self.final_file: Optional[str] = None
         self.name = "profile"
         self.replication = 1
         self.meta: dict = {}
@@ -134,6 +191,15 @@ class _PointState:
     @property
     def complete(self) -> bool:
         return self.ingested >= self.total
+
+    def majority_total(self) -> int:
+        """The total with the most ingested files (ties keep incumbent)."""
+        if not self.votes:
+            return self.total
+        best = max(self.votes.values())
+        if self.votes.get(self.total, 0) == best:
+            return self.total
+        return max(t for t, c in self.votes.items() if c == best)
 
 
 class SweepAggregator:
@@ -147,20 +213,49 @@ class SweepAggregator:
     the lifecycle and crash-tolerance contract.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, max_load_retries: Optional[int] = None):
         self.root = str(root)
         self._points: dict = {}  # point -> _PointState
-        self._seen: set = set()  # ingested filenames
+        self._seen: set = set()  # ingested (or given-up-on) filenames
+        self._fail_counts: dict = {}  # fname -> failed-load count
+        if max_load_retries is None:
+            max_load_retries = int(
+                os.environ.get(AGG_MAX_RETRIES_ENV, _DEFAULT_AGG_MAX_RETRIES)
+            )
+        #: Failed loads of one file before it is quarantined
+        #: (``REPRO_AGG_MAX_RETRIES``).  A torn shard gets this many
+        #: ingest passes to be atomically overwritten by a healthy
+        #: publisher before the aggregator gives up on it.
+        self.max_load_retries = max(1, int(max_load_retries))
+        self.quarantined: list = []  # destination paths, for reporting
 
     # -- ingest --------------------------------------------------------------
+
+    def _give_up(self, fname: str, reason: str) -> None:
+        """Quarantine a poisoned file and stop retrying it."""
+        dest = _quarantine_file(self.root, fname)
+        self._seen.add(fname)
+        self._fail_counts.pop(fname, None)
+        if dest is not None:
+            self.quarantined.append(dest)
+        log.warning("quarantined shard %s (%s) -> %s", fname, reason, dest)
 
     def ingest(self) -> int:
         """Pick up newly published shards; returns how many were ingested.
 
         A file that fails to parse or unpickle is left un-ingested and
-        retried on the next call — a crashed worker's never-published
-        shard simply stays missing (partial view), and foreign files are
+        retried on the next call — bounded by :attr:`max_load_retries`
+        failed loads, after which it is quarantined (a healthy publisher's
+        atomic overwrite heals it sooner; a permanently torn file cannot
+        wedge ingest forever).  A crashed worker's never-published shard
+        simply stays missing (partial view), and foreign files are
         ignored.
+
+        Conflicting publishers — shards of one point disagreeing on the
+        ``NNNNofNNNN`` total — resolve by majority vote over ingested
+        files: minority-total files are quarantined and logged (including
+        retroactively, when a later majority flips), and the view is
+        served from the majority's shards only.
         """
         try:
             names = sorted(os.listdir(self.root))
@@ -174,21 +269,69 @@ class SweepAggregator:
             if m is None:
                 continue
             try:
+                if maybe_fault("shard_ingest", fname) is not None:
+                    raise OSError(f"injected fault: shard_ingest @ {fname}")
                 with open(os.path.join(self.root, fname), "rb") as f:
                     payload = pickle.load(f)
                 kind = payload["kind"]
             except Exception:
+                fails = self._fail_counts.get(fname, 0) + 1
+                self._fail_counts[fname] = fails
+                if fails >= self.max_load_retries:
+                    self._give_up(fname, f"unreadable after {fails} loads")
                 continue  # torn/corrupt: retry on a future ingest
             point = m.group("point")
             seq, total = int(m.group("seq")), int(m.group("total"))
             st = self._points.get(point)
             if st is None:
                 st = self._points[point] = _PointState(total)
-            st.total = max(st.total, total)
+            if fname not in st.voted:
+                st.voted.add(fname)
+                st.votes[total] = st.votes.get(total, 0) + 1
+            majority = st.majority_total()
+            if majority != st.total:
+                # majority flipped: retroactively evict the old total's
+                # ingested shards — they describe a different sharding of
+                # the point and must not merge with the new majority's
+                evicted = [
+                    (s, fn)
+                    for s, fn in st.files.items()
+                    if f"of{majority:04d}." not in fn
+                ]
+                for s, fn in evicted:
+                    st.shards.pop(s, None)
+                    st.files.pop(s, None)
+                    self._give_up(fn, f"minority total (majority {majority})")
+                if st.final_file is not None and (
+                    f"of{majority:04d}." not in st.final_file
+                ):
+                    self._give_up(
+                        st.final_file, f"minority total (majority {majority})"
+                    )
+                    st.final_json = st.final_file = None
+                st.total = majority
+            if total != majority:
+                # Deferred, not dropped: a later majority flip (more of
+                # this file's total arriving) would make it ingestable, so
+                # leave it un-seen and re-judge next pass — bounded by the
+                # same retry budget as unreadable files, then quarantined.
+                fails = self._fail_counts.get(fname, 0) + 1
+                self._fail_counts[fname] = fails
+                if fails >= self.max_load_retries:
+                    self._give_up(
+                        fname, f"minority total (majority {majority})"
+                    )
+                continue
+            # accepted: only now does the retry budget reset (a load that
+            # merely *parsed* must not refresh a deferred file's budget,
+            # or a parseable minority-total straggler would retry forever)
+            self._fail_counts.pop(fname, None)
             if kind == "profile":
                 st.final_json = payload["profile_json"]
+                st.final_file = fname
             else:
                 st.shards[seq] = payload["summary"]
+                st.files[seq] = fname
             st.name = payload.get("name", st.name)
             st.replication = payload.get("replication", st.replication)
             st.meta = payload.get("meta", st.meta)

@@ -51,15 +51,45 @@ Sweep-scalability features on top of the plain loop:
   concurrently running :class:`~repro.benchpark.aggregator.SweepAggregator`
   merges and serves while the sweep is still in flight.  Live profiles are
   byte-identical to batch ones — the live smoke pass asserts it.
+* **Supervised execution**: every scaling point runs under per-point
+  timeouts (``REPRO_POINT_TIMEOUT_S``), bounded retries with exponential
+  backoff + jitter (``REPRO_POINT_RETRIES`` / ``REPRO_RETRY_BACKOFF_S``),
+  and automatic process-pool re-spawn after a ``BrokenProcessPool`` (a
+  worker killed mid-point takes down the pool; the supervisor rebuilds it
+  and resubmits the lost points).  A point that exhausts its retries is
+  carried as an explicit **degraded placeholder** profile — zero regions,
+  ``meta["degraded"] = True`` and ``meta["retries"]`` = attempts made —
+  so downstream frames show the gap honestly (``meta_degraded`` /
+  ``meta_retries`` columns) instead of fabricating zeros or crashing the
+  sweep.  Points that succeed (first try or after retries) stay
+  byte-identical to the fault-free serial run.
+* **Checkpoint/resume** (``run_experiment(..., journal=...)``): completed
+  point profiles are journaled through
+  :class:`repro.ckpt.manager.SweepJournal` (the checkpoint manager's
+  atomic + checksummed publish idiom) as they finish, so a killed sweep
+  restarted with the same journal re-traces only unfinished points —
+  journal-resumed points generate *no* cache traffic at all (asserted via
+  the manifest hit counters in tests).
+* **Chaos testing**: the injection sites of
+  :mod:`repro.core.faultinject` are threaded through the worker entry
+  (``worker_crash`` / ``slow_worker``), cache get/put
+  (``cache_corrupt`` / ``cache_put``), and the manifest lock acquire
+  (``lock_stale``), so a seeded ``REPRO_FAULT_SPEC`` exercises every
+  supervision path deterministically.  Corrupt cache entries are
+  quarantined to ``<cache>/quarantine/`` (manifest ``corrupt`` counter)
+  and served as misses; stale manifest locks are expired after
+  ``REPRO_MANIFEST_LOCK_TIMEOUT_S`` with takeover/generation counters.
 """
 
 from __future__ import annotations
 
+import concurrent.futures as cf
 import hashlib
 import importlib
 import json
 import multiprocessing
 import os
+import random
 import threading
 import time
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
@@ -70,6 +100,14 @@ from typing import Optional
 from repro.benchpark.aggregator import publish_shard
 from repro.benchpark.spec import ExperimentSpec
 from repro.core.backend import use_backend
+from repro.core.faultinject import (
+    InjectedFault,
+    active_plan,
+    fault_context,
+    fire_worker_faults,
+    install_worker_plan,
+    maybe_fault,
+)
 from repro.core.profiler import CommPatternProfiler, CommProfile, trace_observer
 from repro.core.thicket import Frame
 
@@ -82,6 +120,21 @@ LINK_BW = 50e9
 CACHE_DIR_ENV = "REPRO_PROFILE_CACHE_DIR"
 CACHE_MAX_BYTES_ENV = "REPRO_PROFILE_CACHE_MAX_BYTES"
 _DEFAULT_CACHE_MAX_BYTES = 512 * 1024 * 1024
+
+#: Supervision knobs (per-point timeout / bounded retries with backoff).
+POINT_TIMEOUT_ENV = "REPRO_POINT_TIMEOUT_S"
+POINT_RETRIES_ENV = "REPRO_POINT_RETRIES"
+RETRY_BACKOFF_ENV = "REPRO_RETRY_BACKOFF_S"
+_DEFAULT_RETRIES = 2
+_DEFAULT_BACKOFF_S = 0.05
+
+#: Stale manifest-lock expiry (seconds a dead holder's lock survives).
+MANIFEST_LOCK_TIMEOUT_ENV = "REPRO_MANIFEST_LOCK_TIMEOUT_S"
+
+#: Corrupt/torn files are moved here (a subdirectory of the owning cache
+#: or shard directory) instead of being retried forever or crashing.
+QUARANTINE_DIRNAME = "quarantine"
+_QUARANTINE_KEEP = 64
 
 #: Start method for ``executor="process"`` pools.  The stdlib default on
 #: Linux is ``fork``, but this process has already imported (and usually
@@ -191,6 +244,39 @@ def _config_payload(cfg) -> dict:
     return dict(vars(cfg))
 
 
+def _truncate_file(path: str) -> None:
+    """Tear ``path`` in place (drop its second half) — fault injection."""
+    try:
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+    except OSError:
+        pass  # nothing on disk to corrupt
+
+
+def _prune_quarantine(qdir: str, keep: int = _QUARANTINE_KEEP) -> None:
+    """Bound quarantine retention: drop the oldest files beyond ``keep``."""
+    try:
+        names = os.listdir(qdir)
+    except OSError:
+        return
+    if len(names) <= keep:
+        return
+    entries = []
+    for fname in names:
+        p = os.path.join(qdir, fname)
+        try:
+            entries.append((os.stat(p).st_mtime, p))
+        except OSError:
+            continue  # raced with another pruner
+    entries.sort()
+    for _, p in entries[: max(0, len(entries) - keep)]:
+        try:
+            os.remove(p)
+        except OSError:
+            pass
+
+
 class CacheManifest:
     """Exact shared accounting for one cache directory (single JSON file).
 
@@ -214,13 +300,34 @@ class CacheManifest:
     """
 
     FILENAME = "manifest.json"
-    FIELDS = ("hits", "misses", "puts", "evictions", "put_bytes", "evicted_bytes")
+    FIELDS = (
+        "hits",
+        "misses",
+        "puts",
+        "evictions",
+        "put_bytes",
+        "evicted_bytes",
+        "corrupt",
+        "lock_takeovers",
+        "generation",
+    )
     STALE_LOCK_SECONDS = 10.0
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, stale_lock_seconds: Optional[float] = None):
         self.root = str(root)
         self.path = os.path.join(self.root, self.FILENAME)
         self._lock_path = self.path + ".lock"
+        if stale_lock_seconds is None:
+            stale_lock_seconds = float(
+                os.environ.get(MANIFEST_LOCK_TIMEOUT_ENV, self.STALE_LOCK_SECONDS)
+            )
+        #: Seconds after which a lock left by a dead holder is taken over
+        #: (``REPRO_MANIFEST_LOCK_TIMEOUT_S``).  Too low risks breaking a
+        #: *live* stalled holder; the release path's ownership check stops
+        #: that loss from cascading either way.
+        self.stale_lock_seconds = float(stale_lock_seconds)
+        self._takeovers_unreported = 0
+        self._tk_lock = threading.Lock()
 
     def read(self) -> dict:
         """Current totals (zeros when the manifest does not exist yet)."""
@@ -232,6 +339,19 @@ class CacheManifest:
         return {k: int(raw.get(k, 0)) for k in self.FIELDS}
 
     def _acquire_lock(self) -> int:
+        # chaos site: plant a pre-aged orphan lock (as if a previous
+        # holder was SIGKILLed mid-critical-section) that this acquirer
+        # must expire and take over through the normal path below.
+        if maybe_fault("lock_stale", key=self.root) is not None:
+            try:
+                fd = os.open(
+                    self._lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY
+                )
+                os.close(fd)
+                old = time.time() - self.stale_lock_seconds - 1.0
+                os.utime(self._lock_path, (old, old))
+            except OSError:
+                pass  # a real holder owns it right now: nothing to plant
         while True:
             try:
                 return os.open(self._lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
@@ -240,7 +360,7 @@ class CacheManifest:
                     age = time.time() - os.stat(self._lock_path).st_mtime
                 except OSError:
                     continue  # holder released (or broke) it; retry open
-                if age > self.STALE_LOCK_SECONDS:
+                if age > self.stale_lock_seconds:
                     # Break a crashed holder by renaming the lock to a
                     # unique name first: rename is atomic, so exactly one
                     # breaker wins it (the losers see ENOENT and retry),
@@ -254,7 +374,11 @@ class CacheManifest:
                         os.rename(self._lock_path, stale)
                         os.remove(stale)
                     except OSError:
-                        pass  # another breaker won the rename
+                        continue  # another breaker won the rename
+                    # we won the break: report it through the next bump so
+                    # the shared ``lock_takeovers`` counter stays exact
+                    with self._tk_lock:
+                        self._takeovers_unreported += 1
                     continue
                 time.sleep(0.002)
 
@@ -277,14 +401,24 @@ class CacheManifest:
         Returns the post-update totals snapshot — callers coordinating on
         a counter crossing (see :meth:`ProfileCache.put`) decide from this
         atomically-published value, so exactly one handle observes any
-        given crossing.
+        given crossing.  Every publish also advances the ``generation``
+        write-sequence counter, and any stale-lock takeovers this handle
+        performed while acquiring are folded into ``lock_takeovers`` — so
+        lock churn under fault injection is visible in the accounting.
         """
         os.makedirs(self.root, exist_ok=True)
         fd = self._acquire_lock()
         try:
+            with self._tk_lock:
+                takeovers, self._takeovers_unreported = (
+                    self._takeovers_unreported,
+                    0,
+                )
             data = self.read()
             for k, v in deltas.items():
                 data[k] = data.get(k, 0) + int(v)
+            data["lock_takeovers"] = data.get("lock_takeovers", 0) + takeovers
+            data["generation"] = data.get("generation", 0) + 1
             tmp = f"{self.path}.{os.getpid()}.{threading.get_ident()}.tmp"
             with open(tmp, "w") as f:
                 json.dump(data, f, sort_keys=True)
@@ -346,14 +480,39 @@ class ProfileCache:
         return os.path.join(self.root, key + ".json")
 
     def get(self, key: str) -> Optional[CommProfile]:
+        """Load a cached profile; a corrupt entry is a quarantined miss.
+
+        A truncated or otherwise unparsable entry (torn copy on a
+        non-atomic filesystem, bit rot, fault injection) is **moved to
+        ``quarantine/``** and counted in the manifest's ``corrupt``
+        counter, then served as an ordinary miss — the sweep re-traces
+        the point instead of dying on ``ValueError`` (and the poisoned
+        file can never be served again, or retried forever).
+        """
         path = self._path(key)
+        if maybe_fault("cache_corrupt", key) is not None:
+            _truncate_file(path)  # chaos: corrupt the entry on disk
+        data = None
         try:
             with open(path) as f:
-                prof = CommProfile.from_json(f.read())
-        except (OSError, ValueError, KeyError, TypeError):
+                data = f.read()
+        except OSError:
+            data = None  # absent (or unreadable): a plain miss
+        prof = None
+        corrupt = False
+        if data is not None:
+            try:
+                prof = CommProfile.from_json(data)
+            except (ValueError, KeyError, TypeError):
+                corrupt = True
+        if prof is None:
+            if corrupt:
+                self._quarantine(path)
+                self.manifest.bump(misses=1, corrupt=1)
+            else:
+                self.manifest.bump(misses=1)
             with self._lock:
                 self.misses += 1
-            self.manifest.bump(misses=1)
             return None
         try:
             os.utime(path)  # LRU: a hit refreshes recency
@@ -363,6 +522,20 @@ class ProfileCache:
             self.hits += 1
         self.manifest.bump(hits=1)
         return prof
+
+    def _quarantine(self, path: str) -> None:
+        """Atomically move a corrupt entry aside (bounded retention)."""
+        qdir = os.path.join(self.root, QUARANTINE_DIRNAME)
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            dest = os.path.join(
+                qdir,
+                f"{os.path.basename(path)}.{os.getpid()}.{threading.get_ident()}",
+            )
+            os.replace(path, dest)
+        except OSError:
+            return  # a concurrent getter already moved (or removed) it
+        _prune_quarantine(qdir)
 
     def put(self, key: str, profile: CommProfile) -> None:
         """Publish a profile; manifest-coordinated cap enforcement.
@@ -383,6 +556,8 @@ class ProfileCache:
         (cap lowered between runs, or differing caps across handles)
         scans once even though no crossing was observed.
         """
+        if maybe_fault("cache_put", key) is not None:
+            raise InjectedFault("cache_put", key)
         os.makedirs(self.root, exist_ok=True)
         path = self._path(key)
         data = profile.to_json()
@@ -528,6 +703,8 @@ def _trace_point(
     backend: Optional[str] = None,
     live_dir: Optional[str] = None,
     live_shards: int = 4,
+    attempt: int = 0,
+    _crash_safe: bool = False,
 ) -> tuple:
     """Profile (or cache-load) one scaling point.
 
@@ -540,65 +717,74 @@ def _trace_point(
     publishes its summary deltas as ``live_shards`` shard files for a
     concurrent :class:`~repro.benchpark.aggregator.SweepAggregator`
     (cache hits publish their finished JSON as one shard).
+
+    The whole body runs under a :func:`fault_context` carrying
+    ``<point-key>#a<attempt>``, so every nested injection site (cache
+    get/put, manifest lock, shard publish, spill) keys its draws by point
+    and attempt — a retried attempt sees an independent, reproducible
+    fault schedule.  ``_crash_safe`` marks process-pool workers, where a
+    ``worker_crash@hard`` rule may ``os._exit`` instead of raising.
     Returns ``(pt, profile, cached)``.
     """
-    profile_fns = app_profile_fns()
-    meta = {
-        "app": spec.app,
-        "scaling": spec.scaling,
-        "experiment": spec.name,
-        "decomp": list(pt.decomp),
-        "system": spec.system,
-    }
-    key = cache.key(spec.app, cfg, pt.decomp) if cache else None
-    prof = cache.get(key) if cache else None
-    cached = prof is not None
-    holder: dict = {}
-    if cached:
-        # identical physics, this experiment's labels
-        prof.name = f"{spec.name}-{pt.n_ranks}"
-        prof.meta = meta
-    else:
-        ctx = use_backend(backend) if backend is not None else nullcontext()
-        obs = (
-            trace_observer(_make_live_observer(holder, live_shards))
-            if live_dir
-            else nullcontext()
-        )
-        with ctx, obs:
-            prof = profile_fns[spec.app](
-                cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta
-            )
-    prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
-    if live_dir:
-        # Publish only after the roofline stamp so shard meta finalizes to
-        # exactly the batch pipeline's profile bytes.
-        point = point_key(spec, pt)
-        deltas = holder.get("deltas")
-        if deltas is None:  # cache hit (or an app bypassing profile_traced)
-            publish_shard(
-                live_dir,
-                point=point,
-                seq=0,
-                total=1,
-                profile_json=prof.to_json(),
-                name=prof.name,
-                meta=prof.meta,
-            )
+    point = point_key(spec, pt)
+    with fault_context(f"{point}#a{attempt}|"):
+        fire_worker_faults(point, crash_safe=_crash_safe)
+        profile_fns = app_profile_fns()
+        meta = {
+            "app": spec.app,
+            "scaling": spec.scaling,
+            "experiment": spec.name,
+            "decomp": list(pt.decomp),
+            "system": spec.system,
+        }
+        key = cache.key(spec.app, cfg, pt.decomp) if cache else None
+        prof = cache.get(key) if cache else None
+        cached = prof is not None
+        holder: dict = {}
+        if cached:
+            # identical physics, this experiment's labels
+            prof.name = f"{spec.name}-{pt.n_ranks}"
+            prof.meta = meta
         else:
-            for i, delta in enumerate(deltas):
+            ctx = use_backend(backend) if backend is not None else nullcontext()
+            obs = (
+                trace_observer(_make_live_observer(holder, live_shards))
+                if live_dir
+                else nullcontext()
+            )
+            with ctx, obs:
+                prof = profile_fns[spec.app](
+                    cfg, name=f"{spec.name}-{pt.n_ranks}", meta=meta
+                )
+        prof.meta["seconds"] = _roofline_seconds(spec.app, cfg, prof)
+        if live_dir:
+            # Publish only after the roofline stamp so shard meta finalizes
+            # to exactly the batch pipeline's profile bytes.
+            deltas = holder.get("deltas")
+            if deltas is None:  # cache hit (or an app bypassing tracing)
                 publish_shard(
                     live_dir,
                     point=point,
-                    seq=i,
-                    total=len(deltas),
-                    summary=delta,
+                    seq=0,
+                    total=1,
+                    profile_json=prof.to_json(),
                     name=prof.name,
-                    replication=holder["replication"],
                     meta=prof.meta,
                 )
-    if cache and not cached:
-        cache.put(key, prof)
+            else:
+                for i, delta in enumerate(deltas):
+                    publish_shard(
+                        live_dir,
+                        point=point,
+                        seq=i,
+                        total=len(deltas),
+                        summary=delta,
+                        name=prof.name,
+                        replication=holder["replication"],
+                        meta=prof.meta,
+                    )
+        if cache and not cached:
+            cache.put(key, prof)
     if verbose:  # stream progress as points finish
         tot = sum(s.total_bytes_sent for s in prof.regions.values())
         tag = " [cached]" if cached else ""
@@ -612,14 +798,274 @@ def _trace_point(
 
 
 def _trace_point_in_worker(args) -> tuple:
-    """Process-pool entry: rebuild a cache handle on the shared directory."""
-    spec, pt, cfg, cache_root, max_bytes, verbose, backend, live_dir, live_shards = (
-        args
-    )
+    """Process-pool entry: rebuild a cache handle on the shared directory.
+
+    The sweep's fault spec/seed travel in the pickled args (environment
+    changes do not reliably reach warm forkserver workers) and install
+    idempotently, so one warm worker serving many tasks keeps a single
+    plan instance whose ``n``-rule budgets span the whole sweep.
+    """
+    (
+        spec,
+        pt,
+        cfg,
+        cache_root,
+        max_bytes,
+        verbose,
+        backend,
+        live_dir,
+        live_shards,
+        attempt,
+        fault_spec,
+        fault_seed,
+    ) = args
+    install_worker_plan(fault_spec, fault_seed)
     cache = ProfileCache(cache_root, max_bytes) if cache_root else None
     return _trace_point(
-        spec, pt, cfg, cache, verbose, backend, live_dir, live_shards
+        spec,
+        pt,
+        cfg,
+        cache,
+        verbose,
+        backend,
+        live_dir,
+        live_shards,
+        attempt=attempt,
+        _crash_safe=True,
     )
+
+
+# ---------------------------------------------------------------------------
+# Supervision: retry log, degraded placeholders, the supervised map
+# ---------------------------------------------------------------------------
+
+
+class RetryLog:
+    """Append-only record of supervision events (retries, timeouts, pool
+    deaths, degradations) — in memory, and mirrored to a JSONL file when
+    constructed with a ``path`` (the CI chaos job uploads it as an
+    artifact)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.events: list = []
+        self._lock = threading.Lock()
+        if path:
+            parent = os.path.dirname(path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+
+    def add(self, point: str, attempt: int, kind: str, error="") -> None:
+        ev = {
+            "point": point,
+            "attempt": int(attempt),
+            "kind": kind,
+            "error": str(error)[:500],
+            "t": time.time(),
+        }
+        with self._lock:
+            self.events.append(ev)
+            if self.path:
+                try:
+                    with open(self.path, "a") as f:
+                        f.write(json.dumps(ev, sort_keys=True) + "\n")
+                except OSError:
+                    pass  # logging must never take the sweep down
+
+
+def _degraded_profile(spec: ExperimentSpec, pt, attempts: int, error) -> CommProfile:
+    """Explicit placeholder for a point that exhausted its retries.
+
+    Zero regions — downstream frames carry the row with
+    ``meta_degraded`` / ``meta_retries`` and *masked* stats columns, so
+    the gap is visible instead of papered over with fabricated zeros.  No
+    roofline ``seconds`` is stamped either: an estimate for a point that
+    never traced would be exactly the fabricated data this path exists to
+    avoid.
+    """
+    return CommProfile(
+        name=f"{spec.name}-{pt.n_ranks}",
+        n_ranks=pt.n_ranks,
+        regions={},
+        meta={
+            "app": spec.app,
+            "scaling": spec.scaling,
+            "experiment": spec.name,
+            "decomp": list(pt.decomp),
+            "system": spec.system,
+            "degraded": True,
+            "retries": int(attempts),
+            "error": str(error)[:300],
+        },
+    )
+
+
+def _drain_pool(ex, force: bool) -> None:
+    """Shut an executor down; ``force`` abandons queued/running work
+    (and terminates process-pool workers so an abandoned hung task cannot
+    block interpreter exit)."""
+    if force:
+        ex.shutdown(wait=False, cancel_futures=True)
+        procs = getattr(ex, "_processes", None) or {}
+        for p in list(procs.values()):
+            try:
+                p.terminate()
+            except Exception:
+                pass
+    else:
+        ex.shutdown(wait=True)
+
+
+def _supervised_map(
+    indices,
+    make_executor,
+    submit_one,
+    *,
+    timeout_s: Optional[float],
+    retries: int,
+    backoff_s: float,
+    retry_log: RetryLog,
+    point_name,
+    make_degraded,
+    on_result,
+) -> dict:
+    """Run ``submit_one(ex, idx, attempt)`` for every index under
+    supervision; returns ``{idx: result}`` with **every** index present.
+
+    The contract that makes chaos survivable:
+
+    * a task *running* longer than ``timeout_s`` is abandoned (its
+      eventual result is ignored; publishes are idempotent) and the point
+      retries — the clock starts when the pool begins executing the task,
+      so queueing and worker cold-start (a respawned forkserver pool
+      imports the world before its first task) don't count against the
+      point;
+    * a task raising anything retries with exponential backoff + jitter,
+      up to ``retries`` extra attempts, then degrades via
+      ``make_degraded(idx, attempts, kind, err)``;
+    * a dead pool (``BrokenProcessPool`` — e.g. a hard-killed worker)
+      charges an attempt to every in-flight point (so respawns are
+      bounded by the total retry budget) and is rebuilt;
+    * termination is guaranteed: every attempt either completes, times
+      out, or dies with the pool, and attempts per point are bounded.
+
+    ``on_result`` fires exactly once per index as its result lands
+    (success or degraded) — the journal hook, so a kill mid-sweep keeps
+    every point finished so far.
+    """
+    out: dict = {}
+    inflight: dict = {}  # future -> (idx, attempt, deadline)
+    delayed: list = []  # (ready_t, idx, next_attempt)
+    abandoned = False
+    ex = make_executor()
+
+    def record(idx, res):
+        out[idx] = res
+        on_result(idx, res)
+
+    def failed(idx, attempt, kind, err):
+        retry_log.add(point_name(idx), attempt, kind, err)
+        if attempt < retries:
+            delay = backoff_s * (2.0**attempt) * (1.0 + 0.25 * random.random())
+            delayed.append((time.monotonic() + delay, idx, attempt + 1))
+        else:
+            record(idx, make_degraded(idx, attempt + 1, kind, err))
+
+    def launch(idx, attempt):
+        fut = submit_one(ex, idx, attempt)
+        # deadline None = not observed running yet (clock not started);
+        # without a timeout the deadline is simply never
+        inflight[fut] = (idx, attempt, None if timeout_s else float("inf"))
+
+    try:
+        for idx in indices:
+            launch(idx, 0)
+        while inflight or delayed:
+            now = time.monotonic()
+            if delayed:
+                due = [d for d in delayed if d[0] <= now]
+                if due:
+                    delayed[:] = [d for d in delayed if d[0] > now]
+                    for _, idx, attempt in due:
+                        launch(idx, attempt)
+            if not inflight:  # only backoff waits remain
+                time.sleep(
+                    max(0.0, min(d[0] for d in delayed) - time.monotonic())
+                )
+                continue
+            if timeout_s:
+                # start the clock for tasks the pool has picked up
+                for fut, (idx, attempt, dl) in list(inflight.items()):
+                    if dl is None and (fut.running() or fut.done()):
+                        inflight[fut] = (idx, attempt, now + timeout_s)
+            dls = [dl for (_, _, dl) in inflight.values()]
+            horizon = min(
+                [dl for dl in dls if dl is not None]
+                + [d[0] for d in delayed]
+                + [float("inf")]
+            )
+            if any(dl is None for dl in dls):
+                horizon = min(horizon, now + 0.05)  # poll for run-start
+            wait_s = (
+                None
+                if horizon == float("inf")
+                else max(0.0, horizon - time.monotonic()) + 0.01
+            )
+            done, _ = cf.wait(
+                list(inflight), timeout=wait_s, return_when=cf.FIRST_COMPLETED
+            )
+            broken = False
+            for fut in done:
+                idx, attempt, _ = inflight.pop(fut)
+                try:
+                    res = fut.result()
+                except cf.BrokenExecutor as e:
+                    broken = True
+                    failed(idx, attempt, "pool_broken", e)
+                except Exception as e:
+                    failed(idx, attempt, "error", e)
+                else:
+                    record(idx, res)
+            if broken:
+                # the dead pool takes every in-flight future with it:
+                # charge each an attempt (bounds respawns by the total
+                # retry budget) and rebuild the pool for the retries
+                for _, (idx, attempt, _) in list(inflight.items()):
+                    failed(idx, attempt, "pool_broken", "pool died")
+                inflight.clear()
+                _drain_pool(ex, force=True)
+                ex = make_executor()
+                continue
+            now = time.monotonic()
+            timed_out = [
+                (fut, v)
+                for fut, v in inflight.items()
+                if v[2] is not None and v[2] <= now
+            ]
+            if timed_out:
+                for fut, (idx, attempt, _) in timed_out:
+                    del inflight[fut]
+                    fut.cancel()
+                    failed(idx, attempt, "timeout", f"exceeded {timeout_s}s")
+                # A timed-out task may be hung *inside* a worker, where it
+                # would keep absorbing pool capacity and queue every retry
+                # behind itself (so the retries would "time out" too,
+                # having never run).  Abandon the whole pool — terminating
+                # process workers, orphaning thread ones — and resubmit
+                # the unaffected in-flight attempts with fresh deadlines;
+                # re-runs are safe (publishes are idempotent, tracing is
+                # deterministic) and rebuilds are bounded because every
+                # one charges at least one point an attempt.
+                survivors = list(inflight.values())
+                inflight.clear()
+                _drain_pool(ex, force=True)
+                abandoned = True  # orphaned tasks may still be running
+                ex = make_executor()
+                for idx, attempt, _ in survivors:
+                    launch(idx, attempt)
+    finally:
+        _drain_pool(ex, force=abandoned)
+    return out
 
 
 def run_experiment(
@@ -635,8 +1081,14 @@ def run_experiment(
     backend: Optional[str] = None,
     live_dir: Optional[str] = None,
     live_shards: int = 4,
+    point_timeout_s: Optional[float] = None,
+    retries: Optional[int] = None,
+    backoff_s: Optional[float] = None,
+    journal=None,
+    retry_log: Optional[RetryLog] = None,
 ) -> list:
-    """Profile every scaling point of ``spec`` (cached + concurrent).
+    """Profile every scaling point of ``spec`` (cached + concurrent +
+    supervised).
 
     ``cache`` / ``cache_dir``: enable the content-addressed profile cache
     (``cache`` wins if both are given).  ``executor``: ``"thread"``
@@ -653,66 +1105,215 @@ def run_experiment(
     deltas (``live_shards`` per traced point) are published to that
     directory for a concurrent
     :class:`~repro.benchpark.aggregator.SweepAggregator`; returned
-    profiles stay byte-identical to batch mode.  Results keep the spec's
-    point order regardless of completion order; all executors produce
-    byte-identical profiles.
+    profiles stay byte-identical to batch mode.
+
+    Supervision (see the module docstring): ``point_timeout_s`` /
+    ``retries`` / ``backoff_s`` default from ``REPRO_POINT_TIMEOUT_S`` /
+    ``REPRO_POINT_RETRIES`` / ``REPRO_RETRY_BACKOFF_S``; a point that
+    exhausts its attempts is returned as a degraded placeholder (never an
+    exception, never a fabricated profile).  The per-point timeout
+    applies to pool executors only — a serial in-process call cannot be
+    preempted, so ``"serial"`` honors retries/backoff but not the
+    timeout.  The clock starts when the pool reports the task running;
+    that is exact for ``"thread"``, but a process pool marks tasks
+    running at dispatch, so for ``"process"`` choose a timeout that
+    comfortably exceeds worker cold-start (a respawned worker imports
+    the tracing stack before its first task) — a too-tight timeout
+    degrades points that merely started slowly.  ``journal`` (a directory path or a
+    :class:`repro.ckpt.manager.SweepJournal`) enables checkpoint/resume:
+    completed points are journaled as they finish and a rerun re-traces
+    only the missing ones (journal-resumed points touch neither the cache
+    nor the shard directory — their shards were published by the run that
+    completed them).  ``retry_log`` collects supervision events
+    (:class:`RetryLog`; pass one with a ``path`` to mirror to JSONL).
+
+    Results keep the spec's point order regardless of completion order;
+    all executors produce byte-identical profiles, and a point that
+    succeeds after retries is byte-identical to a fault-free run.
     """
     if executor not in ("thread", "process", "serial"):
         raise ValueError(f"unknown executor: {executor!r}")
     if cache is None and cache_dir is not None:
         cache = ProfileCache(cache_dir)
+    if point_timeout_s is None:
+        env = os.environ.get(POINT_TIMEOUT_ENV)
+        point_timeout_s = float(env) if env else None
+    if retries is None:
+        retries = int(os.environ.get(POINT_RETRIES_ENV, _DEFAULT_RETRIES))
+    if backoff_s is None:
+        backoff_s = float(os.environ.get(RETRY_BACKOFF_ENV, _DEFAULT_BACKOFF_S))
+    if retry_log is None:
+        retry_log = RetryLog()
+    if isinstance(journal, str):
+        from repro.ckpt.manager import SweepJournal
+
+        journal = SweepJournal(journal)
 
     points = spec.configs()
     if max_workers is None:
         max_workers = min(4, len(points)) or 1
-    concurrent = executor != "serial" and max_workers > 1 and len(points) > 1
+
+    # -- checkpoint/resume: journal-resumed points skip execution entirely
+    results: list = [None] * len(points)
+    todo = []
+    completed_keys = set(journal.completed()) if journal is not None else set()
+    for i, (pt, cfg) in enumerate(points):
+        if point_key(spec, pt) in completed_keys:
+            payload = journal.load(point_key(spec, pt))
+            prof = None
+            if payload is not None:
+                try:
+                    prof = CommProfile.from_json(payload)
+                except (ValueError, KeyError, TypeError):
+                    prof = None  # torn record: redo the point
+            if prof is not None:
+                results[i] = (pt, prof, None)  # None: no cache traffic
+                if verbose:
+                    print(
+                        f"  {spec.name} @ {pt.n_ranks:4d} ranks: [journal]",
+                        flush=True,
+                    )
+                continue
+        todo.append(i)
+
+    def on_result(i, res):
+        _, prof, _ = res
+        if journal is not None and not prof.meta.get("degraded"):
+            journal.record(point_key(spec, points[i][0]), prof.to_json())
+
+    def degraded(i, attempts, kind, err):
+        pt = points[i][0]
+        if verbose:
+            print(
+                f"  {spec.name} @ {pt.n_ranks:4d} ranks: DEGRADED "
+                f"after {attempts} attempts ({kind})",
+                flush=True,
+            )
+        # cached=None: no (known) cache traffic to mirror for this point
+        return pt, _degraded_profile(spec, pt, attempts, f"{kind}: {err}"), None
+
+    plan = active_plan()
+    fault_spec = plan.spec if plan is not None else None
+    fault_seed = plan.seed if plan is not None else 0
+
+    concurrent = executor != "serial" and max_workers > 1 and len(todo) > 1
 
     if concurrent and executor == "process":
-        work = [
-            (
+
+        def make_executor():
+            return ProcessPoolExecutor(
+                max_workers=max_workers, mp_context=_pool_mp_context()
+            )
+
+        def submit_one(ex, i, attempt):
+            pt, cfg = points[i]
+            return ex.submit(
+                _trace_point_in_worker,
+                (
+                    spec,
+                    pt,
+                    cfg,
+                    cache.root if cache else None,
+                    cache.max_bytes if cache else None,
+                    verbose,
+                    backend,
+                    live_dir,
+                    live_shards,
+                    attempt,
+                    fault_spec,
+                    fault_seed,
+                ),
+            )
+
+        done = _supervised_map(
+            todo,
+            make_executor,
+            submit_one,
+            timeout_s=point_timeout_s,
+            retries=retries,
+            backoff_s=backoff_s,
+            retry_log=retry_log,
+            point_name=lambda i: point_key(spec, points[i][0]),
+            make_degraded=degraded,
+            on_result=on_result,
+        )
+        for i, res in done.items():
+            results[i] = res
+        if cache:
+            # mirror worker-local counters so caller-visible accounting
+            # matches thread/serial execution (the directory manifest
+            # holds the exact cross-process totals); degraded points
+            # (cached=None) had their traffic counted by the workers that
+            # attempted them, which this handle cannot see
+            for i in todo:
+                cached = results[i][2]
+                if cached is True:
+                    cache.hits += 1
+                elif cached is False:
+                    cache.misses += 1
+    elif concurrent:
+
+        def submit_one(ex, i, attempt):
+            pt, cfg = points[i]
+            return ex.submit(
+                _trace_point,
                 spec,
                 pt,
                 cfg,
-                cache.root if cache else None,
-                cache.max_bytes if cache else None,
+                cache,
                 verbose,
                 backend,
                 live_dir,
                 live_shards,
+                attempt,
             )
-            for pt, cfg in points
-        ]
-        with ProcessPoolExecutor(
-            max_workers=max_workers, mp_context=_pool_mp_context()
-        ) as ex:
-            results = list(ex.map(_trace_point_in_worker, work))
-        if cache:
-            # mirror worker-local counters so caller-visible accounting
-            # matches thread/serial execution (the directory manifest holds
-            # the exact cross-process totals)
-            for _, _, cached in results:
-                if cached:
-                    cache.hits += 1
-                else:
-                    cache.misses += 1
-    elif concurrent:
-        with ThreadPoolExecutor(max_workers=max_workers) as ex:
-            results = list(
-                ex.map(
-                    lambda pc: _trace_point(
-                        spec, pc[0], pc[1], cache, verbose, backend,
-                        live_dir, live_shards,
-                    ),
-                    points,
-                )
-            )  # keeps point order
+
+        done = _supervised_map(
+            todo,
+            lambda: ThreadPoolExecutor(max_workers=max_workers),
+            submit_one,
+            timeout_s=point_timeout_s,
+            retries=retries,
+            backoff_s=backoff_s,
+            retry_log=retry_log,
+            point_name=lambda i: point_key(spec, points[i][0]),
+            make_degraded=degraded,
+            on_result=on_result,
+        )
+        for i, res in done.items():
+            results[i] = res
     else:
-        results = [
-            _trace_point(
-                spec, pt, cfg, cache, verbose, backend, live_dir, live_shards
-            )
-            for pt, cfg in points
-        ]
+        for i in todo:
+            pt, cfg = points[i]
+            attempt = 0
+            while True:
+                try:
+                    res = _trace_point(
+                        spec,
+                        pt,
+                        cfg,
+                        cache,
+                        verbose,
+                        backend,
+                        live_dir,
+                        live_shards,
+                        attempt=attempt,
+                    )
+                except Exception as e:
+                    retry_log.add(point_key(spec, pt), attempt, "error", e)
+                    if attempt >= retries:
+                        res = degraded(i, attempt + 1, "error", e)
+                    else:
+                        attempt += 1
+                        time.sleep(
+                            backoff_s
+                            * (2.0 ** (attempt - 1))
+                            * (1.0 + 0.25 * random.random())
+                        )
+                        continue
+                break
+            results[i] = res
+            on_result(i, res)
 
     profiles = []
     for pt, prof, _ in results:

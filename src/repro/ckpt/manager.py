@@ -13,6 +13,11 @@ Production posture (DESIGN.md §5):
     migration;
   * deterministic resume — the data pipeline is a pure function of
     ``(seed, step)``; the manifest records the step.
+
+:class:`SweepJournal` applies the same atomic + checksummed idiom to the
+benchpark sweep runner's checkpoint/resume: each completed scaling point
+is journaled as one self-verifying record file, so a killed sweep
+restarts exactly where it left off (see ``run_experiment(journal=...)``).
 """
 
 from __future__ import annotations
@@ -26,6 +31,83 @@ from typing import Optional
 
 import jax
 import numpy as np
+
+
+class SweepJournal:
+    """Atomic, checksummed journal of completed sweep points.
+
+    One record file per point key, published with the checkpoint
+    manager's idiom (write-temp, fsync, atomic rename) and carrying a
+    SHA-256 of its payload — a record is either absent, or complete and
+    verified; a crash mid-write never corrupts prior records.  A resumed
+    sweep loads :meth:`completed` and re-traces only the missing points;
+    records that fail to parse or verify are ignored (and that point is
+    simply redone), so a torn journal degrades to extra work, never to a
+    wrong profile.
+    """
+
+    SUFFIX = ".point.json"
+
+    def __init__(self, directory: str):
+        self.dir = str(directory)
+        os.makedirs(self.dir, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        # point keys are fs-safe (spec names + zero-padded rank counts);
+        # anything else is hashed so a hostile key cannot escape the dir.
+        if not all(c.isalnum() or c in "-_." for c in key):
+            key = hashlib.sha256(key.encode()).hexdigest()
+        return os.path.join(self.dir, key + self.SUFFIX)
+
+    def record(self, key: str, payload: str) -> None:
+        """Durably journal one completed point (atomic publish)."""
+        body = {
+            "key": key,
+            "sha256": hashlib.sha256(payload.encode()).hexdigest(),
+            "payload": payload,
+        }
+        path = self._path(key)
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(body, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, path)
+
+    def load(self, key: str) -> Optional[str]:
+        """The journaled payload for ``key``, or None (absent/corrupt)."""
+        try:
+            with open(self._path(key)) as f:
+                body = json.load(f)
+            payload = body["payload"]
+            if hashlib.sha256(payload.encode()).hexdigest() != body["sha256"]:
+                return None
+            if body.get("key", key) != key:
+                return None
+            return payload
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
+    def completed(self) -> list:
+        """Keys of every verified record in the journal directory."""
+        out = []
+        try:
+            names = os.listdir(self.dir)
+        except OSError:
+            return out
+        for fname in sorted(names):
+            if not fname.endswith(self.SUFFIX):
+                continue
+            try:
+                with open(os.path.join(self.dir, fname)) as f:
+                    body = json.load(f)
+                payload, key = body["payload"], body["key"]
+                digest = hashlib.sha256(payload.encode()).hexdigest()
+            except (OSError, ValueError, KeyError, TypeError):
+                continue  # torn record: the point is simply redone
+            if digest == body.get("sha256"):
+                out.append(key)
+        return out
 
 
 def _flatten(tree) -> list:

@@ -27,6 +27,12 @@ Public API:
                                profile_traced; ProfileSummary/merge_tree
                                are the mergeable shard form the live
                                sweep aggregator reduces
+  FaultPlan / install_plan / maybe_fault — deterministic seeded fault
+                               injection (REPRO_FAULT_SPEC) whose sites
+                               thread through the sweep runner, cache,
+                               aggregator, and spill pool; the chaos
+                               counterpart of the supervision layer in
+                               repro.benchpark.runner
 """
 
 from repro.core import compat  # noqa: F401
@@ -37,6 +43,16 @@ from repro.core.backend import (  # noqa: F401
     available_backends,
     resolve_backend,
     use_backend,
+)
+from repro.core.faultinject import (  # noqa: F401
+    FAULT_SEED_ENV,
+    FAULT_SPEC_ENV,
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    fault_context,
+    install_plan,
+    maybe_fault,
 )
 from repro.core.regions import (  # noqa: F401
     COMM_REGION_SCOPE_PREFIX,

@@ -205,6 +205,8 @@ from typing import Iterator, Mapping, Optional
 import jax
 import numpy as np
 
+from repro.core.faultinject import maybe_fault
+
 #: Environment knob: row columns of a :class:`TraceBuffer` spill to
 #: file-backed (np.memmap) storage once their combined in-RAM footprint
 #: would exceed this many bytes (0 / unset disables spilling).
@@ -360,7 +362,16 @@ class Column:
             if pool is not None and pool.should_spill(
                 self, cap * self._data.dtype.itemsize
             ):
-                grown = pool.allocate(self, cap, self._data.dtype)
+                try:
+                    grown = pool.allocate(self, cap, self._data.dtype)
+                except OSError:
+                    # failing spill disk (ENOSPC, injected spill_torn, a
+                    # vanished tmpdir): fall back to RAM — the trace must
+                    # survive even if the RAM budget is blown.  The pool
+                    # counts the failure and disables itself after a few,
+                    # so a dead disk is not re-probed on every growth.
+                    pool.note_failure()
+                    grown = np.zeros(cap, self._data.dtype)
             else:
                 grown = np.zeros(cap, self._data.dtype)
             grown[: self._n] = self._data[: self._n]
@@ -424,16 +435,25 @@ class _SpillPool:
     so they re-spill on their own growth.
     """
 
+    #: Spill-file failures tolerated before the pool disables itself
+    #: (columns then stay in RAM — degraded footprint, correct trace).
+    MAX_FAILURES = 3
+
     def __init__(self, threshold: int) -> None:
         self.threshold = int(threshold)
         self._columns: list = []
         self._dir: Optional[str] = None
         self._seq = 0
         self._finalizer = None
+        self._failures = 0
 
     def register(self, col: Column) -> None:
         col._pool = self
         self._columns.append(col)
+
+    def note_failure(self) -> None:
+        """Record a failed spill allocation (see :attr:`MAX_FAILURES`)."""
+        self._failures = getattr(self, "_failures", 0) + 1
 
     def ram_nbytes(self) -> int:
         """Combined allocated capacity of the unspilled registered columns."""
@@ -446,6 +466,8 @@ class _SpillPool:
     def should_spill(self, col: Column, new_nbytes: int) -> bool:
         if self.threshold <= 0:
             return False
+        if getattr(self, "_failures", 0) >= self.MAX_FAILURES:
+            return False  # spill disk given up on: stay in RAM
         if col.spilled:
             return True  # grow in place in the file
         return (
@@ -455,6 +477,8 @@ class _SpillPool:
 
     def allocate(self, col: Column, count: int, dtype) -> np.ndarray:
         """Grow ``col``'s spill file to ``count`` items and map it."""
+        if maybe_fault("spill_torn", col._spill_path or "") is not None:
+            raise OSError("injected fault: spill_torn")
         if self._dir is None:
             self._dir = tempfile.mkdtemp(prefix="repro-trace-spill-")
             self._finalizer = weakref.finalize(

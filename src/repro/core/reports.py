@@ -203,6 +203,24 @@ def network_vs_traced(
     return "\n".join(out)
 
 
+def _degraded_note(profiles) -> str:
+    """Honesty footer: name the sweep points that never produced data.
+
+    A degraded point (exhausted supervised retries, see
+    ``repro.benchpark.runner``) has no region rows, so it cannot appear
+    in a scaling table — the note makes the gap explicit instead of
+    letting an absent point read as a converged curve.
+    """
+    pts = [
+        f"{p.name} ({int(p.meta.get('retries', 0))} attempts)"
+        for p in profiles
+        if p.meta.get("degraded")
+    ]
+    if not pts:
+        return ""
+    return "\n\n> **degraded points (no data, not zero):** " + ", ".join(pts)
+
+
 def scaling_report(
     profiles: Iterable[CommProfile],
     region: str,
@@ -210,10 +228,11 @@ def scaling_report(
     title: str = "",
 ) -> str:
     """Fig 1/4-style per-region scaling table (metric vs process count)."""
+    profiles = list(profiles)
     frame = Frame.from_profiles(profiles).where(region=region)
     frame = frame.select("n_ranks", metric).sort("n_ranks")
     hdr = f"### {title or region}: {metric} vs processes\n"
-    return hdr + frame.to_markdown()
+    return hdr + frame.to_markdown() + _degraded_note(profiles)
 
 
 def per_level_report(
@@ -238,8 +257,12 @@ def bandwidth_msgrate_report(profiles: Iterable[CommProfile]) -> str:
     """Fig 5/6-style bandwidth + message-rate comparison.
 
     Each profile must carry ``meta['seconds']`` (roofline step seconds).
+    Degraded points carry no seconds and no rates — they are excluded
+    from the table and listed in a footer note instead.
     """
+    profiles = list(profiles)
     frame = Frame.from_profiles(profiles)
+    frame = frame.filter(lambda r: not r.get("meta_degraded"))
     frame = frame.agg(
         ("profile", "n_ranks", "meta_app", "meta_seconds"),
         {
@@ -252,7 +275,11 @@ def bandwidth_msgrate_report(profiles: Iterable[CommProfile]) -> str:
     md = frame.to_markdown(
         cols=["meta_app", "n_ranks", "bandwidth_Bps", "msg_rate_per_s"]
     )
-    return "### Per-process bandwidth (B/s) and message rate (msg/s)\n" + md
+    return (
+        "### Per-process bandwidth (B/s) and message rate (msg/s)\n"
+        + md
+        + _degraded_note(profiles)
+    )
 
 
 def ascii_scaling_plot(

@@ -152,9 +152,26 @@ class Frame:
         The layer tag distinguishes these application-layer rows from the
         compiled-layer rows of :meth:`from_hlo` when both land in one frame
         (two-layer per-region joins — ``reports.hlo_vs_traced``).
+
+        A **degraded** profile (zero regions, ``meta["degraded"]`` — a
+        sweep point that exhausted its supervised retries, see
+        ``repro.benchpark.runner``) still contributes one placeholder row
+        carrying the profile / n_ranks keys and its meta columns
+        (``meta_degraded`` / ``meta_retries`` / ``meta_error``) with every
+        stats column *absent* — the presence masks show the gap honestly
+        instead of fabricating zeros.
         """
         rows = []
         for p in profiles:
+            if not p.regions and p.meta.get("degraded"):
+                row = {
+                    "profile": p.name,
+                    "n_ranks": p.n_ranks,
+                    "layer": "traced",
+                }
+                row.update({f"meta_{k}": v for k, v in p.meta.items()})
+                rows.append(row)
+                continue
             for rname, st in p.regions.items():
                 row = {
                     "profile": p.name,

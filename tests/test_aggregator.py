@@ -13,6 +13,7 @@ the ambient ``REPRO_BACKEND`` so the CI jax tier-1 leg covers the jax
 side.
 """
 
+import logging
 import os
 import pickle
 import shutil
@@ -183,6 +184,97 @@ def test_corrupt_shard_skipped_and_retried(tmp_path):
     )
     assert agg.ingest() == 1
     assert agg.profile("pt5").to_json() == batch.to_json()
+
+
+def test_unreadable_shard_quarantined_after_bounded_retries(tmp_path, caplog):
+    """Satellite: a permanently torn file gets ``max_load_retries`` ingest
+    passes to be healed by an atomic overwrite, then is quarantined — it
+    can degrade the view but never wedge ingest in a retry-forever loop."""
+    root = str(tmp_path)
+    bad = os.path.join(root, shard_filename("ptX", 0, 1))
+    with open(bad, "wb") as f:
+        f.write(b"never a pickle")
+    agg = SweepAggregator(root, max_load_retries=2)
+    with caplog.at_level(logging.WARNING, logger="repro.benchpark.aggregator"):
+        assert agg.ingest() == 0  # failed load 1: retained for retry
+        assert os.path.exists(bad)
+        assert agg.ingest() == 0  # failed load 2: budget spent -> quarantine
+    assert not os.path.exists(bad)
+    qdir = os.path.join(root, "quarantine")
+    assert len(os.listdir(qdir)) == 1
+    assert len(agg.quarantined) == 1 and qdir in agg.quarantined[0]
+    assert any("unreadable" in r.getMessage() for r in caplog.records)
+    # given up for good: later passes don't resurrect or re-count it
+    assert agg.ingest() == 0 and len(agg.quarantined) == 1
+    assert "ptX" not in agg.points()
+    # a healthy publisher re-publishing the point (under a different
+    # sharding — the given-up filename itself stays ignored) converges
+    batch, deltas = _point_shards(23, n_shards=2)
+    _publish_all(root, "ptX", deltas, batch.name)
+    assert agg.ingest() == len(deltas)
+    assert agg.complete("ptX")
+    assert agg.profile("ptX").to_json() == batch.to_json()
+
+
+def test_env_bounds_load_retries(tmp_path, monkeypatch):
+    from repro.benchpark.aggregator import AGG_MAX_RETRIES_ENV
+
+    monkeypatch.setenv(AGG_MAX_RETRIES_ENV, "7")
+    assert SweepAggregator(str(tmp_path)).max_load_retries == 7
+    monkeypatch.setenv(AGG_MAX_RETRIES_ENV, "0")  # floor: at least one try
+    assert SweepAggregator(str(tmp_path)).max_load_retries == 1
+
+
+def test_conflicting_publisher_totals_resolved_by_majority(tmp_path, caplog):
+    """Satellite: two publishers disagree on a point's ``NNNNofNNNN``
+    total (a re-run with a different ``live_shards``, a buggy worker).
+    Majority vote over ingested files wins — retroactively: the earlier
+    minority shard is evicted and quarantined when the majority flips,
+    and the served profile converges to the majority's batch bytes."""
+    root = str(tmp_path)
+    batch, deltas = _point_shards(11, n_shards=3)  # truth: len(deltas) shards
+    _, wrong = _point_shards(11, n_shards=2)  # a conflicting sharding
+    # the conflicting publisher lands first and becomes the incumbent
+    publish_shard(root, point="pt11", seq=0, total=9, summary=wrong[0],
+                  name=batch.name)
+    agg = SweepAggregator(root, max_load_retries=3)
+    assert agg.ingest() == 1
+    assert agg.watermark("pt11") == (1, 9)
+    # now the real sweep publishes its full majority set
+    _publish_all(root, "pt11", deltas, batch.name)
+    with caplog.at_level(logging.WARNING, logger="repro.benchpark.aggregator"):
+        agg.ingest()  # majority flips: the total=9 incumbent is evicted
+        agg.ingest()  # deferred majority files (pre-flip pass order) land
+    assert agg.complete("pt11"), agg.watermark("pt11")
+    assert agg.profile("pt11").to_json() == batch.to_json()
+    assert len(agg.quarantined) == 1
+    assert "0000of0009" in os.path.basename(agg.quarantined[0])
+    assert any("minority total" in r.getMessage() for r in caplog.records)
+    # the view stays stable afterwards — nothing oscillates back
+    assert agg.ingest() == 0
+    assert agg.profile("pt11").to_json() == batch.to_json()
+
+
+def test_minority_total_straggler_is_deferred_then_quarantined(tmp_path):
+    """A minority-total shard arriving *after* the majority settled is
+    deferred (a later flip could legitimize it), then quarantined once its
+    bounded retry budget is spent — the majority view never flinches."""
+    root = str(tmp_path)
+    batch, deltas = _point_shards(13, n_shards=3)
+    _, wrong = _point_shards(13, n_shards=2)
+    _publish_all(root, "pt13", deltas, batch.name)
+    agg = SweepAggregator(root, max_load_retries=2)
+    assert agg.ingest() == len(deltas)
+    assert agg.complete("pt13")
+    publish_shard(root, point="pt13", seq=0, total=9, summary=wrong[0],
+                  name=batch.name)
+    assert agg.ingest() == 0  # deferred, not ingested (fail 1)
+    straggler = os.path.join(root, shard_filename("pt13", 0, 9))
+    assert os.path.exists(straggler)
+    assert agg.ingest() == 0  # budget spent (fail 2) -> quarantined
+    assert not os.path.exists(straggler)
+    assert len(agg.quarantined) == 1
+    assert agg.profile("pt13").to_json() == batch.to_json()
 
 
 def test_publish_is_atomic_no_temp_left(tmp_path):

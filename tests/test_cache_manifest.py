@@ -1,11 +1,19 @@
 """Shared cache manifest: exact per-directory accounting across processes."""
 
 import os
+import signal
+import subprocess
+import sys
 import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
 
-from repro.benchpark.runner import CacheManifest, ProfileCache, run_experiment
+from repro.benchpark.runner import (
+    QUARANTINE_DIRNAME,
+    CacheManifest,
+    ProfileCache,
+    run_experiment,
+)
 from repro.benchpark.spec import ExperimentSpec, ScalePoint
 from repro.core.profiler import CommProfile
 
@@ -68,6 +76,85 @@ def test_stale_lock_is_broken_and_bump_proceeds(tmp_path):
     m.bump(hits=1)
     assert m.read()["hits"] == 1
     assert not os.path.exists(m._lock_path)
+
+
+_HOLDER = """\
+import sys
+import time
+
+sys.path.insert(0, {src!r})
+
+from repro.benchpark.runner import CacheManifest
+
+m = CacheManifest(sys.argv[1])
+import os
+os.makedirs(m.root, exist_ok=True)
+fd = m._acquire_lock()
+print("LOCKED", flush=True)
+time.sleep(600)  # hold the lock until SIGKILLed
+"""
+
+
+def test_sigkilled_lock_holder_is_taken_over_exactly_once(tmp_path):
+    """Regression for the wedge: a holder SIGKILLed mid-critical-section
+    leaves its ``O_EXCL`` lock behind; the next acquirer must expire it
+    after ``REPRO_MANIFEST_LOCK_TIMEOUT_S`` and proceed — with the
+    takeover counted and the subsequent accounting still exact."""
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    root = str(tmp_path / "cache")
+    holder_py = tmp_path / "holder.py"
+    holder_py.write_text(_HOLDER.format(src=src))
+    proc = subprocess.Popen(
+        [sys.executable, str(holder_py), root],
+        stdout=subprocess.PIPE,
+        text=True,
+        env=dict(os.environ, PYTHONPATH=src),
+    )
+    try:
+        assert proc.stdout.readline().strip() == "LOCKED"
+    finally:
+        proc.kill()  # SIGKILL: no release path runs
+    proc.wait(timeout=60)
+
+    m = CacheManifest(root, stale_lock_seconds=0.5)
+    assert os.path.exists(m._lock_path)  # the orphan is really there
+    t0 = time.monotonic()
+    m.bump(hits=1)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 10.0  # waited out (at most) the timeout, not wedged
+    got = m.read()
+    assert got["hits"] == 1  # the bump that broke the lock still landed
+    assert got["lock_takeovers"] == 1  # counted exactly once
+    assert not os.path.exists(m._lock_path)
+    # follow-up traffic is unaffected and does not re-count the takeover
+    m.bump(misses=1)
+    got = m.read()
+    assert got["lock_takeovers"] == 1 and got["misses"] == 1
+
+
+def test_truncated_cache_entry_is_quarantined_miss(tmp_path):
+    """Satellite: a torn/corrupt entry must read as a miss (re-trace),
+    never a crash — moved to ``quarantine/`` and counted as ``corrupt``."""
+    cache = ProfileCache(str(tmp_path / "cache"))
+    cache.put("k", _mini_profile("p"))
+    path = cache._path("k")
+    size = os.path.getsize(path)
+    with open(path, "r+") as f:
+        f.truncate(size // 2)  # hand-torn write
+    assert cache.get("k") is None
+    m = cache.manifest.read()
+    assert m["corrupt"] == 1 and m["misses"] == 1 and m["hits"] == 0
+    qdir = os.path.join(cache.root, QUARANTINE_DIRNAME)
+    assert len(os.listdir(qdir)) == 1
+    assert not os.path.exists(path)  # the poison can never be served
+    # a re-put heals the entry; the quarantined file stays aside
+    cache.put("k", _mini_profile("p"))
+    assert cache.get("k") is not None
+    m = cache.manifest.read()
+    assert m["hits"] == 1 and m["corrupt"] == 1
+    assert len(os.listdir(qdir)) == 1
 
 
 def test_cache_ops_update_manifest(tmp_path):

@@ -1,0 +1,163 @@
+"""Unit tests for the deterministic fault-injection harness."""
+
+import os
+
+import pytest
+
+from repro.core.faultinject import (
+    FAULT_SEED_ENV,
+    FAULT_SPEC_ENV,
+    FaultPlan,
+    InjectedFault,
+    active_plan,
+    fault_context,
+    fire_worker_faults,
+    install_plan,
+    maybe_fault,
+)
+
+
+def test_parse_full_grammar():
+    plan = FaultPlan.parse(
+        "worker_crash@p=0.2;shard_torn@n=3;cache_corrupt@key~kripke;"
+        "lock_stale;slow_worker@s=5;worker_crash@key~amg,hard",
+        seed=7,
+    )
+    by_site = {}
+    for r in plan.rules:
+        by_site.setdefault(r.site, []).append(r)
+    assert by_site["worker_crash"][0].p == 0.2
+    assert by_site["shard_torn"][0].n == 3
+    assert by_site["cache_corrupt"][0].key_substr == "kripke"
+    assert by_site["slow_worker"][0].seconds == 5.0
+    assert by_site["worker_crash"][1].hard
+    assert by_site["worker_crash"][1].key_substr == "amg"
+    # lock_stale with no params defaults to a one-shot budget
+    assert by_site["lock_stale"][0].n is None
+    assert plan.seed == 7
+
+
+def test_parse_rejects_unknown_site_and_param():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("worker_crsh@p=0.2")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("worker_crash@q=0.2")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("worker_crash@name~x")
+
+
+def test_no_plan_is_noop():
+    with install_plan(None):
+        assert active_plan() is None
+        assert maybe_fault("worker_crash", "anything") is None
+
+
+def test_default_budget_fires_once():
+    plan = FaultPlan.parse("cache_corrupt")
+    with install_plan(plan):
+        assert maybe_fault("cache_corrupt", "k1") is not None
+        assert maybe_fault("cache_corrupt", "k2") is None  # budget spent
+    assert len(plan.events) == 1
+
+
+def test_n_budget_counts_across_keys():
+    plan = FaultPlan.parse("shard_torn@n=2")
+    with install_plan(plan):
+        fired = [maybe_fault("shard_torn", f"k{i}") is not None for i in range(5)]
+    assert fired == [True, True, False, False, False]
+
+
+def test_probability_rules_are_deterministic():
+    def schedule(seed):
+        plan = FaultPlan.parse("worker_crash@p=0.5", seed=seed)
+        with install_plan(plan):
+            return [
+                maybe_fault("worker_crash", f"key{i}") is not None
+                for i in range(32)
+            ]
+
+    a, b = schedule(11), schedule(11)
+    assert a == b  # same seed, same call sequence -> same schedule
+    assert any(a) and not all(a)  # p=0.5 over 32 draws: both outcomes seen
+    assert schedule(12) != a  # a different seed reshuffles
+
+
+def test_retry_attempts_get_independent_draws():
+    # the same (site, key) checked twice draws at successive indices,
+    # so a retried point is not doomed to repeat its first attempt's fate
+    plan = FaultPlan.parse("worker_crash@p=0.5", seed=3)
+    with install_plan(plan):
+        draws = [maybe_fault("worker_crash", "same-key") is not None
+                 for _ in range(32)]
+    assert any(draws) and not all(draws)
+
+
+def test_key_filter_and_context_prefix():
+    plan = FaultPlan.parse("cache_corrupt@key~kripke,n=99")
+    with install_plan(plan):
+        assert maybe_fault("cache_corrupt", "amg-entry") is None
+        assert maybe_fault("cache_corrupt", "kripke-entry") is not None
+        # the thread-local context participates in the matched key
+        with fault_context("kripke-weak-00256#a0|"):
+            assert maybe_fault("cache_corrupt", "sha-of-entry") is not None
+        assert maybe_fault("cache_corrupt", "sha-of-entry") is None
+    assert plan.events[-1].key.endswith("sha-of-entry")
+
+
+def test_fault_context_nesting_restores():
+    assert fault_context() == ""
+    with fault_context("outer|"):
+        with fault_context("inner|"):
+            assert fault_context() == "outer|inner|"
+        assert fault_context() == "outer|"
+    assert fault_context() == ""
+
+
+def test_env_plan_resolution(monkeypatch):
+    monkeypatch.setenv(FAULT_SPEC_ENV, "lock_stale@n=5")
+    monkeypatch.setenv(FAULT_SEED_ENV, "9")
+    install_plan.clear()
+    plan = active_plan()
+    assert plan is not None and plan.seed == 9
+    assert active_plan() is plan  # memoized per (spec, seed)
+    # an installed plan shadows the env one
+    other = FaultPlan.parse("lock_stale@n=1")
+    with install_plan(other):
+        assert active_plan() is other
+    # install_plan(None) masks the env plan entirely for the scope
+    with install_plan(None):
+        assert active_plan() is None
+    assert os.environ[FAULT_SPEC_ENV] == "lock_stale@n=5"  # restored
+
+
+def test_fire_worker_faults_soft_crash():
+    plan = FaultPlan.parse("worker_crash")
+    with install_plan(plan):
+        with pytest.raises(InjectedFault) as ei:
+            fire_worker_faults("pt-x")
+    assert ei.value.site == "worker_crash"
+
+
+def test_hard_crash_needs_crash_safe_site():
+    # a hard rule at a non-crash-safe site degrades to the exception form
+    # (os._exit in-process would take the test runner down)
+    plan = FaultPlan.parse("worker_crash@hard")
+    with install_plan(plan):
+        with pytest.raises(InjectedFault):
+            fire_worker_faults("pt-x", crash_safe=False)
+
+
+def test_slow_worker_sleeps(monkeypatch):
+    naps = []
+    monkeypatch.setattr("time.sleep", lambda s: naps.append(s))
+    plan = FaultPlan.parse("slow_worker@s=2.5")
+    with install_plan(plan):
+        fire_worker_faults("pt-x")
+    assert naps == [2.5]
+
+
+def test_spec_round_trip():
+    spec = "worker_crash@p=0.25;cache_corrupt@key~kripke,n=2;slow_worker@s=1.5"
+    plan = FaultPlan.parse(spec, seed=4)
+    again = FaultPlan.parse(plan.spec, seed=4)
+    assert [r.spec() for r in again.rules] == [r.spec() for r in plan.rules]

@@ -263,6 +263,55 @@ def test_aggregator_shard_publish_from_spilled_buffer(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Spill-disk failure: degrade to RAM, never lose a row
+# ---------------------------------------------------------------------------
+
+
+def test_spill_disk_failure_degrades_to_ram_bit_identical():
+    """A failing spill allocation (ENOSPC, vanished tmpdir — injected via
+    the ``spill_torn`` chaos site) falls back to RAM growth: the trace
+    survives bit-identical, and after ``MAX_FAILURES`` strikes the pool
+    stops re-probing the dead disk entirely."""
+    from repro.core.faultinject import FaultPlan, install_plan
+    from repro.core.regions import _SpillPool
+
+    buf = TraceBuffer(spill_bytes=SPILL)
+    with install_plan(FaultPlan.parse("spill_torn@n=999", seed=1)):
+        _append_varied(buf, 3000)
+    # every allocation failed: nothing spilled, every row still in RAM
+    assert buf.spilled_nbytes() == 0
+    assert not any(c.spilled for c in buf._row_columns())
+    assert buf._spill._failures >= _SpillPool.MAX_FAILURES
+    assert not buf._spill.should_spill(buf._row_columns()[0], 1 << 30)
+    plain = TraceBuffer()
+    _append_varied(plain, 3000)
+    assert buf.n_rows == plain.n_rows
+    assert _json(buf) == _json(plain)
+    # the pool self-disabled: growth outside the fault scope stays in RAM
+    # without raising (the dead disk is not re-probed per growth)
+    _append_varied(buf, 1000, base=50_000)
+    _append_varied(plain, 1000, base=50_000)
+    assert buf.spilled_nbytes() == 0
+    assert _json(buf) == _json(plain)
+
+
+def test_spill_failures_below_threshold_keep_pool_alive():
+    """Fewer than ``MAX_FAILURES`` strikes: the affected growth lands in
+    RAM but later allocations spill normally (transient blip, not a dead
+    disk)."""
+    from repro.core.faultinject import FaultPlan, install_plan
+
+    buf = TraceBuffer(spill_bytes=SPILL)
+    with install_plan(FaultPlan.parse("spill_torn@n=1", seed=1)):
+        _append_varied(buf, 3000)
+    assert buf._spill._failures == 1
+    assert buf.spilled_nbytes() > 0  # later growths spilled fine
+    plain = TraceBuffer()
+    _append_varied(plain, 3000)
+    assert _json(buf) == _json(plain)
+
+
+# ---------------------------------------------------------------------------
 # memory_bytes() regression: reported ~= actually allocated
 # ---------------------------------------------------------------------------
 
